@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only alpha,convergence,...]
+
+Prints each figure's data and a final ``name,us_per_call,derived`` CSV.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmarks")
+    args = ap.parse_args()
+
+    from benchmarks import (alpha, colocation, convergence, grad_vs_model,
+                            kernels_bench, speedup)
+    all_benches = {
+        "alpha": alpha.run,               # Figs 2/3
+        "convergence": convergence.run,   # Fig 4
+        "grad_vs_model": grad_vs_model.run,  # Fig 5
+        "colocation": colocation.run,     # Figs 6/7
+        "speedup": speedup.run,           # Thm 1 / Cor 2 trends
+        "kernels": kernels_bench.run,     # ours
+    }
+    names = list(all_benches) if not args.only else args.only.split(",")
+    csv_rows = []
+    failed = []
+    for name in names:
+        print(f"\n===== {name} =====")
+        try:
+            all_benches[name](csv_rows)
+        except Exception as e:
+            traceback.print_exc()
+            failed.append(name)
+    print("\n===== CSV =====")
+    print("name,us_per_call,derived")
+    for row in csv_rows:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")
+    if failed:
+        print("FAILED:", failed)
+        sys.exit(1)
+    print(f"\nall {len(names)} benchmarks passed")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: train a tiny LM with RPS over 16 simulated unreliable workers.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Shows the paper's three headline behaviours in ~a minute on CPU:
+  1. RPS at a 10% packet-drop rate matches the reliable baseline.
+  2. Naive gradient averaging at the same drop rate does worse.
+  3. The closed-form α₂ bound predicts the (tiny) consensus error.
+"""
+import sys
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import theory
+from repro.data.synthetic import TeacherTask, make_worker_streams
+from repro.train.simulator import SimulatorConfig, run_simulation
+
+N_WORKERS, STEPS, DROP = 16, 150, 0.1
+
+
+def main():
+    task = TeacherTask(d_in=24, n_classes=8, hetero=0.3, seed=0)
+
+    def init_fn(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (24, 48)) * 0.1,
+                "w2": jax.random.normal(k2, (48, 8)) * 0.1}
+
+    def loss_fn(p, batch):
+        x, y = batch
+        h = jnp.tanh(x @ p["w1"])
+        logits = h @ p["w2"]
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, y[:, None], -1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    batch_fn = make_worker_streams(task, N_WORKERS, 32)
+    print("task: heterogeneous teacher-student classification, n=16 workers")
+    print(f"theory: alpha2 bound at (n={N_WORKERS}, p={DROP}) = "
+          f"{theory.alpha2_bound(N_WORKERS, DROP):.4f} (O(p(1-p)/n))\n")
+
+    results = {}
+    for name, agg, p in [("reliable baseline", "allreduce_model", 0.0),
+                         ("RPS, 10% drops", "rps_model", DROP),
+                         ("grad-avg, 10% drops", "rps_grad", DROP)]:
+        h = run_simulation(loss_fn, init_fn, batch_fn,
+                           SimulatorConfig(n_workers=N_WORKERS, drop_rate=p,
+                                           aggregator=agg, lr=0.2, warmup=10,
+                                           steps=STEPS, eval_every=STEPS - 1))
+        results[name] = h
+        print(f"{name:22s} final_loss={h['final_loss']:.4f} "
+              f"consensus={h['consensus'][-1]:.2e}")
+
+    assert results["RPS, 10% drops"]["final_loss"] < \
+        results["reliable baseline"]["final_loss"] * 1.15 + 0.02
+    print("\nRPS under 10% drops ≈ reliable baseline — the paper's claim.")
+
+
+if __name__ == "__main__":
+    main()

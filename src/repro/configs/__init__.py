@@ -1,0 +1,30 @@
+"""Architecture config registry: ``get_config("<arch-id>")``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES  # noqa: F401
+
+_MODULES = {
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1b6",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "llama3-405b": "repro.configs.llama3_405b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "rps-paper-mlp": "repro.configs.rps_paper",
+}
+
+ARCH_IDS = [k for k in _MODULES if k != "rps-paper-mlp"]
+
+
+def get_config(name: str) -> ArchConfig:
+    if name.endswith("-reduced"):
+        return get_config(name[: -len("-reduced")]).reduced()
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG

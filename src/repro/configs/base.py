@@ -1,0 +1,180 @@
+"""Config system: architecture + input-shape + parallelism configs.
+
+Every assigned architecture gets a module ``repro/configs/<id>.py`` exporting
+``CONFIG`` (the exact paper/model-card dims) built on :class:`ArchConfig`.
+``ArchConfig.reduced()`` produces the CPU-smoke-test variant (2 layers,
+d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned; fixed across all architectures)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """Architecture hyper-parameters.
+
+    ``family`` selects the model implementation:
+      - "dense":   decoder-only transformer (GQA, RoPE, optional SWA /
+                   local:global pattern, optional MoE)
+      - "ssm":     RWKV6 (attention-free linear recurrence)
+      - "hybrid":  RG-LRU recurrence + local attention (RecurrentGemma)
+      - "audio":   Whisper-style encoder-decoder (stub conv frontend)
+      - "vlm":     LLaVA-style decoder consuming stub patch embeddings
+    """
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None            # default d_model // n_heads
+    # Attention windowing. window=None => full attention everywhere.
+    window: Optional[int] = None              # sliding-window size
+    # local:global pattern — every `global_every`-th layer is full attention
+    # (gemma3: 5 local then 1 global => global_every=6). None => uniform.
+    global_every: Optional[int] = None
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # hybrid (RecurrentGemma): repeating unit, e.g. ("rec", "rec", "attn")
+    block_pattern: Optional[Tuple[str, ...]] = None
+    # rwkv6 / rglru recurrence width
+    d_state: Optional[int] = None
+    # audio/vlm frontend stubs
+    n_patches: int = 0                        # vlm: image tokens per example
+    enc_layers: int = 0                       # audio: encoder layers
+    enc_frames_ratio: int = 2                 # audio: src_len = seq // ratio
+    max_seq: int = 131_072
+    rope_theta: float = 10_000.0
+    dtype: str = "bfloat16"
+    # activation sharding constraints (set by the mesh trainer/dry-run;
+    # spmd_axis_name only augments *existing* constraints, so the model
+    # must emit them for the worker dim to shard)
+    shard_acts: bool = False
+    act_batch_axis: Optional[str] = None      # per-worker batch dim axis
+    # RPS integration mode (see DESIGN.md §5)
+    rps_mode: str = "rps_model"               # "rps_model" | "rps_grad"
+    # parallelism: param sharding strategy
+    shard_strategy: str = "tp"                # "tp" | "fsdp"
+    citation: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the embedding/head shard
+        over the 16-way model axis (Megatron-style vocab padding); the lm
+        head masks the padding."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: same family/topology, tiny dims."""
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.n_heads, 4)
+        n_kv = max(1, min(self.n_kv_heads, n_heads))
+        while n_heads % n_kv:
+            n_kv -= 1
+        pattern = self.block_pattern
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=2 if pattern is None else max(2, len(pattern)),
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=64,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 512),
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            d_state=min(self.d_state, 64) if self.d_state else None,
+            window=min(self.window, 64) if self.window else None,
+            global_every=self.global_every,
+            n_patches=min(self.n_patches, 16) if self.n_patches else 0,
+            enc_layers=2 if self.enc_layers else 0,
+            max_seq=4096,
+            dtype="float32",       # smoke tests check numerics on CPU
+        )
+
+    # -- parameter counting (for roofline MODEL_FLOPS = 6·N·D) --------------
+    def param_count(self, active_only: bool = False) -> int:
+        d, h, kv, hd, ff = self.d_model, self.n_heads, self.n_kv_heads, self.hd, self.d_ff
+        attn = d * h * hd + 2 * d * kv * hd + h * hd * d      # q, k+v, o
+        if self.is_moe:
+            experts = self.top_k if active_only else self.n_experts
+            mlp = experts * 3 * d * ff + d * self.n_experts   # gate included
+        else:
+            mlp = 3 * d * ff                                  # gated MLP
+        rec = 0
+        per_layer_attn = attn
+        if self.family == "ssm":                              # rwkv6
+            per_layer_attn = 0
+            rec = 6 * d * d + 2 * d                           # r,k,v,g,o,decay
+            mlp = 2 * d * ff                                  # channel mix
+        layers = self.n_layers
+        body = 0
+        if self.family == "hybrid" and self.block_pattern:
+            n_rec = sum(1 for _ in range(layers)
+                        if self.block_pattern[_ % len(self.block_pattern)] == "rec")
+            n_att = layers - n_rec
+            rec_params = 3 * d * (self.d_state or d) + 2 * (self.d_state or d)
+            body = n_att * (attn + mlp) + n_rec * (rec_params + mlp)
+        else:
+            body = layers * (per_layer_attn + rec + mlp)
+        if self.family == "audio":
+            body += self.enc_layers * (attn + mlp) + self.n_layers * attn  # cross-attn
+        emb = self.vocab_size * d
+        return body + 2 * emb + layers * 2 * d                # tied-ish emb in+out
+
+    def model_flops(self, tokens: int) -> float:
+        """6·N·D (dense) or 6·N_active·D (MoE)."""
+        return 6.0 * self.param_count(active_only=True) * tokens
+
+    def supports_long_context(self) -> bool:
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.window is not None   # SWA / local:global dense archs
+
+    def has_decode(self) -> bool:
+        return True  # all assigned archs are (or contain) decoders
+
+    def runs_shape(self, shape: "ShapeConfig | str") -> bool:
+        shape = SHAPES[shape] if isinstance(shape, str) else shape
+        if shape.name == "long_500k":
+            return self.supports_long_context()
+        return True

@@ -1,0 +1,25 @@
+"""Kimi K2 1T-A32B [arXiv:2501.kimi2] — trillion-param MoE, 384 experts top-8.
+
+1T total params: expert weights are sharded over (data x model) — no
+data-parallel model replica exists, so paper-faithful model averaging is
+inapplicable to expert shards; RPS runs in RS-drop gradient mode
+(DESIGN.md §5).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b",
+    family="dense",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2048,                       # per-expert FFN width
+    vocab_size=163840,
+    n_experts=384,
+    top_k=8,
+    window=None,
+    rps_mode="rps_grad",
+    shard_strategy="fsdp",
+    citation="arXiv:2501.kimi2",
+)

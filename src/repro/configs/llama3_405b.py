@@ -1,0 +1,22 @@
+"""Llama-3 405B [arXiv:2407.21783] — dense, GQA kv=8, 128k vocab, full attn.
+
+810 GB of bf16 params exceed 16-way-TP capacity on v5e -> FSDP sharding over
+the data axis; RPS runs in RS-drop gradient mode (DESIGN.md §5).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    d_ff=53248,
+    vocab_size=128256,
+    window=None,                     # full attention -> long_500k skipped
+    rope_theta=500_000.0,
+    rps_mode="rps_grad",
+    shard_strategy="fsdp",
+    citation="arXiv:2407.21783",
+)

@@ -1,0 +1,21 @@
+"""LLaVA-NeXT (Mistral-7B backbone) [hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+Transformer backbone only — the ViT/SigLIP encoder + projector is a STUB:
+``input_specs`` provides precomputed patch embeddings (anyres tiling gives
+up to 576 base patches; we budget 576 image tokens).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    window=4096,                     # Mistral sliding-window attention
+    n_patches=576,
+    citation="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

@@ -1,0 +1,21 @@
+"""The paper's own experimental scale: a small model for convergence studies.
+
+The paper trains ResNet20/110 on CIFAR-10 and a 1-layer LSTM on ATIS with 16
+workers. Neither dataset ships offline; the convergence benchmarks use this
+small dense decoder on a synthetic char-LM / teacher-student task at the same
+worker count (n=16) and the same drop-rate grid (DESIGN.md §8).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rps-paper-mlp",
+    family="dense",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=512,
+    vocab_size=256,
+    max_seq=512,
+    citation="Tang et al. 2019 (ICML) section 6",
+)

@@ -1,0 +1,23 @@
+"""Whisper-large-v3 [arXiv:2212.04356] — enc-dec; conv/mel frontend is a STUB.
+
+``input_specs`` supplies precomputed frame embeddings (src_len = seq//2,
+matching the conv stride-2 downsampling). decode_32k exercises the decoder
+KV-cache machinery beyond Whisper's 448-token training context (stress
+shape, noted in DESIGN.md); long_500k skipped (full-attention decoder).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,                     # decoder layers
+    enc_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    enc_frames_ratio=2,
+    window=None,
+    citation="arXiv:2212.04356",
+)

@@ -1,0 +1,7 @@
+"""The paper's primary contribution: RPS — distributed learning over
+unreliable networks (drop-tolerant Reduce-Scatter/All-Gather aggregation),
+its global-view W-matrix oracle, and the alpha1/alpha2 convergence theory."""
+from repro.core.rps import (  # noqa: F401
+    reliable_average, rps_exchange, rps_exchange_flat, rps_exchange_global,
+    rps_exchange_leaf, sample_masks)
+from repro.core import theory, wmatrix  # noqa: F401

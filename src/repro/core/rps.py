@@ -1,0 +1,268 @@
+"""RPS with real collectives.
+
+The paper's RS+AG decomposition *is* the reduce-scatter/all-gather all-reduce
+schedule, so the collective implementation maps Algorithm 1 onto
+``lax.psum_scatter`` + ``lax.all_gather`` over the unreliable (data-parallel
+/ cross-pod) mesh axes, with Bernoulli drop masks:
+
+  - RS-drop:  worker i's block j is zeroed out of the psum_scatter addend
+              when the (i → owner j) packet drops. The owner renormalises by
+              the *received* count — computable locally because the per-step
+              PRNG key is shared, so every device knows the global mask.
+  - AG-drop:  after all_gather, receiver i replaces block j by its own local
+              pre-average block when the broadcast to i drops (model mode) —
+              a dropped model block is still a valid model block.
+
+Gradient mode (the paper's Fig-5 baseline) instead sums received gradient
+contributions **without renormalising** (a missing packet is simply absent
+from the sum, as in stock gradient-averaging systems) and applies **no
+update** for AG-dropped blocks — the two asymmetries that make gradient
+averaging fragile under loss.
+
+Everything here runs *inside* an existing shard_map/pjit context; the owner
+of block j is the j-th device on the RPS axes (the paper's random owner
+assignment is symmetric across blocks — validated against the permuted
+W-matrix oracle in tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.flatten_util import ravel_pytree
+
+AxisNames = Union[str, Tuple[str, ...]]
+
+
+def _axis_tuple(axis_name: AxisNames) -> Tuple[str, ...]:
+    return (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+
+
+def axis_size(axis_name: AxisNames) -> int:
+    names = _axis_tuple(axis_name)
+    n = 1
+    for a in names:
+        n *= lax.axis_size(a)
+    return n
+
+
+def _my_index(axis_name: AxisNames) -> jax.Array:
+    names = _axis_tuple(axis_name)
+    idx = lax.axis_index(names[0])
+    for a in names[1:]:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def sample_masks(key: jax.Array, n: int, p: float):
+    """(rs, ag) boolean (n, n) masks, diagonal forced True.
+
+    rs[i, j]: worker i's block-j packet reaches the owner (device j).
+    ag[i, j]: the broadcast of block j reaches worker i.
+    Computed identically on every device from the shared per-step key.
+    """
+    k1, k2 = jax.random.split(key)
+    rs = jax.random.bernoulli(k1, 1.0 - p, (n, n))
+    ag = jax.random.bernoulli(k2, 1.0 - p, (n, n))
+    eye = jnp.eye(n, dtype=bool)
+    return rs | eye, ag | eye
+
+
+def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
+                      axis_name: AxisNames, *, mode: str = "model",
+                      masks=None, rs_dtype=jnp.float32):
+    """One RPS round on a flat per-device vector v: (D,) -> (D,).
+
+    mode:
+      "model"      — Algorithm 1 (renormalised average; AG-drop keeps the
+                     local block).
+      "grad"       — naive gradient averaging (sum/n, AG-drop → zero update).
+      "grad_renorm"— RS-drop-tolerant gradient aggregation (renormalised;
+                     AG-drop falls back to the local gradient). This is the
+                     mode used for FSDP-sharded archs (DESIGN.md §5).
+    Returns the exchanged vector (for "grad" modes: the per-block gradient
+    each worker should apply).
+    """
+    names = _axis_tuple(axis_name)
+    n = axis_size(axis_name)
+    i = _my_index(axis_name)
+    D = v.shape[0]
+    pad = (-D) % n
+    vp = jnp.pad(v, (0, pad)) if pad else v
+    blk = (D + pad) // n
+    blocks = vp.reshape(n, blk)
+
+    rs, ag = sample_masks(key, n, p) if masks is None else masks
+    rs_f = rs.astype(rs_dtype)
+
+    # ---- Reduce-Scatter with send-side drops --------------------------
+    # rs_dtype=f32 (default): renormalised-mean precision / the paper-
+    # faithful setting; bf16 halves the RS wire bytes (hillclimb knob).
+    masked = blocks.astype(rs_dtype) * rs_f[i][:, None]
+    sums = masked
+    for a in names:     # scatter over the flattened axes, major to minor
+        sums = lax.psum_scatter(sums, a, scatter_dimension=0, tiled=True)
+    sums = sums.reshape(blk)   # device j holds Σ_i rs[i, j]·v_i^(j)
+    counts = jnp.sum(rs_f.astype(jnp.float32), axis=0)   # (n,) known locally
+    my_count = counts[i].astype(rs_dtype)
+
+    if mode == "model" or mode == "grad_renorm":
+        tilde = sums / jnp.maximum(my_count, 1.0)
+    elif mode == "grad":
+        tilde = sums / float(n)                       # no renormalisation
+    else:
+        raise ValueError(mode)
+
+    # ---- All-Gather with receive-side drops ------------------------------
+    gathered = tilde.astype(blocks.dtype)
+    for a in reversed(names):
+        gathered = lax.all_gather(gathered, a, axis=0, tiled=True)
+    gathered = gathered.reshape(n, blk)
+    recv = ag[i][:, None]
+    if mode == "model" or mode == "grad_renorm":
+        out = jnp.where(recv, gathered, blocks)       # keep local block
+    else:                                             # "grad": no update
+        out = jnp.where(recv, gathered, jnp.zeros_like(blocks))
+    out = out.reshape(-1)
+    return out[:D] if pad else out
+
+
+def rps_exchange(tree: Any, key: jax.Array, p: float,
+                 axis_name: AxisNames, *, mode: str = "model") -> Any:
+    """Pytree wrapper around :func:`rps_exchange_flat`."""
+    flat, unravel = ravel_pytree(tree)
+    return unravel(rps_exchange_flat(flat, key, p, axis_name, mode=mode))
+
+
+def _blockify(x: jax.Array, n: int, model_dim: Optional[int]):
+    """Reshape a (worker-local) leaf to (n, blk, m) where m collects the
+    model-sharded dim (kept intact — reshaping it would force an XLA
+    resharding gather) and the remaining dims are flattened and padded to a
+    multiple of n. Returns (blocks, restore_fn)."""
+    shape = x.shape
+    if model_dim is None:
+        flat = x.reshape(-1, 1)
+    else:
+        flat = jnp.moveaxis(x, model_dim, -1)
+        flat = flat.reshape(-1, shape[model_dim])
+    free, m = flat.shape
+    pad = (-free) % n
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    blocks = flat.reshape(n, (free + pad) // n, m)
+
+    def restore(b):
+        f = b.reshape(free + pad, m)[:free]
+        if model_dim is None:
+            return f.reshape(shape)
+        inter = f.reshape(tuple(s for i, s in enumerate(shape)
+                                if i != model_dim) + (shape[model_dim],))
+        return jnp.moveaxis(inter, -1, model_dim)
+
+    return blocks, restore
+
+
+def rps_exchange_leaf(x: jax.Array, rs: jax.Array, ag: jax.Array,
+                      axis_name: AxisNames, *, mode: str,
+                      model_dim: Optional[int] = None) -> jax.Array:
+    """Per-leaf RS+AG exchange inside a partial-manual shard_map region.
+
+    `model_dim` marks a dim that stays auto-sharded (tensor-parallel): it is
+    kept intact so no cross-model-axis resharding is triggered. Masks are the
+    shared (n, n) rs/ag from :func:`sample_masks` — reusing the same column j
+    for the j-th block of *every* leaf is exactly the paper's partition where
+    block j is the union of all leaves' j-th blocks.
+    """
+    from jax.sharding import PartitionSpec as _P
+    names = _axis_tuple(axis_name)
+    n = axis_size(axis_name)
+    i = _my_index(axis_name)
+    blocks, restore = _blockify(x, n, model_dim)
+
+    def pin(v):
+        # keep the trailing model dim sharded on the auto axes — inside the
+        # partial-manual region shardy otherwise de-shards it, materialising
+        # full-width f32 blocks (observed: 6.4 GB/leaf on mixtral)
+        if model_dim is None:
+            return v
+        return jax.lax.with_sharding_constraint(
+            v, _P(*([None] * (v.ndim - 1) + ["model"])))
+
+    blocks = pin(blocks)
+    rs_f = rs.astype(jnp.float32)
+    # Reduce-Scatter accumulates in f32: the renormalised mean should not
+    # round per-addend (also works around an XLA-CPU AllReducePromotion
+    # crash on sub-32-bit reduce-scatter under partial-manual shard_map).
+    masked = pin(blocks.astype(jnp.float32) * rs_f[i][:, None, None])
+    sums = masked
+    for a in names:
+        sums = pin(lax.psum_scatter(sums, a, scatter_dimension=0, tiled=True))
+    sums = pin(sums.reshape(blocks.shape[1:]))
+    counts = jnp.sum(rs_f, axis=0)
+    if mode in ("model", "grad_renorm"):
+        tilde = sums / jnp.maximum(counts[i], 1.0)
+    elif mode == "grad":
+        tilde = sums / float(n)
+    else:
+        raise ValueError(mode)
+    gathered = pin(tilde.astype(blocks.dtype)[None])  # AG moves model dtype
+    for a in reversed(names):
+        gathered = pin(lax.all_gather(gathered, a, axis=0, tiled=True))
+    recv = ag[i][:, None, None]
+    if mode in ("model", "grad_renorm"):
+        out = jnp.where(recv, gathered, blocks)
+    else:
+        out = jnp.where(recv, gathered, jnp.zeros_like(blocks))
+    return restore(pin(out))
+
+
+def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
+                        mode: str = "model") -> Any:
+    """Global-view exchange on *stacked* worker trees (leading dim n).
+
+    Mathematically identical to the collective path (same masks, same block
+    partition), expressed as jnp ops — runs on one device; used by the
+    n-worker simulation harness and as the cross-check in tests.
+    """
+    rs, ag = sample_masks(key, n, p)
+    rs_f = rs.astype(jnp.float32)
+    counts = jnp.maximum(rs_f.sum(0), 1.0)                  # (n,)
+
+    def leaf(x):
+        shape = x.shape[1:]
+        flat = x.reshape(n, -1)
+        D = flat.shape[1]
+        pad = (-D) % n
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        blocks = flat.reshape(n, n, -1)                     # (worker, block, blk)
+        f32 = blocks.astype(jnp.float32)
+        sums = jnp.einsum("ij,ijd->jd", rs_f, f32)
+        if mode in ("model", "grad_renorm"):
+            tilde = sums / counts[:, None]
+        elif mode == "grad":
+            tilde = sums / float(n)
+        else:
+            raise ValueError(mode)
+        fallback = f32 if mode in ("model", "grad_renorm") else jnp.zeros_like(f32)
+        out = jnp.where(ag[:, :, None], tilde[None], fallback)
+        out = out.reshape(n, D + pad)[:, :D].astype(x.dtype)
+        return out.reshape((n,) + shape)
+
+    return jax.tree.map(leaf, tree)
+
+
+def reliable_average(tree: Any, axis_name: AxisNames) -> Any:
+    """Baseline: exact mean over the axes (reliable network)."""
+    n = axis_size(axis_name)
+    names = _axis_tuple(axis_name)
+
+    def avg(x):
+        for a in names:
+            x = lax.psum(x, a)
+        return x / n
+
+    return jax.tree.map(avg, tree)

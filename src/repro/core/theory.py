@@ -1,0 +1,85 @@
+"""Closed-form α₁/α₂ bounds (Lemmas 7 & 8) and the Corollary-2 rate.
+
+All formulas are verbatim from the paper's supplement:
+
+  T1 = 2(1 − p^{n+1} − (n+1)(1−p)p^n − (n+1)n(1−p)²p^{n−1}/2 − (1−p)^{n+1})
+       / (n(n+1)(1−p)²)
+  T2 = (1 − p^n − n(1−p)p^{n−1} − (1−p)^n) / ((n−1)(1−p))
+  T3 = n/(n−1)·(1 − p^{n−1} − (1−p)^{n−1}) + (1−p)^{n−1}
+
+  α₁ ≤ (np + (1−p)^n + nT1 + nT2 − 1) / (n−1)
+  α₂ ≤ (p(1+2T3) + (1−p)^{n−1})/n + 2p(1−p)^n/n + p^n(1−p)/n² + T1 + T2
+
+Asymptotics the paper highlights: α₁ = O(p), α₂ = O(p(1−p)/n); the drop
+rate's influence diminishes as n grows (Fig 2/3, discussion after Cor. 2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def t1(n: int, p: float) -> float:
+    if p == 1.0:
+        return 0.0
+    num = 2.0 * (1.0 - p ** (n + 1) - (n + 1) * (1 - p) * p ** n
+                 - (n + 1) * n * (1 - p) ** 2 * p ** (n - 1) / 2.0
+                 - (1 - p) ** (n + 1))
+    return num / (n * (n + 1) * (1 - p) ** 2)
+
+
+def t2(n: int, p: float) -> float:
+    if p == 1.0:
+        return 0.0
+    num = 1.0 - p ** n - n * (1 - p) * p ** (n - 1) - (1 - p) ** n
+    return num / ((n - 1) * (1 - p))
+
+
+def t3(n: int, p: float) -> float:
+    return (n / (n - 1.0)) * (1.0 - p ** (n - 1) - (1 - p) ** (n - 1)) \
+        + (1 - p) ** (n - 1)
+
+
+def alpha1_bound(n: int, p: float) -> float:
+    """Lemma 7 upper bound on α₁ (clipped into [0, 1])."""
+    a = (n * p + (1 - p) ** n + n * t1(n, p) + n * t2(n, p) - 1.0) / (n - 1.0)
+    return float(np.clip(a, 0.0, 1.0))
+
+
+def alpha2_bound(n: int, p: float) -> float:
+    """Lemma 8 upper bound on α₂ (clipped into [0, 1])."""
+    a = ((p * (1.0 + 2.0 * t3(n, p)) + (1 - p) ** (n - 1)) / n
+         + 2.0 * p * (1 - p) ** n / n
+         + p ** n * (1 - p) / n ** 2
+         + t1(n, p) + t2(n, p))
+    return float(np.clip(a, 0.0, 1.0))
+
+
+def beta(n: int, p: float) -> float:
+    """β = α₁ − α₂ (Theorem 1)."""
+    return max(alpha1_bound(n, p) - alpha2_bound(n, p), 0.0)
+
+
+def corollary2_lr(n: int, p: float, T: int, L: float = 1.0,
+                  sigma: float = 1.0, zeta: float = 0.0) -> float:
+    """The learning rate Corollary 2 prescribes."""
+    b = beta(n, p)
+    a2 = alpha2_bound(n, p)
+    return (1.0 - np.sqrt(b)) / (
+        6.0 * L + 3.0 * (sigma + zeta) * np.sqrt(a2 * T)
+        + sigma * np.sqrt(T) / np.sqrt(n))
+
+
+def corollary2_rate(n: int, p: float, T: int, sigma: float = 1.0,
+                    zeta: float = 0.0) -> float:
+    """Leading terms of the Corollary-2 convergence bound (up to constants):
+
+      (σ+ζ)(1+√(nα₂)) / ((1−√β)√(nT)) + 1/T
+      + n(σ²+ζ²)/((1+nα₂)σ²T + nα₂Tζ²)
+    """
+    b = beta(n, p)
+    a2 = alpha2_bound(n, p)
+    lead = (sigma + zeta) * (1.0 + np.sqrt(n * a2)) / (
+        (1.0 - np.sqrt(b)) * np.sqrt(n * T))
+    tail = n * (sigma ** 2 + zeta ** 2) / (
+        (1.0 + n * a2) * sigma ** 2 * T + n * a2 * T * zeta ** 2 + 1e-12)
+    return float(lead + 1.0 / T + tail)

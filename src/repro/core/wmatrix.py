@@ -1,0 +1,96 @@
+"""Global-view reference implementation of RPS (Algorithm 1).
+
+At step t the j-th block of every worker's next model is a linear
+combination of all workers' intermediate blocks: ``X_{t+1}^(j) = V_t^(j) ·
+W_t^(j)`` (paper eq. 4). This module samples the drop events exactly as the
+paper describes — per-(sender, block) drops in Reduce-Scatter, per-(receiver,
+block) drops in All-Gather, owner chosen by a uniform permutation — and
+materialises the W matrices. It is the oracle for the collective
+implementation and the Monte-Carlo estimator behind the α₁/α₂ validation
+(Figs 2/3).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def sample_masks(rng: np.random.Generator, n: int, p: float,
+                 permute_owners: bool = True):
+    """Returns (owners, rs_mask, ag_mask).
+
+    owners[j]  — worker assigned to average block j (permutation).
+    rs_mask[i, j] — 1 if worker i's block j arrives at owners[j]
+                    (owner's own entry always 1: it never leaves the device).
+    ag_mask[i, j] — 1 if worker i receives the broadcast of block j
+                    (again 1 at i == owners[j]).
+    """
+    owners = (rng.permutation(n) if permute_owners
+              else np.arange(n)).astype(np.int64)
+    rs = (rng.random((n, n)) >= p)
+    ag = (rng.random((n, n)) >= p)
+    rs[owners, np.arange(n)] = True
+    ag[owners, np.arange(n)] = True
+    return owners, rs, ag
+
+
+def build_w(n: int, owners, rs_mask, ag_mask) -> np.ndarray:
+    """(n_blocks=n, n, n) stack of W^(j); column k = coefficients of worker
+    k's next block in terms of all workers' intermediate blocks."""
+    W = np.zeros((n, n, n))
+    for j in range(n):
+        s = rs_mask[:, j].astype(np.float64)
+        avg_col = s / s.sum()
+        for k in range(n):
+            if ag_mask[k, j]:
+                W[j, :, k] = avg_col
+            else:
+                W[j, k, k] = 1.0
+    return W
+
+
+def rps_round(V: np.ndarray, rng: np.random.Generator, p: float,
+              permute_owners: bool = True,
+              return_w: bool = False):
+    """One RPS averaging round on stacked models V: (n, D) -> (n, D).
+
+    D must be divisible by n (pad upstream). Blocks are contiguous D//n
+    slices, block j averaged by ``owners[j]``.
+    """
+    n, D = V.shape
+    assert D % n == 0, "pad model to a multiple of n"
+    blk = D // n
+    owners, rs, ag = sample_masks(rng, n, p, permute_owners)
+    W = build_w(n, owners, rs, ag)
+    Xn = np.empty_like(V)
+    for j in range(n):
+        Vj = V[:, j * blk:(j + 1) * blk]                  # (n, blk)
+        Xn[:, j * blk:(j + 1) * blk] = W[j].T @ Vj
+    if return_w:
+        return Xn, W
+    return Xn
+
+
+def monte_carlo_alphas(n: int, p: float, trials: int = 2000,
+                       seed: int = 0) -> Tuple[float, float]:
+    """Estimate α₁ (from E[WWᵀ]) and α₂ (from E[W Aₙ Wᵀ]).
+
+    The paper shows E[WWᵀ] = α₁I + (1−α₁)Aₙ and E[W Aₙ Wᵀ] = α₂I + (1−α₂)Aₙ;
+    we recover α = (n·m̄_diag − 1)/(n − 1) with m̄_diag the mean diagonal of
+    the estimated matrix.
+    """
+    rng = np.random.default_rng(seed)
+    A = np.full((n, n), 1.0 / n)
+    M1 = np.zeros((n, n))
+    M2 = np.zeros((n, n))
+    for _ in range(trials):
+        owners, rs, ag = sample_masks(rng, n, p)
+        W = build_w(n, owners, rs, ag)[0]                  # blocks iid: use j=0
+        M1 += W @ W.T
+        M2 += W @ A @ W.T
+    M1 /= trials
+    M2 /= trials
+    a1 = (n * np.trace(M1) / n - 1.0) / (n - 1.0)
+    a2 = (n * np.trace(M2) / n - 1.0) / (n - 1.0)
+    return float(a1), float(a2)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (  # noqa: F401
+    CharLMTask, TeacherTask, char_lm_stream, make_worker_streams)

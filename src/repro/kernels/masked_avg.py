@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused drop-masked renormalised block average.
+
+This is the RPS Reduce-Scatter hot loop (Algorithm 1 line 6): after the
+masked contributions for one model block land on the owner, the owner
+computes ``sum_i m_i · v_i / sum_i m_i``. Fusing mask-multiply, reduce and
+renormalise keeps the traffic at one read of the (n, d) stack + one write of
+(d,) — the op is memory-bound, so the fusion is the whole win.
+
+Tiling: grid over the model-block dimension d; each step loads an
+(n, TILE_D) tile of worker contributions into VMEM (n = #workers on the
+unreliable axis, ≤ 64, so the tile is n·TILE_D·4B ≤ 64·512·4 = 128 KiB — well
+inside VMEM), reduces over n on the VPU, and writes a (TILE_D,) tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_D = 512
+
+
+def _masked_avg_kernel(blocks_ref, mask_ref, out_ref):
+    blocks = blocks_ref[...].astype(jnp.float32)       # (n, TILE_D)
+    mask = mask_ref[...].astype(jnp.float32)           # (n, 1)
+    s = jnp.sum(blocks * mask, axis=0)                 # (TILE_D,)
+    c = jnp.maximum(jnp.sum(mask), 1.0)
+    out_ref[...] = (s / c).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def masked_avg_pallas(blocks: jax.Array, mask: jax.Array, *,
+                      tile_d: int = DEFAULT_TILE_D,
+                      interpret: bool = False) -> jax.Array:
+    """blocks: (n, d); mask: (n,) -> (d,)."""
+    n, d = blocks.shape
+    pad = (-d) % tile_d
+    if pad:
+        blocks = jnp.pad(blocks, ((0, 0), (0, pad)))
+    dp = d + pad
+    mask2 = mask.reshape(n, 1).astype(blocks.dtype)
+    out = pl.pallas_call(
+        _masked_avg_kernel,
+        grid=(dp // tile_d,),
+        in_specs=[
+            pl.BlockSpec((n, tile_d), lambda i: (0, i)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), blocks.dtype),
+        interpret=interpret,
+    )(blocks, mask2)
+    return out[:d]

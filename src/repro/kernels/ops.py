@@ -1,0 +1,141 @@
+"""Public kernel entry points with backend routing.
+
+Backends:
+  - "xla":     pure-jnp implementation that lowers on any backend. This is
+               what the model code and the CPU dry-run use.
+  - "pallas":  the TPU Pallas kernel (the production hot path). On CPU the
+               wrapper automatically runs it in ``interpret=True`` mode so
+               kernels are validated everywhere.
+  - "ref":     the sequential oracle from :mod:`repro.kernels.ref`.
+  - "auto":    pallas on TPU, xla elsewhere.
+
+The XLA rwkv6 path is a scan-of-scans: an outer `lax.scan` over chunks
+carries the (dk, dv) state, an inner checkpointed scan runs the C in-chunk
+steps — O(S/C) saved residuals instead of O(S), which is what makes
+training memory feasible without the Pallas kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.masked_avg import masked_avg_pallas
+from repro.kernels.rglru_scan import rglru_pallas
+from repro.kernels.rwkv6_scan import rwkv6_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# masked_avg
+# ---------------------------------------------------------------------------
+
+def masked_avg(blocks, mask, *, backend: str = "auto"):
+    b = _resolve(backend)
+    if b == "pallas":
+        return masked_avg_pallas(blocks, mask, interpret=not _on_tpu())
+    return _ref.masked_avg_ref(blocks, mask)   # xla == ref here (fused anyway)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+
+def _rwkv6_scan_of_scans(r, k, v, w, u, chunk: int):
+    B, S, h, dk = r.shape
+    dv = v.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        padfn = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = padfn(r), padfn(k), padfn(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    Sp = S + pad
+    nc = Sp // chunk
+    f32 = jnp.float32
+    # (B,S,h,d) -> (nc, C, B, h, d)
+    reorder = lambda x: jnp.moveaxis(
+        x.astype(f32).reshape(x.shape[0], nc, chunk, h, x.shape[-1]), 0, 2)
+    rr, kk, vv, ww = reorder(r), reorder(k), reorder(v), reorder(w)
+    uf = u.astype(f32)
+
+    @jax.checkpoint
+    def chunk_body(state, xs):
+        rc, kc, vc, wc = xs                     # (C, B, h, d)
+
+        def step(s, x):
+            rt, kt, vt, wt = x
+            kv = kt[..., :, None] * vt[..., None, :]
+            o = jnp.einsum("bhk,bhkv->bhv", rt, s + uf[..., :, None] * kv)
+            return wt[..., :, None] * s + kv, o
+
+        state, o = jax.lax.scan(step, state, (rc, kc, vc, wc))
+        return state, o
+
+    s0 = jnp.zeros((B, h, dk, dv), f32)
+    _, o = jax.lax.scan(chunk_body, s0, (rr, kk, vv, ww))   # (nc, C, B, h, dv)
+    o = jnp.moveaxis(o.reshape(Sp, B, h, dv), 0, 1)[:, :S]
+    return o.astype(r.dtype)
+
+
+def rwkv6(r, k, v, w, u, *, backend: str = "auto", chunk: int = 64):
+    b = _resolve(backend)
+    if b == "pallas":
+        return rwkv6_pallas(r, k, v, w, u, chunk=chunk,
+                            interpret=not _on_tpu())
+    if b == "ref":
+        return _ref.rwkv6_ref(r, k, v, w, u).astype(r.dtype)
+    return _rwkv6_scan_of_scans(r, k, v, w, u, chunk)
+
+
+def rwkv6_step(r, k, v, w, u, state):
+    o, new_state = _ref.rwkv6_step_ref(r, k, v, w, u, state)
+    return o.astype(r.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# rglru
+# ---------------------------------------------------------------------------
+
+def _rglru_assoc(x, a):
+    """Parallel XLA path via associative_scan on (a, b) pairs."""
+    f32 = jnp.float32
+    af = a.astype(f32)
+    b = jnp.sqrt(jnp.maximum(1.0 - af * af, 0.0)) * x.astype(f32)
+
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, bl * ar + br
+
+    a_out, h = jax.lax.associative_scan(combine, (af, b), axis=1)
+    del a_out
+    return h
+
+
+def rglru(x, a, *, backend: str = "auto"):
+    """x, a: (B,S,d) -> (h: (B,S,d) f32, h_last: (B,d) f32)."""
+    b = _resolve(backend)
+    if b == "pallas":
+        h = rglru_pallas(x, a, interpret=not _on_tpu()).astype(jnp.float32)
+    elif b == "ref":
+        h, _ = _ref.rglru_ref(x, a)
+    else:
+        h = _rglru_assoc(x, a)
+    return h, h[:, -1]
+
+
+def rglru_step(x, a, state):
+    """One decode step; x,a,state: (B,d)."""
+    af = a.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - af * af, 0.0)) * x.astype(jnp.float32)
+    return af * state.astype(jnp.float32) + b

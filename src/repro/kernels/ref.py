@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: simple, sequential where the math is
+sequential, no tiling. Kernel tests assert allclose against these across
+shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# masked_avg — the RPS hot loop (Algorithm 1, RS step)
+# ---------------------------------------------------------------------------
+
+def masked_avg_ref(blocks: jax.Array, mask: jax.Array) -> jax.Array:
+    """Renormalised drop-masked average over the worker axis.
+
+    blocks: (n, d) — worker i's copy of a model block.
+    mask:   (n,)   — 1.0 if worker i's packet arrived (owner's own entry
+                     is always 1 by construction upstream).
+    Returns (d,): sum_i mask_i * blocks_i / sum_i mask_i.
+    """
+    m = mask.astype(jnp.float32)
+    s = jnp.einsum("n,nd->d", m, blocks.astype(jnp.float32))
+    c = jnp.maximum(m.sum(), 1.0)
+    return (s / c).astype(blocks.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 — data-dependent-decay linear attention (Finch), sequential scan
+# ---------------------------------------------------------------------------
+
+def rwkv6_ref(r, k, v, w, u):
+    """Sequential RWKV6 recurrence.
+
+    r,k,w: (B,S,h,dk); v: (B,S,h,dv); u: (h,dk).
+      o_t = r_t · (S_{t-1} + diag(u) k_t ⊗ v_t)
+      S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+    Returns o: (B,S,h,dv).
+    """
+    B, S, h, dk = r.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    r, k, v, w, u = (x.astype(f32) for x in (r, k, v, w, u))
+
+    def step(state, rkvw):
+        rt, kt, vt, wt = rkvw               # (B,h,dk)... vt (B,h,dv)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,h,dk,dv)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, state + u[..., :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, o
+
+    s0 = jnp.zeros((B, h, dk, dv), f32)
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, w))
+    _, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 1)            # (B,S,h,dv)
+
+
+def rwkv6_step_ref(r, k, v, w, u, state):
+    """One decode step. r,k,w:(B,h,dk) v:(B,h,dv) state:(B,h,dk,dv)."""
+    f32 = jnp.float32
+    r, k, v, w, state = (x.astype(f32) for x in (r, k, v, w, state))
+    kv = k[..., :, None] * v[..., None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", r, state + u.astype(f32)[..., :, None] * kv)
+    new_state = w[..., :, None] * state + kv
+    return o, new_state
+
+
+# ---------------------------------------------------------------------------
+# rglru — RG-LRU gated diagonal linear recurrence (Griffin), sequential scan
+# ---------------------------------------------------------------------------
+
+def rglru_ref(x, a, h0=None):
+    """h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ x_t   (all (B,S,d), a∈(0,1)).
+
+    Returns (h: (B,S,d), h_last: (B,d)).
+    """
+    B, S, d = x.shape
+    f32 = jnp.float32
+    x, a = x.astype(f32), a.astype(f32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * x
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    init = jnp.zeros((B, d), f32) if h0 is None else h0.astype(f32)
+    h_last, hs = jax.lax.scan(step, init,
+                              (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), h_last

@@ -1,0 +1,170 @@
+"""Sharding rules: param / batch / cache PartitionSpecs per architecture.
+
+Rules are name-based over the param pytree paths (the zoo keeps a stable
+naming convention). Two strategies (ArchConfig.shard_strategy):
+
+  "tp"   — tensor-parallel over "model" (heads / d_ff / experts / vocab);
+           replicated over the data axes. RPS-model archs stack a leading
+           *worker* dim sharded over the RPS axes.
+  "fsdp" — tp + parameter sharding over "data" on a second large dim
+           (llama3-405b, kimi-k2).
+
+``model_dim_of`` reports which dim of each leaf is model-sharded — the RPS
+per-leaf exchange keeps that dim intact (core.rps.rps_exchange_leaf).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+MODEL = "model"
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _rule(path: str, shape: Tuple[int, ...], cfg: ArchConfig
+          ) -> Tuple[Optional[int], Optional[int]]:
+    """Returns (model_dim, fsdp_dim) for a leaf (indices into `shape`,
+    ignoring any stacked worker dim — caller offsets)."""
+    nd = len(shape)
+    last, last2 = nd - 1, nd - 2
+
+    def fits(dim, axis=16):
+        return shape[dim] % axis == 0
+
+    # --- embeddings -------------------------------------------------------
+    if path.endswith("embed/tok"):
+        return (0 if fits(0) else None), None
+    if path.endswith("embed/head"):
+        return (last if fits(last) else None), None
+    if "final_norm" in path or "/ln" in path or path.endswith("lam") \
+            or "/mu" in path or path.endswith("w0") or path.endswith("/u"):
+        return None, None
+    # --- attention: (L, d, h, hd) / (L, h, hd, d) --------------------------
+    if "attn/wq" in path or "attn/wk" in path or "attn/wv" in path:
+        return (last2 if fits(last2) else None), (1 if nd >= 3 else None)
+    if "attn/wo" in path:
+        return (1 if nd >= 3 and fits(1) else None), (last if nd >= 3 else None)
+    # --- MoE: router (L,d,E), experts (L,E,d,ff)/(L,E,ff,d) ----------------
+    if "moe/router" in path:
+        return None, None
+    if "moe/" in path:
+        e_dim = 1 if nd == 4 else 0
+        if fits(e_dim):
+            return e_dim, (e_dim + 1 if nd >= 3 else None)
+        return (last if fits(last) else None), (last2 if nd >= 3 else None)
+    # --- dense MLP: wi/wg (L,d,ff), wo (L,ff,d) ----------------------------
+    if "mlp/wi" in path or "mlp/wg" in path:
+        return (last if fits(last) else None), last2
+    if "mlp/wo" in path:
+        return (last2 if fits(last2) else None), last
+    # --- rwkv (L,d,d) projections / lora ----------------------------------
+    if "lora" in path:
+        return None, None
+    if any(path.endswith(s) for s in ("wr", "wk", "wv", "wg", "wo",
+                                      "ck", "cv", "cr")):
+        return (last if fits(last) else None), last2
+    # --- hybrid rec block: wy/wx (L,d,dr), wa/wi (L,dr,dr), conv (L,4,dr) --
+    if any(f"/{s}" in path for s in ("wy", "wx", "wa", "wi")):
+        return (last if fits(last) else None), last2
+    if path.endswith("conv"):
+        return (last if fits(last) else None), None
+    return None, None
+
+
+def leaf_pin_spec(pstr: str, shape: Tuple[int, ...], cfg: ArchConfig):
+    """Per-layer (unstacked, worker-dim-free) spec for pinning a scanned
+    param slice inside the layer loop; under vmap(spmd_axis_name=…) the
+    worker axis is prepended automatically. Used so the scan-*backward*
+    grad accumulators inherit model/FSDP shardings instead of compiling
+    replicated."""
+    mdim, fdim = _rule(pstr, shape, cfg)
+    entries = [None] * len(shape)
+    if mdim is not None:
+        entries[mdim] = MODEL
+    if cfg.shard_strategy == "fsdp" and fdim is not None and fdim != mdim \
+            and shape[fdim] % 16 == 0:
+        entries[fdim] = "data"
+    return P(*entries)
+
+
+def param_specs(params_shape: Any, cfg: ArchConfig, *,
+                worker_axes: Tuple[str, ...] = (),
+                fsdp_axis: Optional[str] = None,
+                stacked: Optional[bool] = None) -> Any:
+    """PartitionSpec tree for a (possibly worker-stacked) param tree.
+
+    worker_axes: mesh axes sharding the leading stacked-replica dim. If the
+    tree is stacked but the worker dim is unsharded (single-pod rps_grad:
+    n_rps == 1), pass stacked=True with worker_axes=().
+    """
+    if stacked is None:
+        stacked = bool(worker_axes)
+    offset = 1 if stacked else 0
+
+    def spec(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape[offset:]
+        mdim, fdim = _rule(pstr, shape, cfg)
+        entries = [None] * len(shape)
+        if mdim is not None:
+            entries[mdim] = MODEL
+        if fsdp_axis and fdim is not None and fdim != mdim \
+                and shape[fdim] % 16 == 0:
+            entries[fdim] = fsdp_axis
+        if stacked:
+            lead = (worker_axes if len(worker_axes) > 1 else worker_axes[0]) \
+                if worker_axes else None
+            entries = [lead] + entries
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def model_dims(params_shape: Any, cfg: ArchConfig, *,
+               stacked: bool = False) -> Any:
+    """Tree of model-sharded dim index per leaf (in the *per-worker* view,
+    i.e. excluding the stacked dim), for rps_exchange_leaf."""
+    offset = 1 if stacked else 0
+
+    def md(path, leaf):
+        mdim, _ = _rule(_path_str(path), leaf.shape[offset:], cfg)
+        return mdim
+
+    return jax.tree_util.tree_map_with_path(md, params_shape)
+
+
+def batch_spec(batch_shape: Any, worker_axes: Tuple[str, ...],
+               data_axes: Tuple[str, ...] = ()) -> Any:
+    """Batch sharding for worker-stacked batches (n_rps, B_local, ...):
+    worker dim over worker_axes (None when n_rps == 1), per-worker batch dim
+    over data_axes (rps_grad / fsdp mode)."""
+    def spec(path, leaf):
+        entries: list = [
+            (worker_axes if len(worker_axes) > 1 else worker_axes[0])
+            if worker_axes else None]
+        if data_axes:
+            entries.append(data_axes if len(data_axes) > 1 else data_axes[0])
+        entries += [None] * (leaf.ndim - len(entries))
+        return P(*entries[:leaf.ndim])
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def serve_batch_spec(shape_tree: Any, data_axes: Tuple[str, ...]) -> Any:
+    """Serving inputs/caches: batch dim over data axes, kv-heads dim left to
+    GSPMD (cache batch dim is dim 1 of stacked (L, B, ...) leaves)."""
+    def spec(path, leaf):
+        entries = [None] * leaf.ndim
+        # stacked cache leaves: (L, B, ...); plain inputs: (B, ...)
+        bdim = 1 if leaf.ndim >= 3 else 0
+        if leaf.shape[bdim] % int(np.prod([1])) == 0:
+            entries[bdim] = (data_axes if len(data_axes) > 1 else data_axes[0])
+        return P(*entries)
+    return jax.tree_util.tree_map_with_path(spec, shape_tree)

@@ -1,0 +1,85 @@
+"""Training launcher.
+
+Two entry modes:
+  --sim      n-worker simulation on one device (paper-scale experiments;
+             global-view exchange, bit-identical to the collective path)
+  --devices  shard_map collective path over real/forced host devices
+             (e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8)
+
+Example (the end-to-end ~100M driver is examples/train_rps_100m.py):
+  PYTHONPATH=src python -m repro.launch.train --arch rps-paper-mlp \
+      --steps 200 --drop-rate 0.1 --aggregator rps_model
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_pytree
+from repro.configs import get_config
+from repro.data.synthetic import CharLMTask, make_worker_streams
+from repro.models import build_model
+from repro.train.simulator import SimulatorConfig, run_simulation
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rps-paper-mlp")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test reduced variant")
+    ap.add_argument("--workers", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--drop-rate", type=float, default=0.1)
+    ap.add_argument("--aggregator", default="rps_model",
+                    choices=["rps_model", "rps_grad", "allreduce_model",
+                             "allreduce_grad", "local"])
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--warmup", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg, grouped=False)
+    task = CharLMTask(vocab=cfg.vocab_size, seq_len=args.seq_len,
+                      seed=args.seed)
+    batch_fn = make_worker_streams(task, args.workers, args.batch_size)
+
+    def loss_fn(p, b):
+        loss, _ = model.loss(p, b)
+        return loss
+
+    scfg = SimulatorConfig(
+        n_workers=args.workers, drop_rate=args.drop_rate,
+        aggregator=args.aggregator, lr=args.lr, steps=args.steps,
+        warmup=args.warmup, batch_size=args.batch_size, seed=args.seed)
+    t0 = time.time()
+    hist = run_simulation(loss_fn, model.init, batch_fn, scfg)
+    dt = time.time() - t0
+    print(f"n={args.workers} p={args.drop_rate} agg={args.aggregator} "
+          f"final_loss={hist['final_loss']:.4f} "
+          f"(entropy floor {task.entropy_floor():.4f}) "
+          f"consensus={hist['consensus'][-1]:.3e} [{dt:.1f}s]")
+    if args.checkpoint:
+        mean_params = jax.tree.map(lambda x: jnp.mean(x, 0), hist["params"])
+        save_pytree(args.checkpoint, mean_params)
+        print("checkpoint ->", args.checkpoint)
+    if args.out:
+        hist.pop("params")
+        with open(args.out, "w") as f:
+            json.dump(hist, f, indent=1)
+        print("history ->", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.registry import Model, build_model, kind_sequence  # noqa: F401

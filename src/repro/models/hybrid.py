@@ -1,0 +1,113 @@
+"""RecurrentGemma (Griffin) kinds: RG-LRU recurrent block. The local
+attention layers of the 2:1 pattern reuse the dense ``attn@<window>`` kind.
+
+Recurrent block: x → (gate branch: gelu(x·Wy)) ⊗ (rec branch: causal
+conv1d(4) → RG-LRU) → Wo, with the usual pre-norm residual + gated MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as K
+from repro.models import layers as L
+from repro.models.stack import KindSpec
+
+CONV_W = 4
+RGLRU_C = 8.0
+
+
+def init_rec(key, cfg: ArchConfig):
+    d = cfg.d_model
+    dr = cfg.d_state or d
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "ln1": jnp.zeros((d,), dt),
+        "ln2": jnp.zeros((d,), dt),
+        "wy": L._init(ks[0], (d, dr), s, dt),
+        "wx": L._init(ks[1], (d, dr), s, dt),
+        "conv": L._init(ks[2], (CONV_W, dr), 0.5, dt),
+        "wa": L._init(ks[3], (dr, dr), dr ** -0.5, dt),
+        "wi": L._init(ks[4], (dr, dr), dr ** -0.5, dt),
+        "lam": jnp.full((dr,), 0.7, jnp.float32),   # softplus(0.7)≈1.1
+        "wo": L._init(ks[5], (dr, d), dr ** -0.5, dt),
+        "mlp": L.init_mlp(ks[6], cfg),
+    }
+
+
+def _causal_conv(u, conv, state=None):
+    """u: (B,S,dr); conv: (W,dr) depthwise causal. state: (B,W-1,dr)|None."""
+    W = conv.shape[0]
+    if state is None:
+        up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * conv[i] for i in range(W))
+    return out, up[:, -(W - 1):]                     # new conv state
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(u @ p["wa"])
+    i = jax.nn.sigmoid(u @ p["wi"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    return a, i
+
+
+def make_rec_kind() -> KindSpec:
+    def _block(p, xin, conv_state=None, rec_state=None, step=False):
+        y = jax.nn.gelu(xin @ p["wy"])
+        u = xin @ p["wx"]
+        u, new_conv = _causal_conv(u, p["conv"], conv_state)
+        a, i = _gates(p, u)
+        gated = (i * u)
+        if step:
+            h = K.rglru_step(gated[:, 0], a[:, 0], rec_state)
+            h_seq = h[:, None, :]
+            h_last = h
+        else:
+            h_seq, h_last = K.rglru(gated, a)
+        out = (h_seq.astype(xin.dtype) * y) @ p["wo"]
+        return out, new_conv, h_last
+
+    def train(p, x, aux, cfg: ArchConfig):
+        xin = L.rms_norm(x, p["ln1"])
+        out, _, _ = _block(p, xin)
+        x = x + out
+        x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+        return x, jnp.float32(0.0)
+
+    def prefill(p, x, aux, cfg: ArchConfig):
+        xin = L.rms_norm(x, p["ln1"])
+        out, conv_state, h_last = _block(p, xin)
+        x = x + out
+        x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+        return x, {"conv": conv_state, "h": h_last}
+
+    def decode(p, x, cache_l, pos, aux, cfg: ArchConfig):
+        xin = L.rms_norm(x, p["ln1"])
+        out, conv_state, h_last = _block(p, xin, cache_l["conv"],
+                                         cache_l["h"], step=True)
+        x = x + out
+        x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+        return x, {"conv": conv_state, "h": h_last}
+
+    def cache_spec(cfg: ArchConfig, batch: int, max_len: int):
+        dr = cfg.d_state or cfg.d_model
+        return {"conv": jnp.zeros((batch, CONV_W - 1, dr), cfg.jnp_dtype),
+                "h": jnp.zeros((batch, dr), jnp.float32)}
+
+    return KindSpec("rec", init_rec, train, prefill, decode, cache_spec)
+
+
+def hybrid_kind_sequence(cfg: ArchConfig) -> list[str]:
+    pattern = cfg.block_pattern or ("rec", "rec", "attn")
+    kinds = []
+    for i in range(cfg.n_layers):
+        k = pattern[i % len(pattern)]
+        kinds.append(f"attn@{cfg.window}" if k == "attn" and cfg.window
+                     else ("attn" if k == "attn" else "rec"))
+    return kinds

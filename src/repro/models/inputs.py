@@ -1,0 +1,63 @@
+"""Input specs: ShapeDtypeStruct stand-ins for every model input.
+
+``input_specs(cfg, shape)`` is what the dry-run lowers against — weak-type
+correct, shardable, zero device allocation. ``make_batch`` materialises a
+small concrete batch for smoke tests / real training.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def train_specs(cfg: ArchConfig, B: int, S: int) -> Dict[str, Any]:
+    i32, dt = jnp.int32, cfg.jnp_dtype
+    if cfg.family == "vlm":
+        st = S - cfg.n_patches
+        return {"tokens": _sds((B, st), i32),
+                "patches": _sds((B, cfg.n_patches, cfg.d_model), dt),
+                "labels": _sds((B, st), i32)}
+    if cfg.family == "audio":
+        return {"frames": _sds((B, S // cfg.enc_frames_ratio, cfg.d_model), dt),
+                "tokens": _sds((B, S), i32),
+                "labels": _sds((B, S), i32)}
+    return {"tokens": _sds((B, S), i32), "labels": _sds((B, S), i32)}
+
+
+def decode_specs(cfg: ArchConfig, B: int) -> Dict[str, Any]:
+    return {"token": _sds((B, 1), jnp.int32)}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig | str) -> Dict[str, Any]:
+    shape = SHAPES[shape] if isinstance(shape, str) else shape
+    if shape.kind in ("train", "prefill"):
+        return train_specs(cfg, shape.global_batch, shape.seq_len)
+    return decode_specs(cfg, shape.global_batch)
+
+
+def cache_specs(model, batch: int, max_len: int):
+    """Abstract cache pytree via eval_shape — no allocation."""
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def make_batch(cfg: ArchConfig, B: int, S: int, seed: int = 0):
+    """Concrete random batch matching train_specs (smoke tests / demos)."""
+    rng = np.random.default_rng(seed)
+    specs = train_specs(cfg, B, S)
+    out = {}
+    for k, s in specs.items():
+        if s.dtype == jnp.int32:
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=s.shape), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=s.shape) * 0.02, s.dtype)
+    return out

@@ -1,0 +1,154 @@
+"""Top-level model API.
+
+``build_model(cfg)`` returns a :class:`Model` with pure functions:
+
+  init(key)                              -> params
+  loss(params, batch)                    -> (scalar_loss, metrics)
+  prefill(params, inputs)                -> (last_logits, cache)
+  decode_step(params, cache, inputs, pos)-> (logits, new_cache)
+  init_cache(batch_size, max_len)        -> cache pytree
+
+Batch layouts (see configs.base input shapes):
+  dense/ssm/hybrid: {tokens: (B,S) i32, labels: (B,S) i32}
+  vlm:   {tokens: (B,S-P) i32, patches: (B,P,d), labels: (B,S-P) i32}
+  audio: {frames: (B,S//r,d), tokens: (B,S) i32, labels: (B,S) i32}
+Decode inputs: {token: (B,1) i32} (+ audio cache carries cross-K/V).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import stack as S
+from repro.models.hybrid import hybrid_kind_sequence, make_rec_kind
+from repro.models.rwkv6 import make_rwkv_kind
+from repro.models.transformer import dense_kind_sequence, make_dense_kind
+from repro.models.whisper import make_enc_kind, make_xattn_kind
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    kinds: List[str]                       # decoder kind sequence
+    specs: Dict[str, S.KindSpec]
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+
+def _make_specs(kinds: List[str]) -> Dict[str, S.KindSpec]:
+    specs: Dict[str, S.KindSpec] = {}
+    for k in set(kinds):
+        if k.startswith(("attn", "moe_attn")):
+            specs[k] = make_dense_kind(k)
+        elif k == "rwkv":
+            specs[k] = make_rwkv_kind()
+        elif k == "rec":
+            specs[k] = make_rec_kind()
+        elif k == "enc":
+            specs[k] = make_enc_kind()
+        elif k == "xattn":
+            specs[k] = make_xattn_kind()
+        else:
+            raise ValueError(k)
+    return specs
+
+
+def kind_sequence(cfg: ArchConfig) -> List[str]:
+    if cfg.family in ("dense", "vlm"):
+        return dense_kind_sequence(cfg)
+    if cfg.family == "ssm":
+        return ["rwkv"] * cfg.n_layers
+    if cfg.family == "hybrid":
+        return hybrid_kind_sequence(cfg)
+    if cfg.family == "audio":
+        return ["xattn"] * cfg.n_layers
+    raise ValueError(cfg.family)
+
+
+def build_model(cfg: ArchConfig, *, grouped: bool | None = None,
+                remat: bool = True,
+                kind_counts: Dict[str, int] | None = None) -> Model:
+    """kind_counts overrides the per-kind layer counts (roofline probe
+    compiles use {kind: 1} etc. to extract per-layer scan-body costs)."""
+    kinds = kind_sequence(cfg)
+    enc_kinds = ["enc"] * cfg.enc_layers if cfg.family == "audio" else []
+    if kind_counts is not None:
+        order = list(dict.fromkeys(kinds))
+        kinds = [k for k in order for _ in range(kind_counts.get(k, 0))]
+        if "enc" in kind_counts:
+            enc_kinds = ["enc"] * kind_counts["enc"]
+    specs = _make_specs(kinds + enc_kinds)
+    if grouped is None:
+        grouped = cfg.n_layers > 4
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        params = {"embed": L.init_embed(k1, cfg),
+                  "layers": S.init_stack(k2, cfg, kinds, specs)}
+        if enc_kinds:
+            params["enc_layers"] = S.init_stack(k3, cfg, enc_kinds, specs)
+        return params
+
+    def _aux(params, batch_or_inputs, mode):
+        if cfg.family != "audio":
+            return {}
+        enc_x = batch_or_inputs["frames"].astype(cfg.jnp_dtype)
+        enc_out, _ = S.apply_stack(params["enc_layers"], enc_x, {}, cfg,
+                                   enc_kinds, specs, mode="train",
+                                   grouped=grouped, remat=remat)
+        return {"enc_out": enc_out}
+
+    def _embed_train(params, batch):
+        if cfg.family == "vlm":
+            tok = L.embed(params["embed"], batch["tokens"])
+            x = jnp.concatenate(
+                [batch["patches"].astype(tok.dtype), tok], axis=1)
+            return x
+        return L.embed(params["embed"], batch["tokens"])
+
+    def loss(params, batch):
+        x = L.constrain(_embed_train(params, batch), cfg)
+        aux = _aux(params, batch, "train")
+        x, aux_loss = S.apply_stack(params["layers"], x, aux, cfg, kinds,
+                                    specs, mode="train", grouped=grouped,
+                                    remat=remat)
+        if cfg.family == "vlm":
+            x = x[:, cfg.n_patches:]
+        logits = L.lm_head(params["embed"], x, cfg.vocab_size)
+        nll = L.softmax_xent(logits, batch["labels"])
+        total = nll + aux_loss
+        return total, {"nll": nll, "aux_loss": aux_loss}
+
+    def prefill(params, inputs, max_len=None):
+        x = _embed_train(params, inputs)
+        aux = _aux(params, inputs, "prefill")
+        aux = {**aux, "max_len": max_len}
+        x, cache = S.apply_stack(params["layers"], x, aux, cfg, kinds, specs,
+                                 mode="prefill", grouped=grouped)
+        last = L.lm_head(params["embed"], x[:, -1:],
+                         cfg.vocab_size)[:, 0, :cfg.vocab_size]
+        return last, cache
+
+    def decode_step(params, cache, inputs, pos):
+        x = L.embed(params["embed"], inputs["token"])
+        aux = {}   # audio cross-K/V live in the cache
+        x, cache = S.apply_stack(params["layers"], x, aux, cfg, kinds, specs,
+                                 mode="decode", grouped=grouped, cache=cache,
+                                 pos=pos)
+        logits = L.lm_head(params["embed"], x,
+                           cfg.vocab_size)[:, 0, :cfg.vocab_size]
+        return logits, cache
+
+    def init_cache(batch_size: int, max_len: int):
+        return S.init_cache(cfg, kinds, specs, batch_size, max_len)
+
+    return Model(cfg, kinds, specs, init, loss, prefill, decode_step,
+                 init_cache)

@@ -1,0 +1,151 @@
+"""RWKV6 "Finch" layer kinds: time-mix (data-dependent decay linear
+attention) + channel-mix. Attention-free; decode state is O(1) in sequence
+length, which is why rwkv6 runs the long_500k shape.
+
+Simplifications vs. the released checkpoints (DESIGN.md §8): static
+token-shift lerp coefficients (RWKV5-style) instead of the data-dependent
+LoRA lerp; decay LoRA retained (the Finch core). Framework-fidelity, not
+checkpoint-compatibility.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as K
+from repro.models import layers as L
+from repro.models.stack import KindSpec
+
+DECAY_LORA = 64
+
+
+def _split_heads(x, h):
+    B, S, d = x.shape
+    return x.reshape(B, S, h, d // h)
+
+
+def init_rwkv(key, cfg: ArchConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    p = {
+        "ln1": jnp.zeros((d,), dt),
+        "ln2": jnp.zeros((d,), dt),
+        # time-mix
+        "mu": 0.5 * jnp.ones((5, d), dt),            # r,k,v,g,w shift lerps
+        "wr": L._init(ks[0], (d, d), s, dt),
+        "wk": L._init(ks[1], (d, d), s, dt),
+        "wv": L._init(ks[2], (d, d), s, dt),
+        "wg": L._init(ks[3], (d, d), s, dt),
+        "wo": L._init(ks[4], (d, d), s, dt),
+        "w_lora_a": L._init(ks[5], (d, DECAY_LORA), s, dt),
+        "w_lora_b": L._init(ks[6], (DECAY_LORA, d), DECAY_LORA ** -0.5, dt),
+        "w0": jnp.full((d,), -2.0, dt),              # base decay logit
+        "u": L._init(ks[7], (d,), 0.1, jnp.float32), # bonus
+        # channel-mix
+        "mu_c": 0.5 * jnp.ones((2, d), dt),
+        "ck": L._init(ks[8], (d, ff), s, dt),
+        "cv": L._init(ks[9], (ff, d), ff ** -0.5, dt),
+        "cr": L._init(ks[10], (d, d), s, dt),
+    }
+    return p
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel decay in (0,1)."""
+    lora = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    return jnp.exp(-jnp.exp(
+        jnp.clip(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32),
+                 -8.0, 4.0)))
+
+
+def _tmix(p, x, cfg: ArchConfig, shifted):
+    """shifted = x_{t-1} along S (or cached last token for decode)."""
+    h = cfg.n_heads
+    mu = p["mu"].astype(x.dtype)
+    mix = lambda i: x + mu[i] * (shifted - x)
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+    r = _split_heads(xr @ p["wr"], h)
+    k = _split_heads(xk @ p["wk"], h)
+    v = _split_heads(xv @ p["wv"], h)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = _split_heads(_decay(p, xw), h).astype(x.dtype)
+    u = p["u"].reshape(h, -1)
+    return r, k, v, w, u, g
+
+
+def _cmix(p, x, shifted):
+    mu = p["mu_c"].astype(x.dtype)
+    xk = x + mu[0] * (shifted - x)
+    xr = x + mu[1] * (shifted - x)
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return jax.nn.sigmoid(xr @ p["cr"]) * (k @ p["cv"])
+
+
+def _shift(x):
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def make_rwkv_kind() -> KindSpec:
+    def train(p, x, aux, cfg: ArchConfig):
+        xi = L.rms_norm(x, p["ln1"])
+        r, k, v, w, u, g = _tmix(p, xi, cfg, _shift(xi))
+        o = K.rwkv6(r, k, v, w, u)
+        B, S, _, _ = o.shape
+        o = (o.reshape(B, S, -1) * g).astype(x.dtype) @ p["wo"]
+        x = x + o
+        xc = L.rms_norm(x, p["ln2"])
+        x = x + _cmix(p, xc, _shift(xc))
+        return x, jnp.float32(0.0)
+
+    def prefill(p, x, aux, cfg: ArchConfig):
+        xi = L.rms_norm(x, p["ln1"])
+        r, k, v, w, u, g = _tmix(p, xi, cfg, _shift(xi))
+        # recompute the final state sequentially-cheap: one extra pass of the
+        # recurrence's state only (no outputs needed) via the scan path
+        o = K.rwkv6(r, k, v, w, u)
+        B, S, h, dk = r.shape
+        # final state: run step recurrence on last chunk is equivalent to
+        # full fold; do the full fold (f32, state-only scan)
+        def fold(s, t):
+            rt, kt, vt, wt = t
+            kv = kt[..., :, None] * vt[..., None, :]
+            return wt[..., :, None] * s + kv, None
+        f32 = jnp.float32
+        xs = tuple(jnp.moveaxis(a.astype(f32), 1, 0) for a in (r, k, v, w))
+        state, _ = jax.lax.scan(fold, jnp.zeros((B, h, dk, v.shape[-1]), f32), xs)
+        o = (o.reshape(B, S, -1) * g).astype(x.dtype) @ p["wo"]
+        x = x + o
+        xc = L.rms_norm(x, p["ln2"])
+        x = x + _cmix(p, xc, _shift(xc))
+        cache = {"state": state,
+                 "shift_t": xi[:, -1],
+                 "shift_c": xc[:, -1]}
+        return x, cache
+
+    def decode(p, x, cache_l, pos, aux, cfg: ArchConfig):
+        # x: (B, 1, d)
+        xi = L.rms_norm(x, p["ln1"])
+        prev_t = cache_l["shift_t"][:, None, :].astype(xi.dtype)
+        r, k, v, w, u, g = _tmix(p, xi, cfg, prev_t)
+        o, new_state = K.rwkv6_step(r[:, 0], k[:, 0], v[:, 0], w[:, 0], u,
+                                    cache_l["state"])
+        o = o.reshape(o.shape[0], 1, -1)              # (B,1,d)
+        o = (o * g).astype(x.dtype) @ p["wo"]
+        x = x + o
+        xc = L.rms_norm(x, p["ln2"])
+        prev_c = cache_l["shift_c"][:, None, :].astype(xc.dtype)
+        x = x + _cmix(p, xc, prev_c)
+        cache = {"state": new_state, "shift_t": xi[:, 0], "shift_c": xc[:, 0]}
+        return x, cache
+
+    def cache_spec(cfg: ArchConfig, batch: int, max_len: int):
+        h = cfg.n_heads
+        dk = cfg.d_model // h
+        return {"state": jnp.zeros((batch, h, dk, dk), jnp.float32),
+                "shift_t": jnp.zeros((batch, cfg.d_model), cfg.jnp_dtype),
+                "shift_c": jnp.zeros((batch, cfg.d_model), cfg.jnp_dtype)}
+
+    return KindSpec("rwkv", init_rwkv, train, prefill, decode, cache_spec)

@@ -1,0 +1,110 @@
+"""Whisper-style encoder-decoder kinds.
+
+The mel-spectrogram + conv frontend is a STUB per the brief: the model
+consumes precomputed frame embeddings (B, S_src, d). The encoder is a
+bidirectional transformer; decoder layers are causal self-attention +
+cross-attention + MLP. For decode, the per-layer cross K/V are computed once
+at prefill and stored in the cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.stack import KindSpec
+
+
+def make_enc_kind() -> KindSpec:
+    def init(key, cfg: ArchConfig):
+        k1, k2 = jax.random.split(key)
+        return {"ln1": jnp.zeros((cfg.d_model,), cfg.jnp_dtype),
+                "ln2": jnp.zeros((cfg.d_model,), cfg.jnp_dtype),
+                "attn": L.init_attention(k1, cfg),
+                "mlp": L.init_mlp(k2, cfg)}
+
+    def train(p, x, aux, cfg: ArchConfig):
+        h, _ = L.attention_fwd(p["attn"], L.rms_norm(x, p["ln1"]), cfg=cfg,
+                               window=None, causal=False)
+        x = x + h
+        x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+        return x, jnp.float32(0.0)
+
+    def prefill(p, x, aux, cfg):
+        x, _ = train(p, x, aux, cfg)
+        return x, {}
+
+    def decode(p, x, cache_l, pos, aux, cfg):   # encoder never decodes
+        raise NotImplementedError
+
+    def cache_spec(cfg, batch, max_len):
+        return {}
+
+    return KindSpec("enc", init, train, prefill, decode, cache_spec)
+
+
+def make_xattn_kind() -> KindSpec:
+    """Decoder layer: causal self-attn + cross-attn(aux=enc_out) + MLP."""
+
+    def init(key, cfg: ArchConfig):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"ln1": jnp.zeros((cfg.d_model,), cfg.jnp_dtype),
+                "lnx": jnp.zeros((cfg.d_model,), cfg.jnp_dtype),
+                "ln2": jnp.zeros((cfg.d_model,), cfg.jnp_dtype),
+                "attn": L.init_attention(k1, cfg),
+                "xattn": L.init_attention(k2, cfg),
+                "mlp": L.init_mlp(k3, cfg)}
+
+    def _cross(p, x, enc_kv):
+        """enc_kv: precomputed (k, v) or raw encoder output."""
+        q = jnp.einsum("bsd,dhe->bshe", x, p["xattn"]["wq"])
+        k, v = enc_kv
+        out = L.full_attention(q, k, v, causal=False, window=None)
+        return jnp.einsum("bshe,hed->bsd", out, p["xattn"]["wo"])
+
+    def _enc_kv(p, enc_out):
+        k = jnp.einsum("bsd,dhe->bshe", enc_out, p["xattn"]["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", enc_out, p["xattn"]["wv"])
+        return k, v
+
+    def train(p, x, aux, cfg: ArchConfig):
+        h, _ = L.attention_fwd(p["attn"], L.rms_norm(x, p["ln1"]), cfg=cfg,
+                               window=None)
+        x = x + h
+        x = x + _cross(p, L.rms_norm(x, p["lnx"]), _enc_kv(p, aux["enc_out"]))
+        x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+        return x, jnp.float32(0.0)
+
+    def prefill(p, x, aux, cfg: ArchConfig):
+        h, (k, v) = L.attention_fwd(p["attn"], L.rms_norm(x, p["ln1"]),
+                                    cfg=cfg, window=None)
+        x = x + h
+        xk, xv = _enc_kv(p, aux["enc_out"])
+        x = x + _cross(p, L.rms_norm(x, p["lnx"]), (xk, xv))
+        x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+        cap = aux.get("max_len")
+        if cap is not None and cap > k.shape[1]:
+            padw = ((0, 0), (0, cap - k.shape[1]), (0, 0), (0, 0))
+            k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+        return x, {"k": k, "v": v, "xk": xk, "xv": xv}
+
+    def decode(p, x, cache_l, pos, aux, cfg: ArchConfig):
+        h, kc, vc = L.attention_decode(p["attn"], L.rms_norm(x, p["ln1"]),
+                                       cache_l["k"], cache_l["v"], pos,
+                                       cfg=cfg)
+        x = x + h
+        x = x + _cross(p, L.rms_norm(x, p["lnx"]),
+                       (cache_l["xk"], cache_l["xv"]))
+        x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+        return x, cache_l | {"k": kc, "v": vc}
+
+    def cache_spec(cfg: ArchConfig, batch: int, max_len: int):
+        kvshape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+        src = max_len // cfg.enc_frames_ratio
+        xshape = (batch, src, cfg.n_kv_heads, cfg.hd)
+        z = lambda s: jnp.zeros(s, cfg.jnp_dtype)
+        return {"k": z(kvshape), "v": z(kvshape),
+                "xk": z(xshape), "xv": z(xshape)}
+
+    return KindSpec("xattn", init, train, prefill, decode, cache_spec)

@@ -1,0 +1,2 @@
+from repro.netsim.sim import (  # noqa: F401
+    NetConfig, cost_reduction_curve, simulate, speedup_curve)

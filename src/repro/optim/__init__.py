@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adam, make_optimizer, momentum, sgd)
+from repro.optim.schedules import (  # noqa: F401
+    constant, linear_scaled_step_decay, warmup_decay)

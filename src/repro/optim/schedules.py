@@ -1,0 +1,36 @@
+"""LR schedules. ``linear_scaled_step_decay`` is the paper's recipe:
+linear scaling with worker count (Goyal et al. 2017), gradual warmup over
+the first W steps, 10× decay at the 80/120-epoch marks (expressed in steps).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_decay(base_lr: float, warmup: int, total: int):
+    def f(step):
+        s = jnp.float32(step)
+        warm = base_lr * jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return warm * (1.0 - 0.9 * frac)
+    return f
+
+
+def linear_scaled_step_decay(base_lr: float, n_workers: int, warmup: int,
+                             decay_steps=(0.5, 0.75), total: int = 1000,
+                             decay: float = 0.1):
+    """Paper recipe: lr = base·n with warmup and 10× drops."""
+    scaled = base_lr * n_workers
+    marks = tuple(int(d * total) for d in decay_steps)
+
+    def f(step):
+        s = jnp.float32(step)
+        lr = scaled * jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+        for m in marks:
+            lr = jnp.where(s >= m, lr * decay, lr)
+        return lr
+    return f

@@ -1,0 +1,199 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs   / (chips × 197 TFLOP/s bf16)
+  memory     = HLO_bytes   / (chips × 819 GB/s HBM)
+  collective = coll_bytes  / (chips × 50 GB/s link)
+
+Methodology notes:
+
+* ``compiled.cost_analysis()`` counts while-loop bodies **once** (verified on
+  this XLA build), so scan-over-layers undercounts by the trip count. We
+  correct it by solving for per-scan-group body costs with probe compiles:
+  flops(counts) = base + Σ_g counts_g · body_g is linear in the per-kind
+  layer counts, so G+1 small compiles ({1,…}, {1,…,2_g,…}) recover base and
+  body_g exactly; the full-depth totals follow. The same correction applies
+  to bytes and to per-collective byte sums (collectives inside a scan body
+  appear once in the HLO text).
+
+* cost_analysis shapes are the per-device SPMD program, so FLOPs/bytes are
+  per-chip; the roofline divides the *global* corrected totals by chip
+  count, which is the same thing. We therefore report per-device terms
+  directly (no extra chip division on the already-per-device numbers).
+
+* Collective bytes: sum over collective ops in the per-device HLO of the
+  bytes each device moves across links — all-reduce 2×size (ring),
+  all-gather (k−1)/k×result, reduce-scatter (k−1)/k×input(≈result×k),
+  all-to-all size, collective-permute size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 / chip
+    hbm_bw: float = 819e9            # bytes/s / chip
+    link_bw: float = 50e9            # bytes/s / link (ICI)
+    hbm_bytes: float = 16e9          # v5e capacity
+
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*?(?:replica_groups=\{([^}]*(?:\{[^}]*\})*[^}]*)\})?")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    b = _DTYPE_BYTES.get(dtype, 4)
+    if not dims:
+        return float(b)
+    return float(np.prod([int(d) for d in dims.split(",") if d])) * b
+
+
+def _tuple_bytes(inner: str) -> float:
+    total = 0.0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", inner):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:   # iota format [ngroups, group_size]
+        return max(int(m.group(2)), 1)
+    return 2
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, float]:
+    """Per-device bytes moved over links, by collective type."""
+    out: Dict[str, float] = {}
+    for line in hlo.splitlines():
+        m = re.search(
+            r"=\s+(?:\(([^=]*?)\)|(\w+)\[([\d,]*)\]\S*)\s+"
+            r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+            r"reduce-scatter|all-to-all|collective-permute-start|"
+            r"collective-permute)\(", line)
+        if not m:
+            continue
+        tup, dt, dims, op = m.groups()
+        size = _tuple_bytes(tup) if tup else _shape_bytes(dt, dims)
+        k = _group_size(line)
+        op = op.replace("-start", "")
+        if op == "all-gather":
+            moved = size * (k - 1) / k
+        elif op == "all-reduce":
+            moved = 2.0 * size * (k - 1) / k
+        elif op == "reduce-scatter":
+            moved = size * (k - 1)          # input ≈ result × k
+        else:
+            moved = size
+        out[op] = out.get(op, 0.0) + moved
+    out["total"] = sum(v for kk, v in out.items() if kk != "total")
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                 # per-device, scan-corrected
+    bytes_hbm: float             # per-device, scan-corrected
+    coll_bytes: float            # per-device, scan-corrected
+    coll_by_op: Dict[str, float]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_global: float
+    useful_ratio: float          # MODEL_FLOPS / (flops × chips)
+    hbm_per_device: float        # from memory_analysis
+    fits: bool
+    raw: Dict[str, float]
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} "
+                f"| {self.t_compute*1e3:.2f} | {self.t_memory*1e3:.2f} "
+                f"| {self.t_collective*1e3:.2f} | {self.bottleneck} "
+                f"| {self.useful_ratio:.2f} "
+                f"| {self.hbm_per_device/1e9:.1f} "
+                f"| {'yes' if self.fits else 'NO'} |")
+
+
+def measure(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    ma = compiled.memory_analysis()
+    hbm = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+           + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": coll["total"],
+            "coll_by_op": coll,
+            "hbm": float(hbm)}
+
+
+def corrected_totals(full: Dict[str, float],
+                     probes: Dict[str, Dict[str, float]],
+                     base_counts: Dict[str, int],
+                     full_counts: Dict[str, int]) -> Dict[str, float]:
+    """Solve flops(counts) = base + Σ c_g·body_g from probe measurements.
+
+    probes: {"base": measure(counts=1…), "<kind>": measure(counts=1…, kind+1)}
+    Returns corrected totals for the *full* layer counts. Falls back to raw
+    full-compile numbers for quantities where probes are inconsistent.
+    """
+    out = dict(full)
+    for key in ("flops", "bytes", "coll"):
+        base_m = probes["base"][key]
+        bodies = {}
+        for g, cnt in full_counts.items():
+            pk = probes.get(g)
+            if pk is None:
+                continue
+            bodies[g] = max(pk[key] - base_m, 0.0)
+        const = base_m - sum(bodies.get(g, 0.0) * base_counts.get(g, 1)
+                             for g in full_counts)
+        corr = const + sum(bodies.get(g, 0.0) * c
+                           for g, c in full_counts.items())
+        # sanity: corrected must be ≥ raw full-compile measurement
+        out[key] = max(corr, full[key])
+    return out
+
+
+def analyze_compiled(arch: str, shape: str, mesh_desc: str, chips: int,
+                     totals: Dict[str, float], model_flops_global: float,
+                     hw: HW = HW()) -> RooflineReport:
+    t_c = totals["flops"] / hw.peak_flops
+    t_m = totals["bytes"] / hw.hbm_bw
+    t_l = totals["coll"] / hw.link_bw
+    terms = {"compute": t_c, "memory": t_m, "collective": t_l}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops_global / max(totals["flops"] * chips, 1.0)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+        flops=totals["flops"], bytes_hbm=totals["bytes"],
+        coll_bytes=totals["coll"], coll_by_op=totals.get("coll_by_op", {}),
+        t_compute=t_c, t_memory=t_m, t_collective=t_l,
+        bottleneck=bottleneck,
+        model_flops_global=model_flops_global,
+        useful_ratio=useful,
+        hbm_per_device=totals["hbm"],
+        fits=totals["hbm"] <= hw.hbm_bytes,
+        raw=dict(totals))

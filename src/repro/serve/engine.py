@@ -1,0 +1,65 @@
+"""Serving engine: batched prefill + decode over the KV/state cache.
+
+``make_serve_steps`` builds the jitted prefill / decode closures (these are
+what the decode-shape dry-runs lower); :class:`ServeEngine` is a small
+batched greedy/temperature sampler on top for the examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import Model
+
+
+def make_serve_steps(model: Model, max_len: Optional[int] = None):
+    prefill = jax.jit(lambda params, inputs: model.prefill(params, inputs,
+                                                           max_len=max_len))
+
+    @jax.jit
+    def decode(params, cache, token, pos):
+        return model.decode_step(params, cache, {"token": token}, pos)
+
+    return prefill, decode
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Model
+    params: Any
+    max_len: int = 512
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        self._prefill, self._decode = make_serve_steps(self.model,
+                                                       self.max_len)
+
+    def generate(self, prompts: jnp.ndarray, n_new: int,
+                 key: Optional[jax.Array] = None,
+                 extra_inputs: Optional[Dict[str, Any]] = None):
+        """prompts: (B, S) int32 -> (B, n_new) generated tokens."""
+        B, S = prompts.shape
+        assert S + n_new <= self.max_len, "raise ServeEngine.max_len"
+        inputs = {"tokens": prompts, **(extra_inputs or {})}
+        last, cache = self._prefill(self.params, inputs)
+        out = []
+        tok = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+        pos = S
+        for i in range(n_new):
+            out.append(tok)
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(pos))
+            if self.temperature > 0 and key is not None:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, logits / self.temperature, axis=-1)[:, None]
+            else:
+                tok = jnp.argmax(logits, axis=-1)[:, None]
+            tok = tok.astype(jnp.int32)
+            pos += 1
+        return jnp.concatenate(out, axis=1)

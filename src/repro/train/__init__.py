@@ -1,0 +1,2 @@
+from repro.train.trainer import TrainConfig, make_train_setup  # noqa: F401
+from repro.train.simulator import SimulatorConfig, run_simulation  # noqa: F401

@@ -1,0 +1,204 @@
+"""Mesh trainer: stacked-replica data parallelism with RPS aggregation.
+
+Layout (DESIGN.md §4/§5):
+
+  rps_model archs — every RPS worker holds a full TP-sharded model replica.
+    params: (n_rps, …) with the worker dim over the RPS axes (("data",) on a
+    single pod, ("pod","data") across pods) and tensor-parallel dims over
+    "model". Step = local SGD per worker (elementwise over the stacked dim)
+    followed by the drop-masked RS+AG *model* exchange.
+
+  rps_grad archs (llama3-405b, kimi-k2) — replicas only across pods (the
+    unreliable DCN direction); within a pod, params are FSDP-sharded over
+    "data" + TP over "model". Step = per-pod gradients, drop-tolerant
+    *gradient* exchange across pods (grad_renorm mode), then the update.
+    On a single pod n_rps = 1 and the exchange degenerates to local — ICI is
+    reliable (DESIGN.md §5).
+
+The exchange runs in a partial-manual ``jax.shard_map`` over the RPS axes
+only; model/FSDP dims stay under GSPMD, and ``rps_exchange_leaf`` keeps the
+model-sharded dim of each leaf intact so the lowered HLO is exactly one
+reduce-scatter + one all-gather per leaf-group over the unreliable axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core import rps as rps_lib
+from repro.launch import sharding as shlib
+from repro.models.registry import Model
+from repro.optim import make_optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "sgd"                 # paper-faithful default
+    lr: float = 0.05
+    drop_rate: float = 0.0
+    aggregator: str = "rps_model"          # rps_model | rps_grad |
+                                           # allreduce_model | allreduce_grad
+                                           # | none
+    microbatch: int = 1                    # grad-accumulation splits
+    exchange_dtype: str = "float32"        # RS accumulation dtype
+    exchange_every: int = 1                # steps between exchanges
+                                           # (>1 = local-SGD variant,
+                                           # beyond-paper)
+
+
+def _is_model_mode(agg: str) -> bool:
+    return agg.endswith("_model")
+
+
+def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
+                     mesh: Mesh, *, rps_axes: Tuple[str, ...],
+                     fsdp_axis: Optional[str] = None):
+    """Returns (init_state, train_step, shardings) for the given mesh.
+
+    init_state(key) -> (params, opt_state): worker-stacked, identical
+    replicas (the paper initialises all x_1^(i) equal).
+    train_step(params, opt_state, batch, step, key) -> (params, opt_state,
+    metrics). batch has leading worker dim n_rps.
+    """
+    n_rps = 1
+    for a in rps_axes:
+        n_rps *= mesh.shape[a]
+    opt = make_optimizer(tcfg.optimizer)
+
+    def init_state(key):
+        p1 = model.init(key)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_rps,) + x.shape).copy(), p1)
+        return stacked, opt.init(stacked)
+
+    # ---- shardings --------------------------------------------------------
+    def state_shardings(params_shape):
+        pspecs = shlib.param_specs(params_shape, cfg, worker_axes=rps_axes,
+                                   fsdp_axis=fsdp_axis, stacked=True)
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs), pspecs
+
+    def _exchange(tree, key, mode):
+        """Drop-masked exchange over the RPS axes (stacked worker dim 0).
+
+        Fully-manual shard_map over *all* mesh axes with the param
+        PartitionSpecs as in_specs: every leaf arrives as its local shard,
+        the RS+AG runs over the RPS axes only, and the TP/FSDP dims are
+        plain local data. (A partial-manual region left the model dim to
+        shardy, which de-sharded it — full params in f32 per device.)"""
+        if tcfg.aggregator == "none" or n_rps == 1:
+            return tree
+        if tcfg.aggregator.startswith("allreduce"):
+            return jax.tree.map(lambda x: jnp.broadcast_to(
+                jnp.mean(x, axis=0, keepdims=True), x.shape), tree)
+        especs = shlib.param_specs(jax.eval_shape(lambda t: t, tree), cfg,
+                                   worker_axes=rps_axes,
+                                   fsdp_axis=fsdp_axis, stacked=True)
+        rmode = "model" if _is_model_mode(tcfg.aggregator) else "grad_renorm"
+        mode = mode or rmode
+
+        def body(t, key):
+            masks = rps_lib.sample_masks(key, n_rps, tcfg.drop_rate)
+
+            def one(x):
+                shp = x.shape
+                out = rps_lib.rps_exchange_flat(
+                    x.reshape(-1), key, tcfg.drop_rate, rps_axes,
+                    mode=mode, masks=masks,
+                    rs_dtype=jnp.dtype(tcfg.exchange_dtype))
+                return out.reshape(shp)
+
+            return jax.tree.map(one, t)
+
+        fn = jax.shard_map(body, mesh=mesh,
+                           in_specs=(especs, P()), out_specs=especs,
+                           axis_names=set(mesh.axis_names))
+        return fn(tree, key)
+
+    # ---- the step ---------------------------------------------------------
+    def train_step(params, opt_state, batch, step, key):
+        # XLA leaves while-loop carries (the grad accumulator) replicated
+        # without explicit annotations — pin grads to the param shardings.
+        _pspecs = shlib.param_specs(jax.eval_shape(lambda t: t, params), cfg,
+                                    worker_axes=rps_axes,
+                                    fsdp_axis=fsdp_axis, stacked=True)
+
+        def _pin(tree):
+            if not cfg.shard_acts:
+                return tree
+            return jax.tree.map(
+                lambda x, sp: jax.lax.with_sharding_constraint(x, sp),
+                tree, _pspecs)
+
+        def worker_loss(p, b):
+            loss, metrics = model.loss(p, b)
+            return loss, metrics
+
+        # spmd_axis_name shards every vmapped intermediate's worker dim
+        # over the RPS axes — without it the scanned activations compile
+        # replicated (16x memory; observed on mixtral before the fix)
+        spmd = (rps_axes if len(rps_axes) > 1 else rps_axes[0]) \
+            if rps_axes else None
+        vmapped = jax.vmap(worker_loss, spmd_axis_name=spmd)
+
+        def total_loss(ps, bs):
+            losses, metrics = vmapped(ps, bs)
+            return jnp.sum(losses), metrics
+
+        if tcfg.microbatch > 1:
+            mb = jax.tree.map(
+                lambda x: x.reshape((x.shape[0], tcfg.microbatch,
+                                     x.shape[1] // tcfg.microbatch)
+                                    + x.shape[2:]), batch)
+
+            def acc(g_acc, b):
+                (l, _), g = jax.value_and_grad(total_loss, has_aux=True)(
+                    params, b)
+                g_acc = jax.tree.map(jnp.add, g_acc, _pin(g))
+                return _pin(g_acc), l
+
+            # accumulate in the param dtype: the f32 buffer would be an
+            # extra params-sized allocation; plain-SGD + model averaging is
+            # robust to bf16 grad accumulation (paper recipe)
+            g0 = _pin(jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype),
+                                   params))
+            grads, losses = jax.lax.scan(
+                acc, g0, jax.tree.map(lambda x: jnp.moveaxis(x, 1, 0), mb))
+            grads = jax.tree.map(lambda g: g / tcfg.microbatch, grads)
+            loss = jnp.mean(losses)
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                total_loss, has_aux=True)(params, batch)
+            grads = _pin(grads)
+
+        lr = jnp.float32(tcfg.lr)
+        if _is_model_mode(tcfg.aggregator) or tcfg.aggregator == "none":
+            # local step, then model exchange (Algorithm 1)
+            new_params, opt_state = opt.update(grads, opt_state, params, lr)
+            if tcfg.exchange_every > 1:
+                new_params = jax.lax.cond(
+                    step % tcfg.exchange_every == 0,
+                    lambda t: _exchange(t, key, None),
+                    lambda t: t, new_params)
+            else:
+                new_params = _exchange(new_params, key, None)
+        else:
+            # gradient exchange, then step
+            grads = _exchange(grads, key,
+                              "grad_renorm" if tcfg.aggregator == "rps_grad"
+                              else None)
+            new_params, opt_state = opt.update(grads, opt_state, params, lr)
+        mloss = loss / n_rps
+        return new_params, opt_state, {"loss": mloss,
+                                       "lr": lr,
+                                       **{k: jnp.mean(v) for k, v in
+                                          (metrics or {}).items()}}
+
+    return init_state, train_step, state_shardings

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests must see the real (1-device) CPU platform — the 512-device forcing
+# belongs to launch/dryrun.py ONLY. Guard against accidental leakage.
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "do not run tests with the dry-run XLA_FLAGS set"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

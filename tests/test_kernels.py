@@ -1,0 +1,119 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.masked_avg import masked_avg_pallas
+from repro.kernels.rglru_scan import rglru_pallas
+from repro.kernels.rwkv6_scan import rwkv6_pallas
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n", [2, 8, 16, 32])
+@pytest.mark.parametrize("d", [7, 512, 1000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_avg_sweep(n, d, dtype):
+    blocks = jnp.asarray(RNG.normal(size=(n, d)), dtype)
+    mask = jnp.asarray(RNG.integers(0, 2, size=n), jnp.float32).at[0].set(1)
+    got = masked_avg_pallas(blocks, mask, interpret=True)
+    want = ref.masked_avg_ref(blocks, mask)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_masked_avg_all_dropped_but_owner():
+    blocks = jnp.asarray(RNG.normal(size=(4, 64)), jnp.float32)
+    mask = jnp.zeros((4,)).at[2].set(1.0)
+    got = masked_avg_pallas(blocks, mask, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(blocks[2]),
+                               rtol=1e-6)
+
+
+def _rwkv_inputs(B, S, h, dk, dv, dtype=jnp.float32):
+    r = jnp.asarray(RNG.normal(size=(B, S, h, dk)) * 0.5, dtype)
+    k = jnp.asarray(RNG.normal(size=(B, S, h, dk)) * 0.5, dtype)
+    v = jnp.asarray(RNG.normal(size=(B, S, h, dv)) * 0.5, dtype)
+    w = jnp.asarray(RNG.uniform(0.05, 0.995, size=(B, S, h, dk)), dtype)
+    u = jnp.asarray(RNG.normal(size=(h, dk)) * 0.1, jnp.float32)
+    return r, k, v, w, u
+
+
+@pytest.mark.parametrize("S,chunk", [(1, 16), (16, 16), (33, 16), (130, 32)])
+@pytest.mark.parametrize("dk,dv", [(8, 8), (16, 32)])
+def test_rwkv6_pallas_sweep(S, chunk, dk, dv):
+    r, k, v, w, u = _rwkv_inputs(2, S, 2, dk, dv)
+    got = rwkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=True)
+    want = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("S", [5, 64, 100])
+def test_rwkv6_xla_chunked_matches_ref(S):
+    r, k, v, w, u = _rwkv_inputs(2, S, 3, 16, 16)
+    got = ops.rwkv6(r, k, v, w, u, backend="xla", chunk=16)
+    want = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want, np.float32),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv6_bf16():
+    r, k, v, w, u = _rwkv_inputs(1, 32, 2, 16, 16, jnp.bfloat16)
+    got = rwkv6_pallas(r, k, v, w, u, chunk=16, interpret=True)
+    want = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=0.1,
+                               rtol=0.1)
+
+
+def test_rwkv6_step_consistency():
+    """Decode one-step recurrence folds to the same as the full scan."""
+    B, S, h, dk, dv = 1, 7, 2, 8, 8
+    r, k, v, w, u = _rwkv_inputs(B, S, h, dk, dv)
+    full = np.asarray(ref.rwkv6_ref(r, k, v, w, u))
+    state = jnp.zeros((B, h, dk, dv), jnp.float32)
+    outs = []
+    for t in range(S):
+        o, state = ops.rwkv6_step(r[:, t], k[:, t], v[:, t], w[:, t], u,
+                                  state)
+        outs.append(np.asarray(o))
+    step = np.stack(outs, axis=1).reshape(full.shape)
+    np.testing.assert_allclose(step, full, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("S,d,chunk,tile", [(1, 8, 16, 64), (64, 64, 16, 32),
+                                            (130, 70, 32, 64)])
+def test_rglru_pallas_sweep(S, d, chunk, tile):
+    x = jnp.asarray(RNG.normal(size=(2, S, d)), jnp.float32)
+    a = jnp.asarray(RNG.uniform(0.1, 0.999, size=(2, S, d)), jnp.float32)
+    got = rglru_pallas(x, a, chunk=chunk, tile_d=tile, interpret=True)
+    want, _ = ref.rglru_ref(x, a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_rglru_assoc_matches_ref():
+    x = jnp.asarray(RNG.normal(size=(2, 57, 33)), jnp.float32)
+    a = jnp.asarray(RNG.uniform(0.1, 0.999, size=(2, 57, 33)), jnp.float32)
+    got, last = ops.rglru(x, a, backend="xla")
+    want, want_last = ref.rglru_ref(x, a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(want_last),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_step_matches_scan():
+    x = jnp.asarray(RNG.normal(size=(2, 9, 16)), jnp.float32)
+    a = jnp.asarray(RNG.uniform(0.1, 0.99, size=(2, 9, 16)), jnp.float32)
+    want, _ = ref.rglru_ref(x, a)
+    h = jnp.zeros((2, 16), jnp.float32)
+    for t in range(9):
+        h = ops.rglru_step(x[:, t], a[:, t], h)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(want[:, t]),
+                                   atol=1e-5, rtol=1e-5)

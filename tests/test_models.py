@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (reduced variants): one forward + train step
++ prefill + decode on CPU, asserting shapes and finiteness; plus
+grouped-vs-interleaved equivalence and decode-vs-forward consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.models.inputs import make_batch
+
+B, S = 2, 64
+
+
+def _finite(x):
+    return bool(np.isfinite(np.asarray(x, np.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, grouped=False)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B, S)
+    (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+        params, batch)
+    assert _finite(loss)
+    assert all(_finite(g) for g in jax.tree.leaves(grads))
+    pre = {k: v for k, v in batch.items() if k != "labels"}
+    last, cache = model.prefill(params, pre)
+    assert last.shape == (B, cfg.vocab_size)
+    assert _finite(last)
+    logits, cache = model.decode_step(
+        params, cache, {"token": jnp.zeros((B, 1), jnp.int32)}, jnp.int32(S))
+    assert logits.shape == (B, cfg.vocab_size)
+    assert _finite(logits)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "rwkv6-1.6b",
+                                  "mixtral-8x22b"])
+def test_grouped_matches_interleaved_for_uniform_stacks(arch):
+    """For single-kind architectures, grouped scan == unrolled layers."""
+    cfg = dataclasses.replace(get_config(arch).reduced(), n_layers=3)
+    mg = build_model(cfg, grouped=True)
+    mi = build_model(cfg, grouped=False)
+    params = mg.init(jax.random.PRNGKey(1))
+    batch = make_batch(cfg, B, 32)
+    lg, _ = mg.loss(params, batch)
+    li, _ = mi.loss(params, batch)
+    np.testing.assert_allclose(float(lg), float(li), rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "rwkv6-1.6b",
+                                  "recurrentgemma-9b", "gemma3-1b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode logits == full-sequence forward logits."""
+    cfg = get_config(arch).reduced()
+    if cfg.window is not None:
+        # ring-buffer caches require prompt length % window == 0
+        cfg = dataclasses.replace(cfg, window=16)
+    model = build_model(cfg, grouped=False)
+    params = model.init(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(0)
+    S0, K = 32, 4
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(B, S0 + K)),
+                       jnp.int32)
+
+    # full forward logits via loss-path head: use prefill on growing prefixes
+    want_last, _ = model.prefill(params, {"tokens": toks})
+
+    last, cache = model.prefill(params, {"tokens": toks[:, :S0]},
+                                max_len=S0 + K)
+    pos = S0
+    got = last
+    for t in range(K):
+        got, cache = model.decode_step(params, cache,
+                                       {"token": toks[:, S0 + t:S0 + t + 1]},
+                                       jnp.int32(pos))
+        pos += 1
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want_last, np.float32),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_moe_dispatch_matches_dense_reference():
+    """Sort-based capacity dispatch == direct per-token expert mix when
+    capacity is ample."""
+    from repro.models import layers as L
+    cfg = dataclasses.replace(get_config("mixtral-8x22b").reduced(),
+                              capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    p = L.init_moe(key, cfg)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, 16, cfg.d_model))
+                    * 0.5, jnp.float32)
+    got, _ = L.moe(p, x, cfg)
+
+    # dense reference
+    T = 2 * 16
+    xt = x.reshape(T, -1)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    vals, idx = jax.lax.top_k(probs, cfg.top_k)
+    vals = vals / vals.sum(-1, keepdims=True)
+    want = np.zeros((T, cfg.d_model), np.float32)
+    for t in range(T):
+        for j in range(cfg.top_k):
+            e = int(idx[t, j])
+            h = np.asarray(xt[t] @ p["wi"][e])
+            g = np.asarray(xt[t] @ p["wg"][e])
+            act = (g / (1 + np.exp(-g))) * h
+            want[t] += float(vals[t, j]) * (act @ np.asarray(p["wo"][e]))
+    np.testing.assert_allclose(np.asarray(got).reshape(T, -1), want,
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_blocked_local_attention_matches_masked_full():
+    from repro.models import layers as L
+    rng = np.random.default_rng(0)
+    Bq, Sq, h, hd, w = 2, 96, 4, 16, 16
+    q = jnp.asarray(rng.normal(size=(Bq, Sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(Bq, Sq, 2, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(Bq, Sq, 2, hd)), jnp.float32)
+    got = L.blocked_local_attention(q, k, v, window=w)
+    want = L.full_attention(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_param_count_sane():
+    cfg = get_config("deepseek-7b")
+    n = cfg.param_count()
+    assert 6e9 < n < 8.5e9        # "7B"
+    moe = get_config("mixtral-8x22b")
+    assert 1.2e11 < moe.param_count() < 1.6e11      # ~141B total
+    assert moe.param_count(active_only=True) < 0.45e11  # ~39B active

@@ -1,0 +1,127 @@
+"""RPS semantics: global-view exchange vs the W-matrix oracle, collective
+path vs global path (subprocess with forced host devices), and the paper's
+structural properties of W."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import rps, wmatrix
+
+RNG = np.random.default_rng(3)
+
+
+def _oracle_apply(V, rs, ag, n):
+    W = wmatrix.build_w(n, np.arange(n), rs, ag)
+    blk = V.shape[1] // n
+    out = np.empty_like(V)
+    for j in range(n):
+        out[:, j * blk:(j + 1) * blk] = W[j].T @ V[:, j * blk:(j + 1) * blk]
+    return out
+
+
+@pytest.mark.parametrize("n,p", [(4, 0.0), (4, 0.3), (8, 0.1), (16, 0.5)])
+def test_global_exchange_matches_wmatrix(n, p):
+    D = n * 13
+    V = RNG.normal(size=(n, D)).astype(np.float32)
+    key = jax.random.PRNGKey(7)
+    got = np.asarray(rps.rps_exchange_global(
+        {"x": jnp.asarray(V)}, key, p, n, mode="model")["x"])
+    rs, ag = jax.tree.map(np.asarray, rps.sample_masks(key, n, p))
+    want = _oracle_apply(V, rs, ag, n)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_global_exchange_p0_is_mean():
+    n, D = 8, 64
+    V = RNG.normal(size=(n, D)).astype(np.float32)
+    out = np.asarray(rps.rps_exchange_global(
+        {"x": jnp.asarray(V)}, jax.random.PRNGKey(0), 0.0, n)["x"])
+    np.testing.assert_allclose(out, np.broadcast_to(V.mean(0), V.shape),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_grad_mode_zero_on_ag_drop():
+    n, D = 4, 16
+    V = np.abs(RNG.normal(size=(n, D))).astype(np.float32) + 1.0
+    key = jax.random.PRNGKey(123)
+    out = np.asarray(rps.rps_exchange_global(
+        {"x": jnp.asarray(V)}, key, 0.6, n, mode="grad")["x"])
+    rs, ag = jax.tree.map(np.asarray, rps.sample_masks(key, n, 0.6))
+    blk = D // n
+    for i in range(n):
+        for j in range(n):
+            piece = out[i, j * blk:(j + 1) * blk]
+            if not ag[i, j]:
+                assert np.all(piece == 0.0)
+            else:
+                expect = (rs[:, j, None]
+                          * V[:, j * blk:(j + 1) * blk]).sum(0) / n
+                np.testing.assert_allclose(piece, expect, rtol=1e-5)
+
+
+def test_model_mode_preserves_mean_in_expectation():
+    """E[x̄_{t+1}] = v̄_t (Lemma 4: E[Δx̄] = −γ·ḡ). Monte-Carlo check."""
+    n, D = 8, 32
+    V = RNG.normal(size=(n, D)).astype(np.float32)
+    acc = np.zeros(D)
+    T = 400
+    for t in range(T):
+        out = np.asarray(rps.rps_exchange_global(
+            {"x": jnp.asarray(V)}, jax.random.PRNGKey(t), 0.3, n)["x"])
+        acc += out.mean(0)
+    np.testing.assert_allclose(acc / T, V.mean(0), atol=0.05)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([2, 4, 8]), p=st.floats(0.0, 0.9),
+       seed=st.integers(0, 100))
+def test_w_columns_are_convex_combinations(n, p, seed):
+    """Every new block is a convex combination of the workers' blocks."""
+    rng = np.random.default_rng(seed)
+    owners, rsm, agm = wmatrix.sample_masks(rng, n, p)
+    W = wmatrix.build_w(n, owners, rsm, agm)
+    for j in range(n):
+        cols = W[j].sum(axis=0)
+        np.testing.assert_allclose(cols, np.ones(n), atol=1e-9)
+        assert (W[j] >= 0).all()
+
+
+def test_collective_matches_global_8dev():
+    """Exact agreement of the shard_map collective path with the global-view
+    path, run in a subprocess with 8 forced host devices."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, %r)
+        import jax, jax.numpy as jnp, numpy as np, functools
+        from jax.sharding import PartitionSpec as P
+        from repro.core import rps
+        n, D, p = 8, 104, 0.25
+        mesh = jax.make_mesh((n,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        V = np.random.default_rng(5).normal(size=(n, D)).astype(np.float32)
+        key = jax.random.PRNGKey(11)
+        def body(v, k):
+            return rps.rps_exchange_flat(v[0], k, p, "data",
+                                         mode="model")[None]
+        f = jax.shard_map(body, mesh=mesh, in_specs=(P("data"), P()),
+                          out_specs=P("data"), axis_names={"data"})
+        got = np.asarray(jax.jit(f)(jnp.asarray(V), key))
+        want = np.asarray(rps.rps_exchange_global(
+            {"x": jnp.asarray(V)}, key, p, n)["x"])
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+        print("SUBPROC_OK")
+    """) % os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=300)
+    assert "SUBPROC_OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,113 @@
+"""Optimizers, data pipeline, checkpointing, schedules, roofline parsing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.data.synthetic import CharLMTask, TeacherTask
+from repro.optim import make_optimizer
+from repro.optim.schedules import linear_scaled_step_decay, warmup_decay
+from repro.roofline.analysis import (collective_bytes_from_hlo,
+                                     corrected_totals)
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adam"])
+def test_optimizer_decreases_quadratic(name):
+    opt = make_optimizer(name)
+    params = {"x": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    lr = jnp.float32(0.1)
+    for _ in range(150):
+        grads = jax.tree.map(lambda p: 2 * p, params)
+        params, state = opt.update(grads, state, params, lr)
+    assert float(jnp.sum(params["x"] ** 2)) < 1e-3
+
+
+def test_sgd_matches_closed_form():
+    opt = make_optimizer("sgd")
+    p = {"w": jnp.asarray([1.0])}
+    g = {"w": jnp.asarray([0.5])}
+    new, _ = opt.update(g, opt.init(p), p, jnp.float32(0.2))
+    np.testing.assert_allclose(np.asarray(new["w"]), [0.9], rtol=1e-6)
+
+
+def test_data_determinism():
+    t = TeacherTask(seed=4)
+    x1, y1 = t.batch(3, 17, 8)
+    x2, y2 = t.batch(3, 17, 8)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    x3, _ = t.batch(4, 17, 8)
+    assert not np.allclose(np.asarray(x1), np.asarray(x3))
+
+
+def test_charlm_entropy_floor():
+    t = CharLMTask(vocab=16, seq_len=32, order_temp=2.0, seed=1)
+    floor = t.entropy_floor()
+    assert 0.0 < floor < np.log(16)
+    b = t.batch(0, 0, 4)
+    assert b["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "b": [jnp.ones((4,), jnp.bfloat16), jnp.int32(7)]}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck.npz")
+        save_pytree(path, tree)
+        out = load_pytree(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_schedules():
+    f = warmup_decay(1.0, warmup=10, total=100)
+    assert float(f(0)) < float(f(9)) <= 1.0
+    assert float(f(99)) < float(f(20))
+    g = linear_scaled_step_decay(0.1, n_workers=16, warmup=5, total=100)
+    assert abs(float(g(10)) - 1.6) < 1e-5          # linear scaling rule
+    assert float(g(60)) < float(g(10))             # decayed
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(bf16[1,1024]{1,0} %x), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  %ar = f32[512]{0} all-reduce(f32[512]{0} %y), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(f32[1024]{0} %z), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+"""
+    got = collective_bytes_from_hlo(hlo)
+    assert abs(got["all-gather"] - 16 * 1024 * 2 * 15 / 16) < 1
+    assert abs(got["all-reduce"] - 2 * 512 * 4 * 3 / 4) < 1
+    assert abs(got["reduce-scatter"] - 64 * 4 * 15) < 1
+    assert got["total"] == pytest.approx(
+        got["all-gather"] + got["all-reduce"] + got["reduce-scatter"])
+
+
+def test_corrected_totals_linear_model():
+    # flops(c) = 100 + 7·c1 + 3·c2
+    mk = lambda f: {"flops": f, "bytes": f, "coll": 0.0}
+    probes = {"base": mk(100 + 7 + 3), "g1": mk(100 + 14 + 3),
+              "g2": mk(100 + 7 + 6)}
+    full = mk(110.0)
+    out = corrected_totals(full, probes, {"g1": 1, "g2": 1},
+                           {"g1": 10, "g2": 4})
+    assert out["flops"] == pytest.approx(100 + 70 + 12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_markov_sampler_valid_tokens(seed):
+    t = CharLMTask(vocab=8, seq_len=16, seed=seed)
+    b = t.batch(seed % 4, seed, 2)
+    toks = np.asarray(b["tokens"])
+    assert toks.min() >= 0 and toks.max() < 8

@@ -1,0 +1,86 @@
+"""End-to-end behaviour tests: the paper's claims as executable assertions.
+
+1. RPS model averaging at the paper's drop rates converges like the reliable
+   baseline (Fig 4).
+2. Naive gradient averaging degrades at the same drop rate (Fig 5).
+3. Larger n shrinks the drop-rate penalty (Corollary 2 discussion).
+4. Colocated Web service speeds up when learning tolerates drops (Figs 6/7).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import TeacherTask, make_worker_streams
+from repro.netsim import NetConfig, simulate
+from repro.train.simulator import SimulatorConfig, run_simulation
+
+
+def _mlp_problem(seed=0, hetero=0.3):
+    task = TeacherTask(d_in=24, n_classes=8, hetero=hetero, seed=seed)
+
+    def init_fn(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (24, 48)) * 0.1,
+                "w2": jax.random.normal(k2, (48, 8)) * 0.1}
+
+    def loss_fn(p, batch):
+        x, y = batch
+        h = jnp.tanh(x @ p["w1"])
+        logits = h @ p["w2"]
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, y[:, None], -1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    return task, init_fn, loss_fn
+
+
+def _run(n, p, agg, steps=120, lr=0.2, seed=0):
+    task, init_fn, loss_fn = _mlp_problem(seed)
+    batch_fn = make_worker_streams(task, n, 32)
+    scfg = SimulatorConfig(n_workers=n, drop_rate=p, aggregator=agg, lr=lr,
+                           steps=steps, eval_every=steps - 1, seed=seed)
+    return run_simulation(loss_fn, init_fn, batch_fn, scfg)
+
+
+def test_rps_matches_reliable_baseline():
+    base = _run(16, 0.0, "allreduce_model")
+    rps10 = _run(16, 0.1, "rps_model")
+    assert rps10["final_loss"] < base["final_loss"] * 1.10 + 0.02
+
+
+def test_gradient_averaging_degrades():
+    """Fig 5: at the same p, model averaging beats naive grad averaging."""
+    rps = _run(16, 0.2, "rps_model")
+    gavg = _run(16, 0.2, "rps_grad")
+    assert gavg["final_loss"] > rps["final_loss"] * 1.05
+
+
+def test_larger_network_more_tolerant():
+    """Consensus error per worker shrinks as n grows at fixed p."""
+    small = _run(4, 0.3, "rps_model")
+    large = _run(16, 0.3, "rps_model")
+    assert large["consensus"][-1] / 16 < small["consensus"][-1] / 4 * 1.5
+    assert large["final_loss"] <= small["final_loss"] * 1.1 + 0.02
+
+
+def test_consensus_bounded_not_divergent():
+    h = _run(16, 0.3, "rps_model", steps=150)
+    c = h["consensus"]
+    assert c[-1] < 10.0 * max(c[1], 1e-6) + 1.0
+
+
+def test_netsim_tradeoff():
+    cfg = NetConfig(sim_s=0.5)
+    r0 = simulate(5000, 0.0, cfg)
+    r1 = simulate(5000, 1.0, cfg)
+    assert r0["learning_drop_frac"] < 0.01
+    assert r1["learning_drop_frac"] > 0.02
+    assert r1["avg_completion_ms"] < r0["avg_completion_ms"]
+
+
+def test_netsim_drop_monotone_in_prio():
+    cfg = NetConfig(sim_s=0.4)
+    drops = [simulate(5000, p, cfg)["learning_drop_frac"]
+             for p in (0.0, 0.5, 1.0)]
+    assert drops[0] <= drops[1] + 1e-9 <= drops[2] + 2e-2

@@ -1,0 +1,63 @@
+"""Property tests of the α₁/α₂ theory (Lemmas 7/8, Corollary 2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import theory, wmatrix
+
+NS = st.sampled_from([4, 8, 16, 32])
+PS = st.floats(0.005, 0.6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=NS, p=PS)
+def test_bounds_in_unit_interval(n, p):
+    a1 = theory.alpha1_bound(n, p)
+    a2 = theory.alpha2_bound(n, p)
+    assert 0.0 <= a2 <= 1.0 and 0.0 <= a1 <= 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([8, 16]), p=st.floats(0.01, 0.4),
+       seed=st.integers(0, 50))
+def test_bounds_dominate_monte_carlo(n, p, seed):
+    a1_mc, a2_mc = wmatrix.monte_carlo_alphas(n, p, trials=300, seed=seed)
+    assert a1_mc <= theory.alpha1_bound(n, p) + 0.05
+    assert a2_mc <= theory.alpha2_bound(n, p) + 0.05
+
+
+def test_alpha2_diminishes_with_n():
+    """Paper's headline: the drop-rate influence shrinks as n grows."""
+    p = 0.2
+    vals = [theory.alpha2_bound(n, p) for n in (4, 8, 16, 32, 64, 128)]
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+
+
+def test_alpha_asymptotics_in_p():
+    """α₁ = O(p): Monte-Carlo α₁ tracks p; α₂ = O(p(1−p)/n)."""
+    n = 16
+    for p in (0.05, 0.1, 0.2):
+        a1, a2 = wmatrix.monte_carlo_alphas(n, p, trials=400, seed=1)
+        assert abs(a1 - p) < 0.05          # α₁ ≈ p
+        assert a2 < 4 * p * (1 - p) / n + 0.02
+
+
+def test_corollary2_rate_improves_with_n():
+    T = 10_000
+    rates = [theory.corollary2_rate(n, 0.1, T) for n in (4, 16, 64)]
+    assert rates[0] > rates[1] > rates[2]
+
+
+def test_corollary2_rate_mild_in_p_for_large_n():
+    """At n=64 the predicted rate at p=0.1 is within a few % of p=0."""
+    T = 10_000
+    r0 = theory.corollary2_rate(64, 1e-6, T)
+    r1 = theory.corollary2_rate(64, 0.1, T)
+    assert r1 / r0 < 1.35
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=NS, p=st.floats(0.001, 0.5))
+def test_lr_positive(n, p):
+    assert theory.corollary2_lr(n, p, 1000) > 0

@@ -1,0 +1,46 @@
+"""Render results/dryrun_*.json into the EXPERIMENTS.md roofline tables."""
+import json
+import sys
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def rows(results, mesh):
+    out = []
+    for r in sorted(results, key=lambda r: (r["arch"],
+                                            ORDER.index(r["shape"]))):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']} | — | — | — |")
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rf['t_compute']*1e3:.2f} | {rf['t_memory']*1e3:.2f} "
+            f"| {rf['t_collective']*1e3:.2f} | **{rf['bottleneck']}** "
+            f"| {rf['useful_ratio']:.2f} "
+            f"| {rf['hbm_per_device']/1e9:.1f} "
+            f"| {'yes' if rf['fits'] else 'NO'} |")
+    return out
+
+
+def main(path):
+    with open(path) as f:
+        results = json.load(f)
+    hdr = ("| arch | shape | t_comp ms | t_mem ms | t_coll ms | bottleneck "
+           "| useful | HBM GB/dev | fits 16GB |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### Mesh {mesh}\n")
+        print(hdr)
+        print("\n".join(rows(results, mesh)))
+    ok = sum(r["status"] == "ok" for r in results)
+    skip = sum("skipped" in str(r["status"]) for r in results)
+    print(f"\n{ok} ok / {skip} skipped / {len(results)-ok-skip} failed "
+          f"of {len(results)}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline.json")
