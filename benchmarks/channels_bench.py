@@ -1,0 +1,146 @@
+"""Channel-family sweep at matched average drop rate (DESIGN.md §9).
+
+The paper's analysis (and Fig 4) treats the network as i.i.d. Bernoulli(p).
+The channel subsystem asks the paper-relevant follow-up: at the *same*
+average drop rate, does the loss *structure* matter? Each family below is
+calibrated to effective_p = P_TARGET (the paper's headline 10%), then run
+through the same n=16 teacher-student recipe:
+
+  bernoulli      — the paper's channel (control)
+  ge_burst4/16   — Gilbert–Elliott bursty loss, mean burst 4 / 16 iters
+  hetero_pods    — 4 pods, reliable intra-pod, lossy cross-pod links
+  deadline       — straggler latency model + iteration deadline (deadline
+                   bisected to the target rate)
+  trace          — netsim §7 colocation trace (web priority bisected to the
+                   target induced loss)
+
+Also reproduces the Fig-5 contrast on the burstiest channel: naive
+gradient averaging must degrade where model averaging holds.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import channels as channels_lib
+from repro.data.synthetic import TeacherTask, make_worker_streams
+from repro.netsim import sim as netsim
+from repro.train.simulator import SimulatorConfig, run_simulation
+
+P_TARGET = 0.1
+N = 16
+
+
+def _mlp():
+    task = TeacherTask(d_in=24, n_classes=8, hetero=0.3, seed=0)
+
+    def init_fn(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (24, 48)) * 0.1,
+                "w2": jax.random.normal(k2, (48, 8)) * 0.1}
+
+    def loss_fn(p, batch):
+        x, y = batch
+        h = jnp.tanh(x @ p["w1"])
+        logits = h @ p["w2"]
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, y[:, None], -1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    return task, init_fn, loss_fn
+
+
+def _bisect(f, lo, hi, target, iters=8):
+    """Smallest x with f(x) ~ target, f monotone increasing."""
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if f(mid) < target:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def _deadline_channel():
+    base, jitter, q, mult = 2.0, 2.0, 0.1, 4.0
+
+    def eff(deadline):
+        return -channels_lib.DeadlineChannel(
+            N, deadline_ms=deadline, base_ms=base, jitter_ms=jitter,
+            straggler_frac=q, straggler_mult=mult).effective_p()
+
+    d = _bisect(eff, base * mult, 40.0, -P_TARGET)
+    return channels_lib.DeadlineChannel(
+        N, deadline_ms=d, base_ms=base, jitter_ms=jitter,
+        straggler_frac=q, straggler_mult=mult)
+
+
+def _trace_channel():
+    lam, cfg = 8000.0, netsim.NetConfig(sim_s=1.0)
+
+    def eff(prio):
+        return channels_lib.TraceChannel(
+            N, netsim.export_trace(lam, prio, cfg)).effective_p()
+
+    prio = _bisect(eff, 0.0, 1.0, P_TARGET, iters=6)
+    return channels_lib.TraceChannel(N, netsim.export_trace(lam, prio, cfg))
+
+
+def _pods_channel():
+    # mean off-diag drop: (3·p_intra + 12·p_cross)/15 = P_TARGET
+    return channels_lib.HeterogeneousChannel.pods(
+        N, n_pods=4, p_intra=0.0, p_cross=P_TARGET * 15.0 / 12.0)
+
+
+def run(csv_rows, steps=150):
+    task, init_fn, loss_fn = _mlp()
+    batch_fn = make_worker_streams(task, N, 32)
+
+    families = [
+        ("bernoulli", channels_lib.BernoulliChannel(N, P_TARGET)),
+        ("ge_burst4", channels_lib.GilbertElliottChannel(
+            N, p_bad=1.0, burst=4.0, p=P_TARGET)),
+        ("ge_burst16", channels_lib.GilbertElliottChannel(
+            N, p_bad=1.0, burst=16.0, p=P_TARGET)),
+        ("hetero_pods", _pods_channel()),
+        ("deadline", _deadline_channel()),
+        ("trace", _trace_channel()),
+    ]
+
+    print(f"# channel families at matched effective_p = {P_TARGET} "
+          f"(n={N}, rps_model)")
+    print("channel,effective_p,final_loss,consensus")
+    results = {}
+    base = None
+    for name, chan in families:
+        t0 = time.time()
+        h = run_simulation(loss_fn, init_fn, batch_fn,
+                           SimulatorConfig(n_workers=N, aggregator="rps_model",
+                                           lr=0.2, warmup=10, steps=steps,
+                                           eval_every=steps - 1,
+                                           channel=chan))
+        us = (time.time() - t0) * 1e6
+        results[name] = h["final_loss"]
+        if base is None:                  # first family run is the control
+            base = h["final_loss"]
+        print(f"{name},{chan.effective_p():.4f},{h['final_loss']:.4f},"
+              f"{h['consensus'][-1]:.3e}")
+        csv_rows.append((f"channels_{name}", us,
+                         f"final_loss={h['final_loss']:.4f}"))
+        assert h["final_loss"] < base * 1.35 + 0.05, \
+            f"{name} diverged at matched p={P_TARGET}"
+
+    # Fig-5 contrast on the burstiest channel: grad averaging degrades
+    t0 = time.time()
+    hg = run_simulation(loss_fn, init_fn, batch_fn,
+                        SimulatorConfig(n_workers=N, aggregator="rps_grad",
+                                        lr=0.2, warmup=10, steps=steps,
+                                        eval_every=steps - 1,
+                                        channel=families[2][1]))
+    us = (time.time() - t0) * 1e6
+    print(f"ge_burst16_grad,{families[2][1].effective_p():.4f},"
+          f"{hg['final_loss']:.4f},{hg['consensus'][-1]:.3e}")
+    csv_rows.append(("channels_ge_burst16_grad", us,
+                     f"final_loss={hg['final_loss']:.4f}"))
+    assert hg["final_loss"] > results["ge_burst16"], \
+        "naive gradient averaging should degrade on the bursty channel"

@@ -15,8 +15,8 @@ def main() -> None:
                     help="comma-separated subset of benchmarks")
     args = ap.parse_args()
 
-    from benchmarks import (alpha, colocation, convergence, grad_vs_model,
-                            kernels_bench, speedup)
+    from benchmarks import (alpha, channels_bench, colocation, convergence,
+                            grad_vs_model, kernels_bench, speedup)
     all_benches = {
         "alpha": alpha.run,               # Figs 2/3
         "convergence": convergence.run,   # Fig 4
@@ -24,6 +24,7 @@ def main() -> None:
         "colocation": colocation.run,     # Figs 6/7
         "speedup": speedup.run,           # Thm 1 / Cor 2 trends
         "kernels": kernels_bench.run,     # ours
+        "channels": channels_bench.run,   # beyond-paper: non-i.i.d. loss
     }
     names = list(all_benches) if not args.only else args.only.split(",")
     csv_rows = []

@@ -36,6 +36,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--p", type=float, default=0.1)
+    ap.add_argument("--channel", default=None,
+                    help="drop-process spec (repro.channels), e.g. "
+                         "'ge:p_bad=1,burst=8,p=0.1' or "
+                         "'trace:lam=8000,prio=0.8'; default "
+                         "i.i.d. Bernoulli(--p)")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--batch-size", type=int, default=8)
@@ -61,7 +66,8 @@ def main():
 
     scfg = SimulatorConfig(n_workers=args.workers, drop_rate=args.p,
                            aggregator="rps_model", lr=0.3, warmup=20,
-                           steps=args.steps, eval_every=20)
+                           steps=args.steps, eval_every=20,
+                           channel=args.channel)
     t0 = time.time()
     h = run_simulation(loss_fn, model.init, batch_fn, scfg)
     dt = time.time() - t0

@@ -1,0 +1,17 @@
+"""Pluggable channel models for the RPS drop process (DESIGN.md §9).
+
+A channel turns the per-step PRNG key (plus carried state) into the
+``(rs, ag)`` mask pair consumed by ``core/rps.py`` — i.i.d. Bernoulli,
+bursty Gilbert–Elliott, per-link heterogeneous, deadline/straggler-induced,
+or a replayed ``netsim`` trace. ``make_channel`` resolves CLI spec strings
+like ``"ge:p_bad=0.3,burst=8"``.
+"""
+from repro.channels.base import Channel, force_diag  # noqa: F401
+from repro.channels.bernoulli import BernoulliChannel  # noqa: F401
+from repro.channels.deadline import DeadlineChannel  # noqa: F401
+from repro.channels.gilbert_elliott import GilbertElliottChannel  # noqa: F401
+from repro.channels.heterogeneous import HeterogeneousChannel  # noqa: F401
+from repro.channels.registry import (  # noqa: F401
+    ChannelSpec, channel_names, make_channel, parse_spec, register)
+from repro.channels.trace import (  # noqa: F401
+    TraceChannel, load_trace, save_trace)

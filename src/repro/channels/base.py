@@ -1,0 +1,75 @@
+"""Channel-model base class (DESIGN.md §9).
+
+A *channel* generates the per-iteration ``(rs, ag)`` drop-mask pair that
+drives the RPS exchange (``core/rps.py``). The seed codebase hardcoded
+i.i.d. Bernoulli drops with one scalar ``p``; real fabrics are bursty and
+per-link heterogeneous, so the mask generator is factored out behind this
+interface and threaded through the simulator, the mesh trainer and the
+theory predictions.
+
+Contract:
+
+  - ``init_state(key)`` returns the channel's carried state as a JAX pytree
+    (``None`` for memoryless channels). The key seeds stateful channels
+    (e.g. the Gilbert–Elliott links start from their stationary law).
+  - ``sample(key, state)`` returns ``(rs, ag, new_state)``. It must be
+    jit-traceable: every device calls it with the *shared* per-step key and
+    state, so the global masks are known everywhere without communication —
+    the property Algorithm 1's local renormalisation relies on.
+  - ``rs[i, j]``: worker i's block-j packet reaches the owner (device j) —
+    the directed link i → j. ``ag[i, j]``: the broadcast of block j reaches
+    worker i — the directed link j → i. Implementations index any per-link
+    quantity accordingly (AG uses the transposed link matrix).
+  - The diagonal is always forced True (a worker never drops its own
+    block); use :func:`force_diag`.
+  - ``effective_p()`` is the stationary marginal drop probability of an
+    off-diagonal link, averaged over links — the scalar that plugs into the
+    α₁/α₂ bounds (``core/theory.py``) to extend the Corollary-2 rate
+    predictions to non-i.i.d. channels.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+MaskPair = Tuple[jax.Array, jax.Array]
+
+
+def force_diag(rs: jax.Array, ag: jax.Array) -> MaskPair:
+    """Own blocks never leave the device: diagonal is always delivered."""
+    eye = jnp.eye(rs.shape[-1], dtype=bool)
+    return rs | eye, ag | eye
+
+
+class Channel:
+    """Base class; subclasses set ``n`` and implement ``sample``."""
+
+    name: str = "channel"
+
+    def __init__(self, n: int):
+        if n < 1:
+            raise ValueError(f"need n >= 1 workers, got {n}")
+        self.n = int(n)
+
+    # -- state ------------------------------------------------------------
+    def init_state(self, key: Optional[jax.Array] = None) -> Any:
+        return None
+
+    # -- sampling ---------------------------------------------------------
+    def sample(self, key: jax.Array, state: Any = None
+               ) -> Tuple[jax.Array, jax.Array, Any]:
+        raise NotImplementedError
+
+    def sample_masks(self, key: jax.Array) -> MaskPair:
+        """Stateless convenience: one (rs, ag) draw from the initial state."""
+        rs, ag, _ = self.sample(key, self.init_state(key))
+        return rs, ag
+
+    # -- theory hook ------------------------------------------------------
+    def effective_p(self) -> float:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}(n={self.n})"

@@ -1,0 +1,36 @@
+"""I.i.d. Bernoulli drops — the paper's channel and the default.
+
+Bit-identical to the original hardcoded path: ``sample`` delegates to
+``rps_lib.sample_masks`` (same key split, same draw order), so enabling the
+channel subsystem with ``bernoulli:p=<p>`` reproduces every seed experiment
+exactly (regression-tested in tests/test_channels.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+
+from repro.channels.base import Channel
+from repro.core import rps as rps_lib
+
+
+class BernoulliChannel(Channel):
+    name = "bernoulli"
+
+    def __init__(self, n: int, p: float = 0.0):
+        super().__init__(n)
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(f"drop probability p={p} outside [0, 1]")
+        self.p = float(p)
+
+    def sample(self, key: jax.Array, state: Any = None
+               ) -> Tuple[jax.Array, jax.Array, Any]:
+        rs, ag = rps_lib.sample_masks(key, self.n, self.p)
+        return rs, ag, state
+
+    def effective_p(self) -> float:
+        return self.p
+
+    def __repr__(self) -> str:
+        return f"BernoulliChannel(n={self.n}, p={self.p})"

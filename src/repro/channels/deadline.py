@@ -1,0 +1,81 @@
+"""Deadline-induced loss from a straggler latency model.
+
+Loss-tolerant transports do not retransmit past the iteration boundary: a
+packet that misses the synchronisation deadline is simply gone (LTP-style
+semantics). This channel derives drops from latency instead of flipping
+coins per link:
+
+  - per iteration, each worker independently *straggles* with probability
+    ``straggler_frac``; a straggler's sends take ``straggler_mult × base_ms``
+    of base latency (slow NIC, incast, background load — sender-correlated).
+  - every packet adds Exp(``jitter_ms``) queueing jitter;
+  - the packet drops iff ``base + jitter > deadline_ms``.
+
+Drops are therefore *column/row-correlated*: when worker i straggles, its
+whole RS row (and AG column — it owns block i's broadcast) degrades at
+once, a structure no i.i.d. Bernoulli channel reproduces. The closed-form
+marginal (exponential tail) keeps ``effective_p`` analytic:
+
+    P(drop | base) = exp(−(deadline − base)/jitter)   for deadline > base
+    effective_p    = q·P(mult·base) + (1 − q)·P(base)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.channels.base import Channel, force_diag
+
+
+def _tail(base: float, deadline: float, jitter: float) -> float:
+    if deadline <= base:
+        return 1.0
+    return math.exp(-(deadline - base) / max(jitter, 1e-12))
+
+
+class DeadlineChannel(Channel):
+    name = "deadline"
+
+    def __init__(self, n: int, deadline_ms: float = 10.0,
+                 base_ms: float = 2.0, jitter_ms: float = 2.0,
+                 straggler_frac: float = 0.1, straggler_mult: float = 4.0):
+        super().__init__(n)
+        if deadline_ms <= 0 or jitter_ms <= 0 or base_ms < 0:
+            raise ValueError("latencies must be positive")
+        if not 0.0 <= straggler_frac <= 1.0:
+            raise ValueError(f"straggler_frac={straggler_frac} not in [0,1]")
+        self.deadline_ms = float(deadline_ms)
+        self.base_ms = float(base_ms)
+        self.jitter_ms = float(jitter_ms)
+        self.straggler_frac = float(straggler_frac)
+        self.straggler_mult = float(straggler_mult)
+
+    def sample(self, key: jax.Array, state: Any = None
+               ) -> Tuple[jax.Array, jax.Array, Any]:
+        k_s, k_rs, k_ag = jax.random.split(key, 3)
+        n = self.n
+        straggle = jax.random.bernoulli(k_s, self.straggler_frac, (n,))
+        base = jnp.where(straggle, self.base_ms * self.straggler_mult,
+                         self.base_ms)                       # per sender
+        lat_rs = base[:, None] + \
+            jax.random.exponential(k_rs, (n, n)) * self.jitter_ms
+        # ag[i, j]: owner j broadcasts block j to receiver i — sender is j
+        lat_ag = base[None, :] + \
+            jax.random.exponential(k_ag, (n, n)) * self.jitter_ms
+        rs, ag = force_diag(lat_rs <= self.deadline_ms,
+                            lat_ag <= self.deadline_ms)
+        return rs, ag, state
+
+    def effective_p(self) -> float:
+        q = self.straggler_frac
+        return (q * _tail(self.base_ms * self.straggler_mult,
+                          self.deadline_ms, self.jitter_ms)
+                + (1.0 - q) * _tail(self.base_ms, self.deadline_ms,
+                                    self.jitter_ms))
+
+    def __repr__(self) -> str:
+        return (f"DeadlineChannel(n={self.n}, deadline={self.deadline_ms}ms,"
+                f" eff_p={self.effective_p():.4f})")

@@ -1,0 +1,104 @@
+"""Gilbert–Elliott two-state bursty loss, one Markov chain per directed link.
+
+Each of the n·(n−1) directed links carries a good/bad state. A packet on a
+bad link drops with probability ``p_bad`` (``p_good`` on a good link,
+default 0). Per iteration the link state transitions
+
+    good → bad  with prob p_gb          bad → good  with prob p_bg = 1/burst
+
+so bad sojourns are geometric with mean ``burst`` iterations — with
+``p_bad = 1`` the mean length of a consecutive-drop run *is* ``burst``.
+Stationary bad probability π = p_gb / (p_gb + p_bg) and
+
+    effective_p = π · p_bad + (1 − π) · p_good.
+
+Constructing with a target ``p`` solves for ``p_gb`` so the channel matches
+an i.i.d. Bernoulli(p) channel in *average* loss while concentrating the
+drops into bursts — the matched-rate comparison benchmarks/channels_bench.py
+sweeps (does burstiness hurt at equal p?).
+
+Both the RS packet on link i→j and the AG packet on link j→i see the same
+per-iteration link state (they are phases of one exchange round); their
+conditional drops are independent draws. State transitions once per
+iteration and is initialised from the stationary law.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.channels.base import Channel, force_diag
+
+
+class GilbertElliottChannel(Channel):
+    name = "ge"
+
+    def __init__(self, n: int, p_bad: float = 0.5, burst: float = 8.0,
+                 p: Optional[float] = None, p_gb: Optional[float] = None,
+                 p_good: float = 0.0):
+        super().__init__(n)
+        if burst < 1.0:
+            raise ValueError(f"burst (mean bad sojourn) must be >= 1, "
+                             f"got {burst}")
+        if not 0.0 <= p_good < p_bad <= 1.0:
+            raise ValueError(f"need 0 <= p_good < p_bad <= 1, "
+                             f"got p_good={p_good}, p_bad={p_bad}")
+        self.p_bad = float(p_bad)
+        self.p_good = float(p_good)
+        self.burst = float(burst)
+        self.p_bg = 1.0 / self.burst
+        if p is not None:
+            if p_gb is not None:
+                raise ValueError("give a target p or p_gb, not both")
+            pi = (p - p_good) / (p_bad - p_good)
+            if not 0.0 <= pi < 1.0:
+                raise ValueError(
+                    f"target p={p} unreachable with p_bad={p_bad}, "
+                    f"p_good={p_good} (needs stationary bad prob {pi:.3f})")
+            p_gb = pi * self.p_bg / (1.0 - pi) if pi > 0 else 0.0
+        self.p_gb = float(p_gb if p_gb is not None else 0.05)
+        if not 0.0 <= self.p_gb <= 1.0:
+            raise ValueError(f"p_gb={self.p_gb} outside [0, 1] — target p "
+                             "too high for the requested burst length")
+
+    @property
+    def pi_bad(self) -> float:
+        """Stationary probability a link is in the bad state."""
+        denom = self.p_gb + self.p_bg
+        return self.p_gb / denom if denom > 0 else 0.0
+
+    def init_state(self, key: Optional[jax.Array] = None) -> Any:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        bad = jax.random.bernoulli(jax.random.fold_in(key, 0x6E11),
+                                   self.pi_bad, (self.n, self.n))
+        return {"bad": bad}
+
+    def sample(self, key: jax.Array, state: Any = None
+               ) -> Tuple[jax.Array, jax.Array, Any]:
+        if state is None:
+            state = self.init_state(key)
+        k_tr, k_rs, k_ag = jax.random.split(key, 3)
+        bad = state["bad"]
+        shape = (self.n, self.n)
+        stay = jax.random.bernoulli(k_tr, 1.0 - self.p_bg, shape)
+        enter = jax.random.bernoulli(jax.random.fold_in(k_tr, 1),
+                                     self.p_gb, shape)
+        bad = jnp.where(bad, stay, enter)
+        p_link = jnp.where(bad, self.p_bad, self.p_good)
+        rs_drop = jax.random.uniform(k_rs, shape) < p_link
+        ag_drop = jax.random.uniform(k_ag, shape) < p_link
+        # ag[i, j] is the j → i broadcast: transpose the link-indexed draw
+        rs, ag = force_diag(~rs_drop, ~ag_drop.T)
+        return rs, ag, {"bad": bad}
+
+    def effective_p(self) -> float:
+        pi = self.pi_bad
+        return pi * self.p_bad + (1.0 - pi) * self.p_good
+
+    def __repr__(self) -> str:
+        return (f"GilbertElliottChannel(n={self.n}, p_bad={self.p_bad}, "
+                f"burst={self.burst}, p_gb={self.p_gb:.4f}, "
+                f"eff_p={self.effective_p():.4f})")

@@ -1,0 +1,66 @@
+"""Per-link heterogeneous i.i.d. loss: an (n, n) drop-probability matrix.
+
+``P[i, j]`` is the drop probability of the directed link i → j. The RS mask
+draws from ``P`` directly; the AG mask (block-j broadcast to receiver i,
+link j → i) draws from ``P.T``. Memoryless — only the *marginals* differ
+per link.
+
+The canonical instance is the two-tier pod topology
+(:meth:`HeterogeneousChannel.pods`): workers within a pod talk over the
+reliable intra-pod fabric (``p_intra``, e.g. ICI ≈ 0), pods talk over the
+lossy cross-pod network (``p_cross``, e.g. best-effort DCN) — the layout
+DESIGN.md §5 assumes for the rps_grad archs, now expressible in the
+simulator and trainer too.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.channels.base import Channel, force_diag
+
+
+class HeterogeneousChannel(Channel):
+    name = "hetero"
+
+    def __init__(self, n: int, p_matrix: Union[np.ndarray, jax.Array]):
+        super().__init__(n)
+        pm = np.asarray(p_matrix, np.float32)
+        if pm.shape != (n, n):
+            raise ValueError(f"p_matrix shape {pm.shape} != ({n}, {n})")
+        if pm.min() < 0.0 or pm.max() > 1.0:
+            raise ValueError("p_matrix entries must lie in [0, 1]")
+        self.p_matrix = jnp.asarray(pm)
+
+    @classmethod
+    def pods(cls, n: int, n_pods: int, p_intra: float = 0.0,
+             p_cross: float = 0.2) -> "HeterogeneousChannel":
+        """Two-tier fabric: n workers in n_pods equal pods (contiguous
+        ranks); intra-pod links drop at p_intra, cross-pod at p_cross."""
+        if n % n_pods:
+            raise ValueError(f"n={n} not divisible by n_pods={n_pods}")
+        pod = np.arange(n) // (n // n_pods)
+        same = pod[:, None] == pod[None, :]
+        pm = np.where(same, p_intra, p_cross).astype(np.float32)
+        return cls(n, pm)
+
+    def sample(self, key: jax.Array, state: Any = None
+               ) -> Tuple[jax.Array, jax.Array, Any]:
+        k_rs, k_ag = jax.random.split(key)
+        shape = (self.n, self.n)
+        rs = jax.random.uniform(k_rs, shape) >= self.p_matrix
+        ag = jax.random.uniform(k_ag, shape) >= self.p_matrix.T
+        rs, ag = force_diag(rs, ag)
+        return rs, ag, state
+
+    def effective_p(self) -> float:
+        pm = np.asarray(self.p_matrix)
+        off = ~np.eye(self.n, dtype=bool)
+        return float(pm[off].mean()) if self.n > 1 else 0.0
+
+    def __repr__(self) -> str:
+        return (f"HeterogeneousChannel(n={self.n}, "
+                f"eff_p={self.effective_p():.4f})")

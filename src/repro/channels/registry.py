@@ -1,0 +1,113 @@
+"""Channel registry + config-string parser.
+
+Benchmarks, examples and launchers select channels from the command line
+with compact specs, ``"<name>:k1=v1,k2=v2"``:
+
+    bernoulli:p=0.1                     (aliases: iid)
+    ge:p_bad=0.3,burst=8                (aliases: gilbert, gilbert-elliott)
+    ge:p_bad=1.0,burst=8,p=0.1          (matched average rate 0.1)
+    hetero:n_pods=4,p_intra=0.0,p_cross=0.3   (aliases: pods)
+    deadline:deadline_ms=8,straggler_frac=0.2
+    trace:path=colo.npz                 (or trace:lam=8000,prio=0.8 to run
+                                         the netsim colocation sim inline)
+
+``make_channel(spec, n, default_p)`` is the single entry point: it accepts
+a spec string, an already-built :class:`Channel` (returned as-is), or
+``None`` (→ ``BernoulliChannel(n, default_p)``, the seed behaviour).
+A bare name with no args works too (``"ge"``). For bernoulli, an omitted
+``p`` inherits ``default_p`` so ``--channel bernoulli`` composes with the
+existing ``--drop-rate`` flag.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple, Union
+
+from repro.channels.base import Channel
+from repro.channels.bernoulli import BernoulliChannel
+from repro.channels.deadline import DeadlineChannel
+from repro.channels.gilbert_elliott import GilbertElliottChannel
+from repro.channels.heterogeneous import HeterogeneousChannel
+from repro.channels.trace import TraceChannel
+
+ChannelSpec = Union[None, str, Channel]
+
+_REGISTRY: Dict[str, Callable[..., Channel]] = {}
+_ALIASES: Dict[str, str] = {}
+
+
+def register(name: str, builder: Callable[..., Channel],
+             aliases: Tuple[str, ...] = ()) -> None:
+    _REGISTRY[name] = builder
+    for a in aliases:
+        _ALIASES[a] = name
+
+
+def channel_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def _coerce(v: str):
+    low = v.strip().lower()
+    if low in ("true", "false"):
+        return low == "true"
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    return v
+
+
+def parse_spec(spec: str) -> Tuple[str, Dict[str, object]]:
+    """``"ge:p_bad=0.3,burst=8"`` -> ``("ge", {"p_bad": 0.3, "burst": 8})``."""
+    name, _, rest = spec.strip().partition(":")
+    name = _ALIASES.get(name.lower(), name.lower())
+    kwargs: Dict[str, object] = {}
+    for item in filter(None, (s.strip() for s in rest.split(","))):
+        k, eq, v = item.partition("=")
+        if not eq:
+            raise ValueError(f"malformed channel arg {item!r} in {spec!r} "
+                             "(expected key=value)")
+        kwargs[k.strip()] = _coerce(v)
+    return name, kwargs
+
+
+def make_channel(spec: ChannelSpec, n: int,
+                 default_p: float = 0.0) -> Channel:
+    """Resolve a channel spec for an n-worker exchange (see module doc)."""
+    if isinstance(spec, Channel):
+        if spec.n != n:
+            raise ValueError(f"channel built for n={spec.n}, need n={n}")
+        return spec
+    if spec is None or spec == "":
+        return BernoulliChannel(n, default_p)
+    name, kwargs = parse_spec(spec)
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown channel {name!r}; "
+                         f"known: {', '.join(channel_names())}")
+    if name == "bernoulli":
+        kwargs.setdefault("p", default_p)
+    try:
+        return _REGISTRY[name](n, **kwargs)
+    except TypeError as e:
+        raise ValueError(f"bad args for channel {name!r}: {e}") from e
+
+
+def _build_hetero(n: int, n_pods: int = 2, p_intra: float = 0.0,
+                  p_cross: float = 0.2) -> HeterogeneousChannel:
+    return HeterogeneousChannel.pods(n, n_pods, p_intra, p_cross)
+
+
+def _build_trace(n: int, path: Optional[str] = None,
+                 lam: float = 8000.0, prio: float = 0.8) -> TraceChannel:
+    if path is not None:
+        return TraceChannel.from_npz(n, str(path))
+    return TraceChannel.from_netsim(n, lam, prio)
+
+
+register("bernoulli", BernoulliChannel, aliases=("iid", "bern"))
+register("ge", GilbertElliottChannel,
+         aliases=("gilbert", "gilbert-elliott", "gilbert_elliott"))
+register("hetero", _build_hetero, aliases=("pods", "heterogeneous"))
+register("deadline", DeadlineChannel, aliases=("straggler",))
+register("trace", _build_trace, aliases=("netsim",))

@@ -1,0 +1,95 @@
+"""Trace-driven loss: replay per-iteration drop rates from ``netsim.sim``.
+
+The §7 colocation study (``netsim/sim.py``) computes *realistic* per-link
+learning-loss under web/learning fabric sharing — numbers the seed codebase
+printed but never fed back into training. ``netsim.sim.export_trace``
+records, per RPS burst period and per server, the fraction of learning
+bytes dropped on the uplink and downlink; this channel replays that trace
+as per-iteration per-link drop probabilities:
+
+    p_rs[i → j](t) = 1 − (1 − up_t[srv(i)]) · (1 − down_t[srv(j)])
+
+(a packet survives iff it clears both the sender's uplink and the
+receiver's downlink), and the AG leg uses the transposed link. The trace
+index advances every training iteration and wraps around, so a 2-second
+network simulation drives arbitrarily long convergence runs.
+
+When the worker count differs from the trace's server count, worker i maps
+to server ``i % n_servers`` (round-robin placement).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.channels.base import Channel, force_diag
+
+
+def save_trace(path: str, trace: Dict[str, np.ndarray]) -> None:
+    np.savez(path, up=trace["up"], down=trace["down"])
+
+
+def load_trace(path: str) -> Dict[str, np.ndarray]:
+    with np.load(path) as z:
+        return {"up": z["up"], "down": z["down"]}
+
+
+class TraceChannel(Channel):
+    name = "trace"
+
+    def __init__(self, n: int, trace: Dict[str, np.ndarray]):
+        super().__init__(n)
+        up = np.asarray(trace["up"], np.float32)
+        down = np.asarray(trace["down"], np.float32)
+        if up.ndim != 2 or up.shape != down.shape or up.shape[0] < 1:
+            raise ValueError(f"bad trace shapes up={up.shape}, "
+                             f"down={down.shape}")
+        if min(up.min(), down.min()) < 0 or max(up.max(), down.max()) > 1:
+            raise ValueError("trace drop fractions must lie in [0, 1]")
+        srv = np.arange(n) % up.shape[1]            # worker -> server
+        up_w, down_w = up[:, srv], down[:, srv]     # (T, n)
+        # survive sender-uplink AND receiver-downlink, per directed link
+        self.p_trace = jnp.asarray(
+            1.0 - (1.0 - up_w[:, :, None]) * (1.0 - down_w[:, None, :]))
+        self.n_periods = up.shape[0]
+
+    @classmethod
+    def from_netsim(cls, n: int, lam: float, prio: float,
+                    cfg: Optional[object] = None) -> "TraceChannel":
+        """Run the §7 flow simulation and replay its induced learning loss."""
+        from repro.netsim import sim as netsim
+        cfg = cfg if cfg is not None else netsim.NetConfig()
+        return cls(n, netsim.export_trace(lam, prio, cfg))
+
+    @classmethod
+    def from_npz(cls, n: int, path: str) -> "TraceChannel":
+        return cls(n, load_trace(path))
+
+    def init_state(self, key: Optional[jax.Array] = None) -> Any:
+        return {"t": jnp.int32(0)}
+
+    def sample(self, key: jax.Array, state: Any = None
+               ) -> Tuple[jax.Array, jax.Array, Any]:
+        if state is None:
+            state = self.init_state(key)
+        idx = jnp.mod(state["t"], self.n_periods)
+        p = jnp.take(self.p_trace, idx, axis=0)     # (n, n) link drop prob
+        k_rs, k_ag = jax.random.split(key)
+        rs = jax.random.uniform(k_rs, (self.n, self.n)) >= p
+        ag = jax.random.uniform(k_ag, (self.n, self.n)) >= p.T
+        rs, ag = force_diag(rs, ag)
+        return rs, ag, {"t": state["t"] + 1}
+
+    def effective_p(self) -> float:
+        pm = np.asarray(self.p_trace)
+        if self.n == 1:
+            return 0.0
+        off = ~np.eye(self.n, dtype=bool)
+        return float(pm[:, off].mean())
+
+    def __repr__(self) -> str:
+        return (f"TraceChannel(n={self.n}, periods={self.n_periods}, "
+                f"eff_p={self.effective_p():.4f})")

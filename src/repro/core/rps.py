@@ -63,6 +63,13 @@ def sample_masks(key: jax.Array, n: int, p: float):
     rs[i, j]: worker i's block-j packet reaches the owner (device j).
     ag[i, j]: the broadcast of block j reaches worker i.
     Computed identically on every device from the shared per-step key.
+
+    This is the i.i.d. Bernoulli drop process of the paper. The pluggable
+    generalisation lives in ``repro.channels`` (DESIGN.md §9): any
+    ``Channel.sample`` produces an ``(rs, ag)`` pair with the same
+    conventions, which every exchange below accepts via ``masks=``;
+    ``channels.BernoulliChannel`` delegates here so the default channel is
+    bit-identical to this function.
     """
     k1, k2 = jax.random.split(key)
     rs = jax.random.bernoulli(k1, 1.0 - p, (n, n))
@@ -131,10 +138,12 @@ def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
 
 
 def rps_exchange(tree: Any, key: jax.Array, p: float,
-                 axis_name: AxisNames, *, mode: str = "model") -> Any:
+                 axis_name: AxisNames, *, mode: str = "model",
+                 masks=None) -> Any:
     """Pytree wrapper around :func:`rps_exchange_flat`."""
     flat, unravel = ravel_pytree(tree)
-    return unravel(rps_exchange_flat(flat, key, p, axis_name, mode=mode))
+    return unravel(rps_exchange_flat(flat, key, p, axis_name, mode=mode,
+                                     masks=masks))
 
 
 def _blockify(x: jax.Array, n: int, model_dim: Optional[int]):
@@ -219,17 +228,43 @@ def rps_exchange_leaf(x: jax.Array, rs: jax.Array, ag: jax.Array,
     return restore(pin(out))
 
 
+def _resolve_global_backend(backend: str) -> str:
+    if backend == "auto":
+        # the fused Pallas kernel is the hot path on TPU; on CPU the XLA
+        # einsum is faster than interpret-mode Pallas, so auto stays on jnp
+        # (backend="pallas" still forces the kernel via interpret=True — the
+        # parity tests exercise exactly that)
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"backend={backend!r}")
+    return backend
+
+
 def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
-                        mode: str = "model") -> Any:
+                        mode: str = "model", masks=None,
+                        backend: str = "auto") -> Any:
     """Global-view exchange on *stacked* worker trees (leading dim n).
 
     Mathematically identical to the collective path (same masks, same block
     partition), expressed as jnp ops — runs on one device; used by the
     n-worker simulation harness and as the cross-check in tests.
+
+    ``masks``: optional precomputed ``(rs, ag)`` pair from any
+    ``repro.channels`` channel; defaults to the i.i.d. Bernoulli draw from
+    ``sample_masks(key, n, p)``.
+
+    ``backend``: "jnp" (einsum), "pallas" (the fused
+    ``kernels.masked_avg_pallas`` renormalised block average, interpreted
+    off-TPU), or "auto" (pallas on TPU, jnp elsewhere).
     """
-    rs, ag = sample_masks(key, n, p)
+    rs, ag = sample_masks(key, n, p) if masks is None else masks
     rs_f = rs.astype(jnp.float32)
     counts = jnp.maximum(rs_f.sum(0), 1.0)                  # (n,)
+    backend = _resolve_global_backend(backend)
+    use_pallas = backend == "pallas" and mode in ("model", "grad_renorm")
+    if use_pallas:
+        from repro.kernels.masked_avg import masked_avg_pallas
+        interp = jax.default_backend() != "tpu"
 
     def leaf(x):
         shape = x.shape[1:]
@@ -240,13 +275,19 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
             flat = jnp.pad(flat, ((0, 0), (0, pad)))
         blocks = flat.reshape(n, n, -1)                     # (worker, block, blk)
         f32 = blocks.astype(jnp.float32)
-        sums = jnp.einsum("ij,ijd->jd", rs_f, f32)
-        if mode in ("model", "grad_renorm"):
-            tilde = sums / counts[:, None]
-        elif mode == "grad":
-            tilde = sums / float(n)
+        if use_pallas:
+            blk = f32.shape[-1]
+            tilde = jax.vmap(functools.partial(
+                masked_avg_pallas, tile_d=min(512, blk), interpret=interp))(
+                    f32.transpose(1, 0, 2), rs_f.T)         # (block, blk)
         else:
-            raise ValueError(mode)
+            sums = jnp.einsum("ij,ijd->jd", rs_f, f32)
+            if mode in ("model", "grad_renorm"):
+                tilde = sums / counts[:, None]
+            elif mode == "grad":
+                tilde = sums / float(n)
+            else:
+                raise ValueError(mode)
         fallback = f32 if mode in ("model", "grad_renorm") else jnp.zeros_like(f32)
         out = jnp.where(ag[:, :, None], tilde[None], fallback)
         out = out.reshape(n, D + pad)[:, :D].astype(x.dtype)

@@ -12,6 +12,15 @@ All formulas are verbatim from the paper's supplement:
 
 Asymptotics the paper highlights: α₁ = O(p), α₂ = O(p(1−p)/n); the drop
 rate's influence diminishes as n grows (Fig 2/3, discussion after Cor. 2).
+
+Non-i.i.d. channels (DESIGN.md §9): the bounds are functions of the
+marginal drop probability only, so they extend to any ``repro.channels``
+channel through its stationary marginal ``channel.effective_p()`` — that is
+the *matched-rate i.i.d. proxy*. Burst structure (Gilbert–Elliott) and
+per-link correlation (deadline/straggler) are invisible to the proxy; the
+gap between the proxy prediction and the measured curve is exactly what
+``benchmarks/channels_bench.py`` quantifies. Use the ``*_channel`` helpers
+below (they duck-type: floats are treated as Bernoulli p).
 """
 from __future__ import annotations
 
@@ -83,3 +92,42 @@ def corollary2_rate(n: int, p: float, T: int, sigma: float = 1.0,
     tail = n * (sigma ** 2 + zeta ** 2) / (
         (1.0 + n * a2) * sigma ** 2 * T + n * a2 * T * zeta ** 2 + 1e-12)
     return float(lead + 1.0 / T + tail)
+
+
+# ---- channel extensions (DESIGN.md §9) ------------------------------------
+
+def effective_p(channel_or_p) -> float:
+    """Stationary marginal drop probability of a channel (or a plain p)."""
+    eff = getattr(channel_or_p, "effective_p", None)
+    if callable(eff):
+        return float(eff())
+    p = float(channel_or_p)
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"p={p} outside [0, 1]")
+    return p
+
+
+def _channel_n(channel, n) -> int:
+    n = getattr(channel, "n", None) or n
+    if n is None:
+        raise ValueError("n is required when passing a scalar drop rate "
+                         "instead of a Channel")
+    return int(n)
+
+
+def alpha_bounds_channel(channel, n: int = None):
+    """(α₁, α₂) Lemma-7/8 bounds at the channel's effective drop rate."""
+    n = _channel_n(channel, n)
+    p = effective_p(channel)
+    return alpha1_bound(n, p), alpha2_bound(n, p)
+
+
+def corollary2_lr_channel(channel, T: int, n: int = None, **kw) -> float:
+    return corollary2_lr(_channel_n(channel, n), effective_p(channel), T,
+                         **kw)
+
+
+def corollary2_rate_channel(channel, T: int, n: int = None, **kw) -> float:
+    """Corollary-2 rate prediction at the channel's matched i.i.d. rate."""
+    return corollary2_rate(_channel_n(channel, n), effective_p(channel), T,
+                           **kw)

@@ -37,6 +37,12 @@ def main():
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--drop-rate", type=float, default=0.1)
+    ap.add_argument("--channel", default=None,
+                    help="drop-process spec (repro.channels), e.g. "
+                         "'ge:p_bad=0.3,burst=8', 'hetero:n_pods=4,"
+                         "p_cross=0.3', 'trace:lam=8000,prio=0.8' or "
+                         "'trace:path=colo.npz'; default: i.i.d. "
+                         "Bernoulli(--drop-rate)")
     ap.add_argument("--aggregator", default="rps_model",
                     choices=["rps_model", "rps_grad", "allreduce_model",
                              "allreduce_grad", "local"])
@@ -62,10 +68,13 @@ def main():
     scfg = SimulatorConfig(
         n_workers=args.workers, drop_rate=args.drop_rate,
         aggregator=args.aggregator, lr=args.lr, steps=args.steps,
-        warmup=args.warmup, batch_size=args.batch_size, seed=args.seed)
+        warmup=args.warmup, batch_size=args.batch_size, seed=args.seed,
+        channel=args.channel)
     t0 = time.time()
     hist = run_simulation(loss_fn, model.init, batch_fn, scfg)
     dt = time.time() - t0
+    print(f"channel={hist['channel']} "
+          f"eff_p={hist['channel_effective_p']:.4f}")
     print(f"n={args.workers} p={args.drop_rate} agg={args.aggregator} "
           f"final_loss={hist['final_loss']:.4f} "
           f"(entropy floor {task.entropy_floor():.4f}) "

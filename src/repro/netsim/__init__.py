@@ -1,2 +1,2 @@
 from repro.netsim.sim import (  # noqa: F401
-    NetConfig, cost_reduction_curve, simulate, speedup_curve)
+    NetConfig, cost_reduction_curve, export_trace, simulate, speedup_curve)

@@ -25,7 +25,7 @@ per-MTU packet events (DESIGN.md §8).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -42,9 +42,15 @@ class NetConfig:
     seed: int = 0
 
 
-def simulate(lam: float, prio: float, cfg: NetConfig = NetConfig()
+def simulate(lam: float, prio: float, cfg: NetConfig = NetConfig(),
+             trace_out: Optional[Dict[str, np.ndarray]] = None
              ) -> Dict[str, float]:
-    """One (λ, prio) point -> avg web completion (ms), learning drop frac."""
+    """One (λ, prio) point -> avg web completion (ms), learning drop frac.
+
+    When ``trace_out`` is a dict it is filled with the per-burst-period,
+    per-server learning drop fractions — ``"up"``/``"down"`` arrays of
+    shape (n_periods, n_servers) — the export consumed by
+    ``channels.TraceChannel`` (one burst period = one RPS iteration)."""
     rng = np.random.default_rng(cfg.seed)
     n = cfg.n_servers
     cap = cfg.link_gbps * 1e9 / 8 * cfg.tick_s            # bytes/tick/link
@@ -64,6 +70,11 @@ def simulate(lam: float, prio: float, cfg: NetConfig = NetConfig()
     completed_ms: List[float] = []
     learn_offered = 0.0
     learn_sent = 0.0
+    per_up = np.zeros(n)          # per-period per-server sent bytes
+    per_down = np.zeros(n)
+    per_off = 0.0                 # offered bytes per link this period
+    trace_up: List[np.ndarray] = []
+    trace_down: List[np.ndarray] = []
 
     def fifo_alloc(order, budget_up, budget_down, done):
         for i in order:
@@ -106,6 +117,17 @@ def simulate(lam: float, prio: float, cfg: NetConfig = NetConfig()
         sent_down = np.minimum(L, cap - web_down)
         learn_offered += 2 * n * L
         learn_sent += float(sent_up.sum() + sent_down.sum())
+        if trace_out is not None:
+            per_up += sent_up
+            per_down += sent_down
+            per_off += L
+            if (t + 1) % period == 0:        # RPS iteration boundary
+                off = max(per_off, 1e-30)
+                trace_up.append(np.clip(1.0 - per_up / off, 0.0, 1.0))
+                trace_down.append(np.clip(1.0 - per_down / off, 0.0, 1.0))
+                per_up = np.zeros(n)
+                per_down = np.zeros(n)
+                per_off = 0.0
         # pass 2: web takes whatever is still free (work-conserving)
         b_up = cap - web_up - sent_up
         b_down = cap - web_down - sent_down
@@ -115,9 +137,27 @@ def simulate(lam: float, prio: float, cfg: NetConfig = NetConfig()
 
     drop_frac = 1.0 - learn_sent / max(learn_offered, 1.0)
     avg_ms = float(np.mean(completed_ms)) if completed_ms else float("inf")
+    if trace_out is not None:
+        if per_off > 0:                       # flush a trailing part-period
+            trace_up.append(np.clip(1.0 - per_up / per_off, 0.0, 1.0))
+            trace_down.append(np.clip(1.0 - per_down / per_off, 0.0, 1.0))
+        trace_out["up"] = np.stack(trace_up) if trace_up \
+            else np.zeros((1, n))
+        trace_out["down"] = np.stack(trace_down) if trace_down \
+            else np.zeros((1, n))
     return {"avg_completion_ms": avg_ms,
             "learning_drop_frac": float(drop_frac),
             "web_msgs_per_s": len(completed_ms) / cfg.sim_s}
+
+
+def export_trace(lam: float, prio: float, cfg: NetConfig = NetConfig()
+                 ) -> Dict[str, np.ndarray]:
+    """Per-iteration per-server learning drop fractions for one (λ, prio)
+    operating point — the bridge from the §7 colocation study into the
+    convergence experiments (``channels.TraceChannel`` replays this)."""
+    trace: Dict[str, np.ndarray] = {}
+    simulate(lam, prio, cfg, trace_out=trace)
+    return trace
 
 
 def speedup_curve(lam: float,

@@ -11,6 +11,12 @@ Aggregators (matching the paper's comparisons):
   rps_grad        — naive gradient averaging under drops           [Fig 5]
   allreduce_model / allreduce_grad — reliable baselines (p = 0)
   local           — no communication at all (sanity lower bound)
+
+The drop process is pluggable (``SimulatorConfig.channel``, DESIGN.md §9):
+any ``repro.channels`` spec — bursty Gilbert–Elliott, per-link
+heterogeneous, deadline/straggler, or a replayed netsim trace — drives the
+same exchanges; the default (``channel=None``) is the paper's i.i.d.
+Bernoulli(drop_rate) process, bit-identical to the seed code.
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import channels as channels_lib
 from repro.core import rps as rps_lib
 from repro.optim import make_optimizer
 
@@ -40,9 +47,14 @@ class SimulatorConfig:
     warmup: int = 0                 # gradual-warmup steps (paper recipe)
     eval_every: int = 10
     exchange_every: int = 1         # >1: local-SGD variant (beyond-paper)
+    channel: channels_lib.ChannelSpec = None
+    # drop-process model: a repro.channels spec string
+    # ("ge:p_bad=0.3,burst=8", "trace:lam=8000,prio=0.8", ...) or a built
+    # Channel; None = i.i.d. Bernoulli(drop_rate), the seed behaviour.
 
 
-def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool):
+def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool,
+              masks=None):
     n = scfg.n_workers
     agg = scfg.aggregator
     if agg == "local":
@@ -51,9 +63,9 @@ def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool):
         return jax.tree.map(
             lambda x: jnp.broadcast_to(jnp.mean(x, 0, keepdims=True),
                                        x.shape), tree)
-    mode = "model" if agg == "rps_model" else "grad"
+    mode = "grad" if is_grad else "model"
     return rps_lib.rps_exchange_global(tree, key, scfg.drop_rate, n,
-                                       mode=mode)
+                                       mode=mode, masks=masks)
 
 
 def run_simulation(loss_fn: Callable, init_fn: Callable,
@@ -74,34 +86,50 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
     opt = make_optimizer(scfg.optimizer)
     opt_state = opt.init(params)
     is_grad_mode = scfg.aggregator.endswith("_grad")
+    # the drop process: channels are sampled inside the jitted step with the
+    # shared per-step key; their state (e.g. Gilbert–Elliott link states,
+    # trace cursor) is carried across steps alongside params/opt_state
+    channel = channels_lib.make_channel(scfg.channel, n, scfg.drop_rate)
+    rps_agg = scfg.aggregator.startswith("rps")
+    ch_state = channel.init_state(jax.random.fold_in(key, 0x636831)) \
+        if rps_agg else None
 
     @functools.partial(jax.jit, static_argnames=("exchange",))
-    def step_fn(params, opt_state, batch, key, lr, exchange=True):
+    def step_fn(params, opt_state, batch, key, lr, ch_state, exchange=True):
         def total(ps, bs):
             return jnp.sum(jax.vmap(loss_fn)(ps, bs))
 
+        masks = None
+        if rps_agg:     # channel time advances every step, exchange or not
+            rs, ag, ch_state_new = channel.sample(key, ch_state)
+            masks, ch_state = (rs, ag), ch_state_new
         loss, grads = jax.value_and_grad(total)(params, batch)
         if is_grad_mode:
             if exchange:
-                grads = _exchange(grads, key, scfg, is_grad=True)
+                grads = _exchange(grads, key, scfg, is_grad=True,
+                                  masks=masks)
             params, opt_state = opt.update(grads, opt_state, params, lr)
         else:
             params, opt_state = opt.update(grads, opt_state, params, lr)
             if exchange:
-                params = _exchange(params, key, scfg, is_grad=False)
+                params = _exchange(params, key, scfg, is_grad=False,
+                                   masks=masks)
         mean_p = jax.tree.map(lambda x: jnp.mean(x, 0, keepdims=True), params)
         consensus = jax.tree.reduce(
             lambda a, x: a + jnp.sum(jnp.square(x.astype(jnp.float32))),
             jax.tree.map(lambda x, m: x - m, params, mean_p), jnp.float32(0))
-        return params, opt_state, loss / n, consensus
+        return params, opt_state, loss / n, consensus, ch_state
 
-    history = {"step": [], "loss": [], "consensus": [], "eval": []}
+    history = {"step": [], "loss": [], "consensus": [], "eval": [],
+               "channel": repr(channel),
+               "channel_effective_p": channel.effective_p() if rps_agg
+               else 0.0}
     for t in range(scfg.steps):
         kt = jax.random.fold_in(key, t)
         lr = scfg.lr * min(1.0, (t + 1) / max(scfg.warmup, 1))
         batch = batch_fn(t)
-        params, opt_state, loss, consensus = step_fn(
-            params, opt_state, batch, kt, jnp.float32(lr),
+        params, opt_state, loss, consensus, ch_state = step_fn(
+            params, opt_state, batch, kt, jnp.float32(lr), ch_state,
             exchange=(t % scfg.exchange_every == 0))
         if t % scfg.eval_every == 0 or t == scfg.steps - 1:
             history["step"].append(t)

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import channels as channels_lib
 from repro.configs.base import ArchConfig
 from repro.core import rps as rps_lib
 from repro.launch import sharding as shlib
@@ -51,6 +52,14 @@ class TrainConfig:
     exchange_every: int = 1                # steps between exchanges
                                            # (>1 = local-SGD variant,
                                            # beyond-paper)
+    channel: Optional[str] = None          # repro.channels spec for the
+                                           # drop process (DESIGN.md §9);
+                                           # None = i.i.d. Bernoulli
+                                           # (drop_rate), the seed behaviour
+                                           # — and the seed train_step
+                                           # signature. A channel spec makes
+                                           # train_step carry channel state:
+                                           # see make_train_setup.
 
 
 def _is_model_mode(agg: str) -> bool:
@@ -66,11 +75,27 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
     replicas (the paper initialises all x_1^(i) equal).
     train_step(params, opt_state, batch, step, key) -> (params, opt_state,
     metrics). batch has leading worker dim n_rps.
+
+    With ``tcfg.channel`` set (and an rps aggregator — baselines ignore
+    channels), the drop masks come from the configured ``repro.channels``
+    channel instead of the i.i.d. Bernoulli draw, and the
+    step carries the channel state: ``train_step(params, opt_state, batch,
+    step, key, ch_state) -> (params, opt_state, metrics, ch_state)`` with
+    the initial state from ``train_step.init_channel_state(key)`` (the
+    channel itself is exposed as ``train_step.channel``). Channel state is
+    replicated — every device evolves it identically from the shared key,
+    like the masks themselves.
     """
     n_rps = 1
     for a in rps_axes:
         n_rps *= mesh.shape[a]
     opt = make_optimizer(tcfg.optimizer)
+    channel = channels_lib.make_channel(tcfg.channel, n_rps, tcfg.drop_rate)
+    # only rps aggregators consume masks (same gate as the simulator's
+    # rps_agg) — a channel configured alongside an allreduce/none baseline
+    # keeps the seed 5-arg signature and samples nothing
+    stateful = tcfg.channel is not None \
+        and tcfg.aggregator.startswith("rps")
 
     def init_state(key):
         p1 = model.init(key)
@@ -84,8 +109,15 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
                                    fsdp_axis=fsdp_axis, stacked=True)
         return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs), pspecs
 
-    def _exchange(tree, key, mode):
+    def _exchange(tree, key, mode=None, masks=None):
         """Drop-masked exchange over the RPS axes (stacked worker dim 0).
+
+        ``mode=None`` derives the exchange mode from the aggregator (None
+        is the *only* sentinel — the seed code did ``mode = mode or rmode``,
+        which silently overwrote any falsy caller value). ``masks`` is an
+        optional precomputed ``(rs, ag)`` pair from a channel, replicated
+        into the manual region; None keeps the in-body Bernoulli draw,
+        bit-identical to the seed path.
 
         Fully-manual shard_map over *all* mesh axes with the param
         PartitionSpecs as in_specs: every leaf arrives as its local shard,
@@ -100,11 +132,13 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
         especs = shlib.param_specs(jax.eval_shape(lambda t: t, tree), cfg,
                                    worker_axes=rps_axes,
                                    fsdp_axis=fsdp_axis, stacked=True)
-        rmode = "model" if _is_model_mode(tcfg.aggregator) else "grad_renorm"
-        mode = mode or rmode
+        if mode is None:
+            mode = ("model" if _is_model_mode(tcfg.aggregator)
+                    else "grad_renorm")
 
-        def body(t, key):
-            masks = rps_lib.sample_masks(key, n_rps, tcfg.drop_rate)
+        def body(t, key, masks):
+            if masks is None:
+                masks = rps_lib.sample_masks(key, n_rps, tcfg.drop_rate)
 
             def one(x):
                 shp = x.shape
@@ -116,13 +150,20 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
 
             return jax.tree.map(one, t)
 
+        if masks is None:
+            fn = jax.shard_map(
+                lambda t, k: body(t, k, None), mesh=mesh,
+                in_specs=(especs, P()), out_specs=especs,
+                axis_names=set(mesh.axis_names))
+            return fn(tree, key)
         fn = jax.shard_map(body, mesh=mesh,
-                           in_specs=(especs, P()), out_specs=especs,
+                           in_specs=(especs, P(), (P(), P())),
+                           out_specs=especs,
                            axis_names=set(mesh.axis_names))
-        return fn(tree, key)
+        return fn(tree, key, masks)
 
     # ---- the step ---------------------------------------------------------
-    def train_step(params, opt_state, batch, step, key):
+    def train_step(params, opt_state, batch, step, key, ch_state=None):
         # XLA leaves while-loop carries (the grad accumulator) replicated
         # without explicit annotations — pin grads to the param shardings.
         _pspecs = shlib.param_specs(jax.eval_shape(lambda t: t, params), cfg,
@@ -178,6 +219,13 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
                 total_loss, has_aux=True)(params, batch)
             grads = _pin(grads)
 
+        masks = None
+        if stateful:
+            # channel time advances every step, exchanged or not (a trace
+            # cursor / burst state tracks wall-clock iterations)
+            rs, ag, ch_state = channel.sample(key, ch_state)
+            masks = (rs, ag)
+
         lr = jnp.float32(tcfg.lr)
         if _is_model_mode(tcfg.aggregator) or tcfg.aggregator == "none":
             # local step, then model exchange (Algorithm 1)
@@ -185,20 +233,25 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
             if tcfg.exchange_every > 1:
                 new_params = jax.lax.cond(
                     step % tcfg.exchange_every == 0,
-                    lambda t: _exchange(t, key, None),
+                    lambda t: _exchange(t, key, None, masks),
                     lambda t: t, new_params)
             else:
-                new_params = _exchange(new_params, key, None)
+                new_params = _exchange(new_params, key, None, masks)
         else:
             # gradient exchange, then step
             grads = _exchange(grads, key,
                               "grad_renorm" if tcfg.aggregator == "rps_grad"
-                              else None)
+                              else None, masks)
             new_params, opt_state = opt.update(grads, opt_state, params, lr)
         mloss = loss / n_rps
-        return new_params, opt_state, {"loss": mloss,
-                                       "lr": lr,
-                                       **{k: jnp.mean(v) for k, v in
-                                          (metrics or {}).items()}}
+        out_metrics = {"loss": mloss,
+                       "lr": lr,
+                       **{k: jnp.mean(v) for k, v in
+                          (metrics or {}).items()}}
+        if stateful:
+            return new_params, opt_state, out_metrics, ch_state
+        return new_params, opt_state, out_metrics
 
+    train_step.channel = channel
+    train_step.init_channel_state = channel.init_state
     return init_state, train_step, state_shardings

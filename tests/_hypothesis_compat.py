@@ -1,0 +1,85 @@
+"""Minimal deterministic stand-in for `hypothesis` when it is not installed.
+
+The tier-1 suite must run in environments without the hypothesis package
+(it cannot be installed in the sealed CI container). This shim implements
+just the subset the tests use — ``given``, ``settings``,
+``strategies.sampled_from/floats/integers`` — by sampling a fixed number of
+deterministic examples from a seeded RNG. No shrinking, no database; the
+point is coverage of the same parameter space, reproducibly.
+
+Usage (in test modules):
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:            # pragma: no cover - env dependent
+        from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def integers(min_value, max_value):
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+st = types.SimpleNamespace(sampled_from=sampled_from, floats=floats,
+                           integers=integers, booleans=booleans)
+
+
+def given(**strategies):
+    def deco(fn):
+        # NB: no functools.wraps — pytest would introspect the wrapped
+        # signature (via __wrapped__) and demand fixtures for the strategy
+        # parameters; like hypothesis, the wrapper exposes a zero-arg
+        # signature and fills the parameters itself.
+        def wrapper():
+            rng = np.random.default_rng(0xC0FFEE)
+            n = getattr(wrapper, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in strategies.items()}
+                fn(**drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._max_examples = DEFAULT_MAX_EXAMPLES
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco

@@ -6,8 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                  # sealed envs: deterministic fallback
+    from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import load_pytree, save_pytree
 from repro.data.synthetic import CharLMTask, TeacherTask

@@ -1,8 +1,12 @@
 """Property tests of the α₁/α₂ theory (Lemmas 7/8, Corollary 2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                  # sealed envs: deterministic fallback
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import theory, wmatrix
 
