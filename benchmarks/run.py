@@ -16,7 +16,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (alpha, channels_bench, colocation, convergence,
-                            grad_vs_model, kernels_bench, speedup)
+                            grad_vs_model, kernels_bench, server_sweep,
+                            speedup)
     all_benches = {
         "alpha": alpha.run,               # Figs 2/3
         "convergence": convergence.run,   # Fig 4
@@ -25,6 +26,7 @@ def main() -> None:
         "speedup": speedup.run,           # Thm 1 / Cor 2 trends
         "kernels": kernels_bench.run,     # ours
         "channels": channels_bench.run,   # beyond-paper: non-i.i.d. loss
+        "server_sweep": server_sweep.run,  # Cor 2 server-count claim
     }
     names = list(all_benches) if not args.only else args.only.split(",")
     csv_rows = []

@@ -16,12 +16,17 @@ Contract:
     jit-traceable: every device calls it with the *shared* per-step key and
     state, so the global masks are known everywhere without communication —
     the property Algorithm 1's local renormalisation relies on.
-  - ``rs[i, j]``: worker i's block-j packet reaches the owner (device j) —
-    the directed link i → j. ``ag[i, j]``: the broadcast of block j reaches
-    worker i — the directed link j → i. Implementations index any per-link
-    quantity accordingly (AG uses the transposed link matrix).
-  - The diagonal is always forced True (a worker never drops its own
-    block); use :func:`force_diag`.
+  - Masks are rectangular ``(n, s)`` where ``s`` is the number of
+    parameter-server blocks (DESIGN.md §10); ``s`` defaults to ``n`` — the
+    paper's square one-server-per-worker layout, bit-identical to the seed.
+    ``rs[i, j]``: worker i's block-j packet reaches the owner (worker
+    ``j % n``) — the directed link i → owner(j). ``ag[i, j]``: the
+    broadcast of block j reaches worker i — the directed link owner(j) → i.
+    Per-link channels keep their link state square ``(n, n)`` and gather
+    block columns through the owner map (:meth:`Channel.link_cols`); AG
+    uses the transposed link matrix.
+  - The owner entries (the diagonal when s == n) are always forced True
+    (a worker never drops its own block); use :func:`force_diag`.
   - ``effective_p()`` is the stationary marginal drop probability of an
     off-diagonal link, averaged over links — the scalar that plugs into the
     α₁/α₂ bounds (``core/theory.py``) to extend the Corollary-2 rate
@@ -34,24 +39,41 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import rps as rps_lib
+
 MaskPair = Tuple[jax.Array, jax.Array]
 
 
 def force_diag(rs: jax.Array, ag: jax.Array) -> MaskPair:
-    """Own blocks never leave the device: diagonal is always delivered."""
-    eye = jnp.eye(rs.shape[-1], dtype=bool)
-    return rs | eye, ag | eye
+    """Own blocks never leave the device: the owner entry of every block
+    column — the diagonal in the square s == n layout — is always
+    delivered."""
+    own = rps_lib.owner_mask(rs.shape[-2], rs.shape[-1])
+    return rs | own, ag | own
 
 
 class Channel:
-    """Base class; subclasses set ``n`` and implement ``sample``."""
+    """Base class; subclasses set ``n`` (and optionally ``s``) and
+    implement ``sample``."""
 
     name: str = "channel"
 
-    def __init__(self, n: int):
+    def __init__(self, n: int, s: Optional[int] = None):
         if n < 1:
             raise ValueError(f"need n >= 1 workers, got {n}")
         self.n = int(n)
+        self.s = self.n if s is None else int(s)
+        if self.s < 1:
+            raise ValueError(f"need s >= 1 server blocks, got {s}")
+        self._owners = rps_lib.owners(self.n, self.s)
+
+    def link_cols(self, link_mat: jax.Array) -> jax.Array:
+        """Gather a worker-link-indexed ``(n, n)`` matrix into block
+        columns ``(n, s)`` through the owner map. Identity when s == n, so
+        square-layout channels stay bit-identical to the seed draw."""
+        if self.s == self.n:
+            return link_mat
+        return link_mat[:, self._owners]
 
     # -- state ------------------------------------------------------------
     def init_state(self, key: Optional[jax.Array] = None) -> Any:
@@ -71,5 +93,8 @@ class Channel:
     def effective_p(self) -> float:
         raise NotImplementedError
 
+    def _dims(self) -> str:
+        return f"n={self.n}" + (f", s={self.s}" if self.s != self.n else "")
+
     def __repr__(self) -> str:
-        return f"{type(self).__name__}(n={self.n})"
+        return f"{type(self).__name__}({self._dims()})"

@@ -7,7 +7,7 @@ exactly (regression-tested in tests/test_channels.py).
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 
@@ -18,19 +18,19 @@ from repro.core import rps as rps_lib
 class BernoulliChannel(Channel):
     name = "bernoulli"
 
-    def __init__(self, n: int, p: float = 0.0):
-        super().__init__(n)
+    def __init__(self, n: int, p: float = 0.0, s: Optional[int] = None):
+        super().__init__(n, s)
         if not 0.0 <= p <= 1.0:
             raise ValueError(f"drop probability p={p} outside [0, 1]")
         self.p = float(p)
 
     def sample(self, key: jax.Array, state: Any = None
                ) -> Tuple[jax.Array, jax.Array, Any]:
-        rs, ag = rps_lib.sample_masks(key, self.n, self.p)
+        rs, ag = rps_lib.sample_masks(key, self.n, self.p, self.s)
         return rs, ag, state
 
     def effective_p(self) -> float:
         return self.p
 
     def __repr__(self) -> str:
-        return f"BernoulliChannel(n={self.n}, p={self.p})"
+        return f"BernoulliChannel({self._dims()}, p={self.p})"

@@ -22,7 +22,7 @@ marginal (exponential tail) keeps ``effective_p`` analytic:
 from __future__ import annotations
 
 import math
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,8 +41,9 @@ class DeadlineChannel(Channel):
 
     def __init__(self, n: int, deadline_ms: float = 10.0,
                  base_ms: float = 2.0, jitter_ms: float = 2.0,
-                 straggler_frac: float = 0.1, straggler_mult: float = 4.0):
-        super().__init__(n)
+                 straggler_frac: float = 0.1, straggler_mult: float = 4.0,
+                 s: Optional[int] = None):
+        super().__init__(n, s)
         if deadline_ms <= 0 or jitter_ms <= 0 or base_ms < 0:
             raise ValueError("latencies must be positive")
         if not 0.0 <= straggler_frac <= 1.0:
@@ -62,11 +63,12 @@ class DeadlineChannel(Channel):
                          self.base_ms)                       # per sender
         lat_rs = base[:, None] + \
             jax.random.exponential(k_rs, (n, n)) * self.jitter_ms
-        # ag[i, j]: owner j broadcasts block j to receiver i — sender is j
+        # ag link [i, j]: worker j broadcasts its owned blocks to receiver
+        # i — sender is j; the owner map picks the sender column per block
         lat_ag = base[None, :] + \
             jax.random.exponential(k_ag, (n, n)) * self.jitter_ms
-        rs, ag = force_diag(lat_rs <= self.deadline_ms,
-                            lat_ag <= self.deadline_ms)
+        rs, ag = force_diag(self.link_cols(lat_rs <= self.deadline_ms),
+                            self.link_cols(lat_ag <= self.deadline_ms))
         return rs, ag, state
 
     def effective_p(self) -> float:
@@ -77,5 +79,6 @@ class DeadlineChannel(Channel):
                                     self.jitter_ms))
 
     def __repr__(self) -> str:
-        return (f"DeadlineChannel(n={self.n}, deadline={self.deadline_ms}ms,"
+        return (f"DeadlineChannel({self._dims()}, "
+                f"deadline={self.deadline_ms}ms,"
                 f" eff_p={self.effective_p():.4f})")

@@ -37,8 +37,8 @@ class GilbertElliottChannel(Channel):
 
     def __init__(self, n: int, p_bad: float = 0.5, burst: float = 8.0,
                  p: Optional[float] = None, p_gb: Optional[float] = None,
-                 p_good: float = 0.0):
-        super().__init__(n)
+                 p_good: float = 0.0, s: Optional[int] = None):
+        super().__init__(n, s)
         if burst < 1.0:
             raise ValueError(f"burst (mean bad sojourn) must be >= 1, "
                              f"got {burst}")
@@ -90,8 +90,11 @@ class GilbertElliottChannel(Channel):
         p_link = jnp.where(bad, self.p_bad, self.p_good)
         rs_drop = jax.random.uniform(k_rs, shape) < p_link
         ag_drop = jax.random.uniform(k_ag, shape) < p_link
-        # ag[i, j] is the j → i broadcast: transpose the link-indexed draw
-        rs, ag = force_diag(~rs_drop, ~ag_drop.T)
+        # link-indexed (n, n) delivery → (n, s) block columns via the owner
+        # map; ag[i, j] is the owner(j) → i broadcast, so the AG leg gathers
+        # from the transposed link-indexed draw
+        rs, ag = force_diag(self.link_cols(~rs_drop),
+                            self.link_cols(~ag_drop.T))
         return rs, ag, {"bad": bad}
 
     def effective_p(self) -> float:
@@ -99,6 +102,6 @@ class GilbertElliottChannel(Channel):
         return pi * self.p_bad + (1.0 - pi) * self.p_good
 
     def __repr__(self) -> str:
-        return (f"GilbertElliottChannel(n={self.n}, p_bad={self.p_bad}, "
+        return (f"GilbertElliottChannel({self._dims()}, p_bad={self.p_bad}, "
                 f"burst={self.burst}, p_gb={self.p_gb:.4f}, "
                 f"eff_p={self.effective_p():.4f})")

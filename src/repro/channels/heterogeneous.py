@@ -14,7 +14,7 @@ simulator and trainer too.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple, Union
+from typing import Any, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +26,9 @@ from repro.channels.base import Channel, force_diag
 class HeterogeneousChannel(Channel):
     name = "hetero"
 
-    def __init__(self, n: int, p_matrix: Union[np.ndarray, jax.Array]):
-        super().__init__(n)
+    def __init__(self, n: int, p_matrix: Union[np.ndarray, jax.Array],
+                 s: Optional[int] = None):
+        super().__init__(n, s)
         pm = np.asarray(p_matrix, np.float32)
         if pm.shape != (n, n):
             raise ValueError(f"p_matrix shape {pm.shape} != ({n}, {n})")
@@ -37,7 +38,8 @@ class HeterogeneousChannel(Channel):
 
     @classmethod
     def pods(cls, n: int, n_pods: int, p_intra: float = 0.0,
-             p_cross: float = 0.2) -> "HeterogeneousChannel":
+             p_cross: float = 0.2,
+             s: Optional[int] = None) -> "HeterogeneousChannel":
         """Two-tier fabric: n workers in n_pods equal pods (contiguous
         ranks); intra-pod links drop at p_intra, cross-pod at p_cross."""
         if n % n_pods:
@@ -45,7 +47,7 @@ class HeterogeneousChannel(Channel):
         pod = np.arange(n) // (n // n_pods)
         same = pod[:, None] == pod[None, :]
         pm = np.where(same, p_intra, p_cross).astype(np.float32)
-        return cls(n, pm)
+        return cls(n, pm, s=s)
 
     def sample(self, key: jax.Array, state: Any = None
                ) -> Tuple[jax.Array, jax.Array, Any]:
@@ -53,7 +55,7 @@ class HeterogeneousChannel(Channel):
         shape = (self.n, self.n)
         rs = jax.random.uniform(k_rs, shape) >= self.p_matrix
         ag = jax.random.uniform(k_ag, shape) >= self.p_matrix.T
-        rs, ag = force_diag(rs, ag)
+        rs, ag = force_diag(self.link_cols(rs), self.link_cols(ag))
         return rs, ag, state
 
     def effective_p(self) -> float:
@@ -62,5 +64,5 @@ class HeterogeneousChannel(Channel):
         return float(pm[off].mean()) if self.n > 1 else 0.0
 
     def __repr__(self) -> str:
-        return (f"HeterogeneousChannel(n={self.n}, "
+        return (f"HeterogeneousChannel({self._dims()}, "
                 f"eff_p={self.effective_p():.4f})")

@@ -73,20 +73,33 @@ def parse_spec(spec: str) -> Tuple[str, Dict[str, object]]:
 
 
 def make_channel(spec: ChannelSpec, n: int,
-                 default_p: float = 0.0) -> Channel:
-    """Resolve a channel spec for an n-worker exchange (see module doc)."""
+                 default_p: float = 0.0,
+                 s: Optional[int] = None) -> Channel:
+    """Resolve a channel spec for an n-worker exchange (see module doc).
+
+    ``s`` is the number of parameter-server blocks (DESIGN.md §10);
+    ``None`` keeps the square s = n layout. A spec string may also carry
+    ``s=<int>`` (e.g. ``"bernoulli:p=0.1,s=4"``); an explicit ``s``
+    argument must agree with it."""
     if isinstance(spec, Channel):
         if spec.n != n:
             raise ValueError(f"channel built for n={spec.n}, need n={n}")
+        if s is not None and spec.s != s:
+            raise ValueError(f"channel built for s={spec.s}, need s={s}")
         return spec
     if spec is None or spec == "":
-        return BernoulliChannel(n, default_p)
+        return BernoulliChannel(n, default_p, s=s)
     name, kwargs = parse_spec(spec)
     if name not in _REGISTRY:
         raise ValueError(f"unknown channel {name!r}; "
                          f"known: {', '.join(channel_names())}")
     if name == "bernoulli":
         kwargs.setdefault("p", default_p)
+    if s is not None:
+        if kwargs.get("s", s) != s:
+            raise ValueError(f"spec {spec!r} sets s={kwargs['s']} but the "
+                             f"harness is configured for s={s}")
+        kwargs["s"] = s
     try:
         return _REGISTRY[name](n, **kwargs)
     except TypeError as e:
@@ -94,15 +107,17 @@ def make_channel(spec: ChannelSpec, n: int,
 
 
 def _build_hetero(n: int, n_pods: int = 2, p_intra: float = 0.0,
-                  p_cross: float = 0.2) -> HeterogeneousChannel:
-    return HeterogeneousChannel.pods(n, n_pods, p_intra, p_cross)
+                  p_cross: float = 0.2,
+                  s: Optional[int] = None) -> HeterogeneousChannel:
+    return HeterogeneousChannel.pods(n, n_pods, p_intra, p_cross, s=s)
 
 
 def _build_trace(n: int, path: Optional[str] = None,
-                 lam: float = 8000.0, prio: float = 0.8) -> TraceChannel:
+                 lam: float = 8000.0, prio: float = 0.8,
+                 s: Optional[int] = None) -> TraceChannel:
     if path is not None:
-        return TraceChannel.from_npz(n, str(path))
-    return TraceChannel.from_netsim(n, lam, prio)
+        return TraceChannel.from_npz(n, str(path), s=s)
+    return TraceChannel.from_netsim(n, lam, prio, s=s)
 
 
 register("bernoulli", BernoulliChannel, aliases=("iid", "bern"))

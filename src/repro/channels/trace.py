@@ -40,8 +40,9 @@ def load_trace(path: str) -> Dict[str, np.ndarray]:
 class TraceChannel(Channel):
     name = "trace"
 
-    def __init__(self, n: int, trace: Dict[str, np.ndarray]):
-        super().__init__(n)
+    def __init__(self, n: int, trace: Dict[str, np.ndarray],
+                 s: Optional[int] = None):
+        super().__init__(n, s)
         up = np.asarray(trace["up"], np.float32)
         down = np.asarray(trace["down"], np.float32)
         if up.ndim != 2 or up.shape != down.shape or up.shape[0] < 1:
@@ -58,15 +59,17 @@ class TraceChannel(Channel):
 
     @classmethod
     def from_netsim(cls, n: int, lam: float, prio: float,
-                    cfg: Optional[object] = None) -> "TraceChannel":
+                    cfg: Optional[object] = None,
+                    s: Optional[int] = None) -> "TraceChannel":
         """Run the §7 flow simulation and replay its induced learning loss."""
         from repro.netsim import sim as netsim
         cfg = cfg if cfg is not None else netsim.NetConfig()
-        return cls(n, netsim.export_trace(lam, prio, cfg))
+        return cls(n, netsim.export_trace(lam, prio, cfg), s=s)
 
     @classmethod
-    def from_npz(cls, n: int, path: str) -> "TraceChannel":
-        return cls(n, load_trace(path))
+    def from_npz(cls, n: int, path: str,
+                 s: Optional[int] = None) -> "TraceChannel":
+        return cls(n, load_trace(path), s=s)
 
     def init_state(self, key: Optional[jax.Array] = None) -> Any:
         return {"t": jnp.int32(0)}
@@ -80,7 +83,7 @@ class TraceChannel(Channel):
         k_rs, k_ag = jax.random.split(key)
         rs = jax.random.uniform(k_rs, (self.n, self.n)) >= p
         ag = jax.random.uniform(k_ag, (self.n, self.n)) >= p.T
-        rs, ag = force_diag(rs, ag)
+        rs, ag = force_diag(self.link_cols(rs), self.link_cols(ag))
         return rs, ag, {"t": state["t"] + 1}
 
     def effective_p(self) -> float:
@@ -91,5 +94,5 @@ class TraceChannel(Channel):
         return float(pm[:, off].mean())
 
     def __repr__(self) -> str:
-        return (f"TraceChannel(n={self.n}, periods={self.n_periods}, "
+        return (f"TraceChannel({self._dims()}, periods={self.n_periods}, "
                 f"eff_p={self.effective_p():.4f})")

@@ -19,10 +19,14 @@ from the sum, as in stock gradient-averaging systems) and applies **no
 update** for AG-dropped blocks — the two asymmetries that make gradient
 averaging fragile under loss.
 
-Everything here runs *inside* an existing shard_map/pjit context; the owner
-of block j is the j-th device on the RPS axes (the paper's random owner
-assignment is symmetric across blocks — validated against the permuted
-W-matrix oracle in tests).
+Everything here runs *inside* an existing shard_map/pjit context. The number
+of parameter-server blocks ``s`` is decoupled from the worker count n
+(DESIGN.md §10): masks are rectangular (n, s), block j is owned by worker
+``j % n`` (round-robin; multiple blocks per worker when s > n), and the
+default s = n reproduces the paper's one-server-per-worker layout
+bit-identically — owner j is then the j-th device on the RPS axes (the
+paper's random owner assignment is symmetric across blocks — validated
+against the permuted W-matrix oracle in tests).
 """
 from __future__ import annotations
 
@@ -41,11 +45,18 @@ def _axis_tuple(axis_name: AxisNames) -> Tuple[str, ...]:
     return (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
 
 
+def _one_axis_size(a: str) -> int:
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(a)
+    from jax import core as _core       # jax < 0.5: static axis-env lookup
+    return int(_core.axis_frame(a))
+
+
 def axis_size(axis_name: AxisNames) -> int:
     names = _axis_tuple(axis_name)
     n = 1
     for a in names:
-        n *= lax.axis_size(a)
+        n *= _one_axis_size(a)
     return n
 
 
@@ -57,12 +68,39 @@ def _my_index(axis_name: AxisNames) -> jax.Array:
     return idx
 
 
-def sample_masks(key: jax.Array, n: int, p: float):
-    """(rs, ag) boolean (n, n) masks, diagonal forced True.
+def owners(n: int, s: Optional[int] = None) -> jnp.ndarray:
+    """Block → owner-worker assignment for s server blocks over n workers.
 
-    rs[i, j]: worker i's block-j packet reaches the owner (device j).
+    Round-robin: block j is averaged by worker ``j % n``. With ``s == n``
+    (the paper's one-server-per-worker layout, and the default everywhere)
+    this is the identity map; with ``s < n`` only the first s workers own a
+    block; with ``s > n`` workers own multiple blocks (DESIGN.md §10).
+    """
+    s = n if s is None else int(s)
+    return jnp.arange(s) % n
+
+
+def owner_mask(n: int, s: Optional[int] = None) -> jnp.ndarray:
+    """Boolean (n, s) matrix, True at (owner(j), j) — the entries every
+    drop mask forces True (a worker never drops its own block). For
+    ``s == n`` this is the identity matrix (the seed's forced diagonal)."""
+    s = n if s is None else int(s)
+    own = owners(n, s)
+    return jnp.zeros((n, s), bool).at[own, jnp.arange(s)].set(True)
+
+
+def sample_masks(key: jax.Array, n: int, p: float,
+                 s: Optional[int] = None):
+    """(rs, ag) boolean (n, s) masks, owner entries forced True.
+
+    rs[i, j]: worker i's block-j packet reaches the owner (worker j % n).
     ag[i, j]: the broadcast of block j reaches worker i.
     Computed identically on every device from the shared per-step key.
+
+    ``s`` is the number of parameter-server blocks (DESIGN.md §10);
+    ``s=None`` keeps the paper's square ``s == n`` layout and is
+    bit-identical to the seed behaviour (the forced owner entries are then
+    the diagonal).
 
     This is the i.i.d. Bernoulli drop process of the paper. The pluggable
     generalisation lives in ``repro.channels`` (DESIGN.md §9): any
@@ -71,16 +109,59 @@ def sample_masks(key: jax.Array, n: int, p: float):
     ``channels.BernoulliChannel`` delegates here so the default channel is
     bit-identical to this function.
     """
+    s = n if s is None else int(s)
     k1, k2 = jax.random.split(key)
-    rs = jax.random.bernoulli(k1, 1.0 - p, (n, n))
-    ag = jax.random.bernoulli(k2, 1.0 - p, (n, n))
-    eye = jnp.eye(n, dtype=bool)
-    return rs | eye, ag | eye
+    rs = jax.random.bernoulli(k1, 1.0 - p, (n, s))
+    ag = jax.random.bernoulli(k2, 1.0 - p, (n, s))
+    own = owner_mask(n, s)
+    return rs | own, ag | own
+
+
+def _scatter_layout(n: int, s: int):
+    """Static layout of s round-robin-owned blocks on an n-device axis.
+
+    ``psum_scatter(tiled)`` hands device i the i-th *contiguous* chunk of
+    the leading dim, so the s blocks (owner(j) = j % n) are padded with
+    dummy blocks up to S = k·n (k = ceil(s/n)) and permuted to owner-major
+    order: scatter row i·k + c holds block c·n + i, i.e. device i receives
+    exactly the k blocks it owns. Returns (k, S, order, inv) with
+    ``order``/``inv`` the permutation and its inverse — both ``None`` when
+    k == 1 (s ≤ n, owner(j) = j), where the permutation is the identity,
+    so the default square layout skips the gathers entirely.
+    """
+    k = -(-s // n)
+    S = k * n
+    if k == 1:                            # s <= n: identity permutation
+        return k, S, None, None
+    r = jnp.arange(S)
+    order = (r % k) * n + r // k          # scatter row -> block index
+    inv = (r % n) * k + r // n            # block index -> scatter row
+    return k, S, order, inv
+
+
+def _pad_mask_blocks(m: jax.Array, S: int) -> jax.Array:
+    """Extend an (n, s) mask with always-delivered dummy block columns."""
+    s = m.shape[1]
+    if S == s:
+        return m
+    return jnp.concatenate(
+        [m, jnp.ones((m.shape[0], S - s), m.dtype)], axis=1)
+
+
+def _masks_to_scatter(rs: jax.Array, ag: jax.Array, S: int, order):
+    """(rs, ag) padded to S dummy-extended columns and permuted to the
+    owner-major scatter order — the one mask transformation both collective
+    paths share (``order=None`` = identity, the s ≤ n layouts)."""
+    rs_sc, ag_sc = _pad_mask_blocks(rs, S), _pad_mask_blocks(ag, S)
+    if order is not None:
+        rs_sc, ag_sc = rs_sc[:, order], ag_sc[:, order]
+    return rs_sc, ag_sc
 
 
 def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
                       axis_name: AxisNames, *, mode: str = "model",
-                      masks=None, rs_dtype=jnp.float32):
+                      masks=None, rs_dtype=jnp.float32,
+                      s: Optional[int] = None):
     """One RPS round on a flat per-device vector v: (D,) -> (D,).
 
     mode:
@@ -90,6 +171,13 @@ def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
       "grad_renorm"— RS-drop-tolerant gradient aggregation (renormalised;
                      AG-drop falls back to the local gradient). This is the
                      mode used for FSDP-sharded archs (DESIGN.md §5).
+
+    ``s`` — number of parameter-server blocks (DESIGN.md §10). Defaults to
+    the worker count n (inferred from ``masks`` when given); ``s == n`` is
+    bit-identical to the seed one-block-per-worker layout. Other s values
+    pad the block table to k·n dummy-extended blocks in owner-major order
+    so the schedule is still one psum_scatter + one all_gather.
+
     Returns the exchanged vector (for "grad" modes: the per-block gradient
     each worker should apply).
     """
@@ -97,13 +185,20 @@ def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
     n = axis_size(axis_name)
     i = _my_index(axis_name)
     D = v.shape[0]
-    pad = (-D) % n
-    vp = jnp.pad(v, (0, pad)) if pad else v
-    blk = (D + pad) // n
-    blocks = vp.reshape(n, blk)
 
-    rs, ag = sample_masks(key, n, p) if masks is None else masks
-    rs_f = rs.astype(rs_dtype)
+    rs, ag = sample_masks(key, n, p, s) if masks is None else masks
+    s = rs.shape[1]
+    k, S, order, _inv = _scatter_layout(n, s)
+
+    pad = (-D) % s
+    blk = (D + pad) // s
+    vp = jnp.pad(v, (0, pad + (S - s) * blk)) \
+        if pad or S != s else v
+    blocks = vp.reshape(S, blk)
+    rs_sc, ag_sc = _masks_to_scatter(rs, ag, S, order)
+    if order is not None:                   # owner-major scatter order
+        blocks = blocks[order]
+    rs_f = rs_sc.astype(rs_dtype)
 
     # ---- Reduce-Scatter with send-side drops --------------------------
     # rs_dtype=f32 (default): renormalised-mean precision / the paper-
@@ -112,12 +207,12 @@ def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
     sums = masked
     for a in names:     # scatter over the flattened axes, major to minor
         sums = lax.psum_scatter(sums, a, scatter_dimension=0, tiled=True)
-    sums = sums.reshape(blk)   # device j holds Σ_i rs[i, j]·v_i^(j)
-    counts = jnp.sum(rs_f.astype(jnp.float32), axis=0)   # (n,) known locally
-    my_count = counts[i].astype(rs_dtype)
+    sums = sums.reshape(k, blk)   # my k owned blocks: Σ_i rs[i, j]·v_i^(j)
+    counts = jnp.sum(rs_f.astype(jnp.float32), axis=0)   # (S,) known locally
+    my_counts = lax.dynamic_slice_in_dim(counts, i * k, k).astype(rs_dtype)
 
     if mode == "model" or mode == "grad_renorm":
-        tilde = sums / jnp.maximum(my_count, 1.0)
+        tilde = sums / jnp.maximum(my_counts[:, None], 1.0)
     elif mode == "grad":
         tilde = sums / float(n)                       # no renormalisation
     else:
@@ -127,30 +222,38 @@ def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
     gathered = tilde.astype(blocks.dtype)
     for a in reversed(names):
         gathered = lax.all_gather(gathered, a, axis=0, tiled=True)
-    gathered = gathered.reshape(n, blk)
-    recv = ag[i][:, None]
+    gathered = gathered.reshape(S, blk)
+    recv = ag_sc[i][:, None]
     if mode == "model" or mode == "grad_renorm":
         out = jnp.where(recv, gathered, blocks)       # keep local block
     else:                                             # "grad": no update
         out = jnp.where(recv, gathered, jnp.zeros_like(blocks))
+    if _inv is not None:
+        out = out[_inv]                               # back to block order
     out = out.reshape(-1)
-    return out[:D] if pad else out
+    return out[:D] if (pad or S != s) else out
 
 
 def rps_exchange(tree: Any, key: jax.Array, p: float,
                  axis_name: AxisNames, *, mode: str = "model",
-                 masks=None) -> Any:
-    """Pytree wrapper around :func:`rps_exchange_flat`."""
+                 masks=None, rs_dtype=jnp.float32,
+                 s: Optional[int] = None) -> Any:
+    """Pytree wrapper around :func:`rps_exchange_flat`.
+
+    Forwards ``rs_dtype`` (the seed version silently dropped it, so bf16 RS
+    accumulation was unreachable from the pytree API) and the server-block
+    count ``s``.
+    """
     flat, unravel = ravel_pytree(tree)
     return unravel(rps_exchange_flat(flat, key, p, axis_name, mode=mode,
-                                     masks=masks))
+                                     masks=masks, rs_dtype=rs_dtype, s=s))
 
 
-def _blockify(x: jax.Array, n: int, model_dim: Optional[int]):
-    """Reshape a (worker-local) leaf to (n, blk, m) where m collects the
-    model-sharded dim (kept intact — reshaping it would force an XLA
-    resharding gather) and the remaining dims are flattened and padded to a
-    multiple of n. Returns (blocks, restore_fn)."""
+def _blockify(x: jax.Array, s: int, model_dim: Optional[int]):
+    """Reshape a (worker-local) leaf to (s, blk, m) — one row per server
+    block — where m collects the model-sharded dim (kept intact — reshaping
+    it would force an XLA resharding gather) and the remaining dims are
+    flattened and padded to a multiple of s. Returns (blocks, restore_fn)."""
     shape = x.shape
     if model_dim is None:
         flat = x.reshape(-1, 1)
@@ -158,10 +261,10 @@ def _blockify(x: jax.Array, n: int, model_dim: Optional[int]):
         flat = jnp.moveaxis(x, model_dim, -1)
         flat = flat.reshape(-1, shape[model_dim])
     free, m = flat.shape
-    pad = (-free) % n
+    pad = (-free) % s
     if pad:
         flat = jnp.pad(flat, ((0, pad), (0, 0)))
-    blocks = flat.reshape(n, (free + pad) // n, m)
+    blocks = flat.reshape(s, (free + pad) // s, m)
 
     def restore(b):
         f = b.reshape(free + pad, m)[:free]
@@ -181,7 +284,8 @@ def rps_exchange_leaf(x: jax.Array, rs: jax.Array, ag: jax.Array,
 
     `model_dim` marks a dim that stays auto-sharded (tensor-parallel): it is
     kept intact so no cross-model-axis resharding is triggered. Masks are the
-    shared (n, n) rs/ag from :func:`sample_masks` — reusing the same column j
+    shared (n, s) rs/ag from :func:`sample_masks` (s inferred from the mask
+    shape; s == n is the paper's square layout) — reusing the same column j
     for the j-th block of *every* leaf is exactly the paper's partition where
     block j is the union of all leaves' j-th blocks.
     """
@@ -189,7 +293,9 @@ def rps_exchange_leaf(x: jax.Array, rs: jax.Array, ag: jax.Array,
     names = _axis_tuple(axis_name)
     n = axis_size(axis_name)
     i = _my_index(axis_name)
-    blocks, restore = _blockify(x, n, model_dim)
+    s = rs.shape[1]
+    k, S, order, _inv = _scatter_layout(n, s)
+    blocks, restore = _blockify(x, s, model_dim)
 
     def pin(v):
         # keep the trailing model dim sharded on the auto axes — inside the
@@ -200,8 +306,13 @@ def rps_exchange_leaf(x: jax.Array, rs: jax.Array, ag: jax.Array,
         return jax.lax.with_sharding_constraint(
             v, _P(*([None] * (v.ndim - 1) + ["model"])))
 
+    if S != s:      # dummy blocks pad the table to k blocks per owner
+        blocks = jnp.pad(blocks, ((0, S - s),) + ((0, 0),) * (blocks.ndim - 1))
+    rs_sc, ag_sc = _masks_to_scatter(rs, ag, S, order)
+    if order is not None:                   # owner-major scatter order
+        blocks = blocks[order]
     blocks = pin(blocks)
-    rs_f = rs.astype(jnp.float32)
+    rs_f = rs_sc.astype(jnp.float32)
     # Reduce-Scatter accumulates in f32: the renormalised mean should not
     # round per-addend (also works around an XLA-CPU AllReducePromotion
     # crash on sub-32-bit reduce-scatter under partial-manual shard_map).
@@ -209,23 +320,26 @@ def rps_exchange_leaf(x: jax.Array, rs: jax.Array, ag: jax.Array,
     sums = masked
     for a in names:
         sums = pin(lax.psum_scatter(sums, a, scatter_dimension=0, tiled=True))
-    sums = pin(sums.reshape(blocks.shape[1:]))
+    sums = pin(sums.reshape((k,) + blocks.shape[1:]))
     counts = jnp.sum(rs_f, axis=0)
+    my_counts = lax.dynamic_slice_in_dim(counts, i * k, k)
     if mode in ("model", "grad_renorm"):
-        tilde = sums / jnp.maximum(counts[i], 1.0)
+        tilde = sums / jnp.maximum(my_counts[:, None, None], 1.0)
     elif mode == "grad":
         tilde = sums / float(n)
     else:
         raise ValueError(mode)
-    gathered = pin(tilde.astype(blocks.dtype)[None])  # AG moves model dtype
+    gathered = pin(tilde.astype(blocks.dtype))        # AG moves model dtype
     for a in reversed(names):
         gathered = pin(lax.all_gather(gathered, a, axis=0, tiled=True))
-    recv = ag[i][:, None, None]
+    recv = ag_sc[i][:, None, None]
     if mode in ("model", "grad_renorm"):
         out = jnp.where(recv, gathered, blocks)
     else:
         out = jnp.where(recv, gathered, jnp.zeros_like(blocks))
-    return restore(pin(out))
+    if _inv is not None:
+        out = out[_inv]                               # back to block order
+    return restore(pin(out[:s]))
 
 
 def _resolve_global_backend(backend: str) -> str:
@@ -242,7 +356,8 @@ def _resolve_global_backend(backend: str) -> str:
 
 def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
                         mode: str = "model", masks=None,
-                        backend: str = "auto") -> Any:
+                        backend: str = "auto",
+                        s: Optional[int] = None) -> Any:
     """Global-view exchange on *stacked* worker trees (leading dim n).
 
     Mathematically identical to the collective path (same masks, same block
@@ -251,15 +366,20 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
 
     ``masks``: optional precomputed ``(rs, ag)`` pair from any
     ``repro.channels`` channel; defaults to the i.i.d. Bernoulli draw from
-    ``sample_masks(key, n, p)``.
+    ``sample_masks(key, n, p, s)``.
+
+    ``s``: number of parameter-server blocks (DESIGN.md §10); inferred from
+    ``masks`` when given, defaults to n (the paper's square layout,
+    bit-identical to the seed).
 
     ``backend``: "jnp" (einsum), "pallas" (the fused
     ``kernels.masked_avg_pallas`` renormalised block average, interpreted
     off-TPU), or "auto" (pallas on TPU, jnp elsewhere).
     """
-    rs, ag = sample_masks(key, n, p) if masks is None else masks
+    rs, ag = sample_masks(key, n, p, s) if masks is None else masks
+    s = rs.shape[1]
     rs_f = rs.astype(jnp.float32)
-    counts = jnp.maximum(rs_f.sum(0), 1.0)                  # (n,)
+    counts = jnp.maximum(rs_f.sum(0), 1.0)                  # (s,)
     backend = _resolve_global_backend(backend)
     use_pallas = backend == "pallas" and mode in ("model", "grad_renorm")
     if use_pallas:
@@ -270,10 +390,10 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
         shape = x.shape[1:]
         flat = x.reshape(n, -1)
         D = flat.shape[1]
-        pad = (-D) % n
+        pad = (-D) % s
         if pad:
             flat = jnp.pad(flat, ((0, 0), (0, pad)))
-        blocks = flat.reshape(n, n, -1)                     # (worker, block, blk)
+        blocks = flat.reshape(n, s, -1)                     # (worker, block, blk)
         f32 = blocks.astype(jnp.float32)
         if use_pallas:
             blk = f32.shape[-1]

@@ -13,6 +13,24 @@ All formulas are verbatim from the paper's supplement:
 Asymptotics the paper highlights: α₁ = O(p), α₂ = O(p(1−p)/n); the drop
 rate's influence diminishes as n grows (Fig 2/3, discussion after Cor. 2).
 
+Multi-server generalisation (DESIGN.md §10): the paper identifies workers
+with parameter servers (s = n, square masks), but its second headline —
+"the influence of the packet drop rate diminishes with the growth of the
+number of parameter servers" — needs s decoupled from n. The mechanism is
+*packetisation*: a server block is the loss-atomic transfer unit, so with
+``model_packets`` wire packets per model (default n, i.e. one packet per
+block in the paper's s = n layout) a block spans ``ceil(model_packets/s)``
+packets and survives only if all of them do. Every bound below accepts
+``s=`` (and ``model_packets=``) and is evaluated at the induced per-block
+rate ``block_drop_rate(p, packets) = 1 − (1−p)^packets``; for small p this
+is ≈ p·model_packets/s, giving the server-scaling law the benchmark
+``benchmarks/server_sweep.py`` measures:
+
+    α₂(n, p, s) ≈ p_block(1−p_block)/n = O(p(1−p)/s)   (model_packets = n)
+
+With s = n (the default) p_block = p and everything reduces to the paper's
+square-layout bounds exactly.
+
 Non-i.i.d. channels (DESIGN.md §9): the bounds are functions of the
 marginal drop probability only, so they extend to any ``repro.channels``
 channel through its stationary marginal ``channel.effective_p()`` — that is
@@ -24,7 +42,40 @@ below (they duck-type: floats are treated as Bernoulli p).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
+
+
+# ---- multi-server packetisation (DESIGN.md §10) ---------------------------
+
+def packets_per_block(s: int, model_packets: int) -> int:
+    """Wire packets per server block when the model's ``model_packets``
+    packets are sharded over s blocks (round-robin, so the widest block
+    has ceil(model_packets / s); never below one packet)."""
+    if s < 1:
+        raise ValueError(f"need s >= 1 server blocks, got {s}")
+    return max(-(-int(model_packets) // int(s)), 1)
+
+
+def block_drop_rate(p: float, packets: float) -> float:
+    """Drop rate of a loss-atomic block spanning ``packets`` wire packets
+    at per-packet drop rate p: 1 − (1−p)^packets. ``packets=1`` is the
+    identity — the paper's one-packet-per-block regime."""
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"p={p} outside [0, 1]")
+    return float(1.0 - (1.0 - p) ** packets)
+
+
+def _server_p(n: int, p: float, s: Optional[int],
+              model_packets: Optional[int]) -> float:
+    """Per-block drop rate for an s-server layout (p itself when s is None
+    or the layout is the paper's one-packet-per-block square)."""
+    if s is None:
+        return p
+    m = n if model_packets is None else model_packets
+    k = packets_per_block(s, m)
+    return p if k == 1 else block_drop_rate(p, k)
 
 
 def t1(n: int, p: float) -> float:
@@ -48,14 +99,24 @@ def t3(n: int, p: float) -> float:
         + (1 - p) ** (n - 1)
 
 
-def alpha1_bound(n: int, p: float) -> float:
-    """Lemma 7 upper bound on α₁ (clipped into [0, 1])."""
+def alpha1_bound(n: int, p: float, s: Optional[int] = None,
+                 model_packets: Optional[int] = None) -> float:
+    """Lemma 7 upper bound on α₁ (clipped into [0, 1]).
+
+    ``s``/``model_packets`` evaluate the bound at the s-server per-block
+    drop rate (module doc); ``s=None`` is the paper's square layout."""
+    p = _server_p(n, p, s, model_packets)
     a = (n * p + (1 - p) ** n + n * t1(n, p) + n * t2(n, p) - 1.0) / (n - 1.0)
     return float(np.clip(a, 0.0, 1.0))
 
 
-def alpha2_bound(n: int, p: float) -> float:
-    """Lemma 8 upper bound on α₂ (clipped into [0, 1])."""
+def alpha2_bound(n: int, p: float, s: Optional[int] = None,
+                 model_packets: Optional[int] = None) -> float:
+    """Lemma 8 upper bound on α₂ (clipped into [0, 1]).
+
+    With ``s`` given, evaluated at the s-server per-block drop rate — the
+    α₂ = O(p(1−p)/s) server-scaling asymptotic of the module doc."""
+    p = _server_p(n, p, s, model_packets)
     a = ((p * (1.0 + 2.0 * t3(n, p)) + (1 - p) ** (n - 1)) / n
          + 2.0 * p * (1 - p) ** n / n
          + p ** n * (1 - p) / n ** 2
@@ -63,30 +124,35 @@ def alpha2_bound(n: int, p: float) -> float:
     return float(np.clip(a, 0.0, 1.0))
 
 
-def beta(n: int, p: float) -> float:
+def beta(n: int, p: float, s: Optional[int] = None,
+         model_packets: Optional[int] = None) -> float:
     """β = α₁ − α₂ (Theorem 1)."""
-    return max(alpha1_bound(n, p) - alpha2_bound(n, p), 0.0)
+    return max(alpha1_bound(n, p, s, model_packets)
+               - alpha2_bound(n, p, s, model_packets), 0.0)
 
 
 def corollary2_lr(n: int, p: float, T: int, L: float = 1.0,
-                  sigma: float = 1.0, zeta: float = 0.0) -> float:
+                  sigma: float = 1.0, zeta: float = 0.0,
+                  s: Optional[int] = None,
+                  model_packets: Optional[int] = None) -> float:
     """The learning rate Corollary 2 prescribes."""
-    b = beta(n, p)
-    a2 = alpha2_bound(n, p)
+    b = beta(n, p, s, model_packets)
+    a2 = alpha2_bound(n, p, s, model_packets)
     return (1.0 - np.sqrt(b)) / (
         6.0 * L + 3.0 * (sigma + zeta) * np.sqrt(a2 * T)
         + sigma * np.sqrt(T) / np.sqrt(n))
 
 
 def corollary2_rate(n: int, p: float, T: int, sigma: float = 1.0,
-                    zeta: float = 0.0) -> float:
+                    zeta: float = 0.0, s: Optional[int] = None,
+                    model_packets: Optional[int] = None) -> float:
     """Leading terms of the Corollary-2 convergence bound (up to constants):
 
       (σ+ζ)(1+√(nα₂)) / ((1−√β)√(nT)) + 1/T
       + n(σ²+ζ²)/((1+nα₂)σ²T + nα₂Tζ²)
     """
-    b = beta(n, p)
-    a2 = alpha2_bound(n, p)
+    b = beta(n, p, s, model_packets)
+    a2 = alpha2_bound(n, p, s, model_packets)
     lead = (sigma + zeta) * (1.0 + np.sqrt(n * a2)) / (
         (1.0 - np.sqrt(b)) * np.sqrt(n * T))
     tail = n * (sigma ** 2 + zeta ** 2) / (

@@ -17,31 +17,39 @@ import numpy as np
 
 
 def sample_masks(rng: np.random.Generator, n: int, p: float,
-                 permute_owners: bool = True):
-    """Returns (owners, rs_mask, ag_mask).
+                 permute_owners: bool = True, s: Optional[int] = None):
+    """Returns (owners, rs_mask, ag_mask) for s server blocks (default n).
 
-    owners[j]  — worker assigned to average block j (permutation).
+    owners[j]  — worker assigned to average block j. For s == n a uniform
+                 permutation (the paper's random owner assignment); for
+                 general s the blocks round-robin over a permuted worker
+                 order, so multiple blocks share a worker when s > n.
     rs_mask[i, j] — 1 if worker i's block j arrives at owners[j]
                     (owner's own entry always 1: it never leaves the device).
     ag_mask[i, j] — 1 if worker i receives the broadcast of block j
                     (again 1 at i == owners[j]).
+    Masks are (n, s); s = None keeps the seed's square draw bit-identically.
     """
-    owners = (rng.permutation(n) if permute_owners
-              else np.arange(n)).astype(np.int64)
-    rs = (rng.random((n, n)) >= p)
-    ag = (rng.random((n, n)) >= p)
-    rs[owners, np.arange(n)] = True
-    ag[owners, np.arange(n)] = True
+    s = n if s is None else int(s)
+    order = (rng.permutation(n) if permute_owners
+             else np.arange(n)).astype(np.int64)
+    owners = order[np.arange(s) % n]
+    rs = (rng.random((n, s)) >= p)
+    ag = (rng.random((n, s)) >= p)
+    rs[owners, np.arange(s)] = True
+    ag[owners, np.arange(s)] = True
     return owners, rs, ag
 
 
 def build_w(n: int, owners, rs_mask, ag_mask) -> np.ndarray:
-    """(n_blocks=n, n, n) stack of W^(j); column k = coefficients of worker
-    k's next block in terms of all workers' intermediate blocks."""
-    W = np.zeros((n, n, n))
-    for j in range(n):
-        s = rs_mask[:, j].astype(np.float64)
-        avg_col = s / s.sum()
+    """(n_blocks=s, n, n) stack of W^(j); column k = coefficients of worker
+    k's next block in terms of all workers' intermediate blocks. The block
+    count s is read off the (n, s) masks — s == n is the paper's layout."""
+    s = rs_mask.shape[1]
+    W = np.zeros((s, n, n))
+    for j in range(s):
+        m = rs_mask[:, j].astype(np.float64)
+        avg_col = m / m.sum()
         for k in range(n):
             if ag_mask[k, j]:
                 W[j, :, k] = avg_col
@@ -52,19 +60,20 @@ def build_w(n: int, owners, rs_mask, ag_mask) -> np.ndarray:
 
 def rps_round(V: np.ndarray, rng: np.random.Generator, p: float,
               permute_owners: bool = True,
-              return_w: bool = False):
+              return_w: bool = False, s: Optional[int] = None):
     """One RPS averaging round on stacked models V: (n, D) -> (n, D).
 
-    D must be divisible by n (pad upstream). Blocks are contiguous D//n
-    slices, block j averaged by ``owners[j]``.
+    D must be divisible by the block count s (default n; pad upstream).
+    Blocks are contiguous D//s slices, block j averaged by ``owners[j]``.
     """
     n, D = V.shape
-    assert D % n == 0, "pad model to a multiple of n"
-    blk = D // n
-    owners, rs, ag = sample_masks(rng, n, p, permute_owners)
+    s = n if s is None else int(s)
+    assert D % s == 0, "pad model to a multiple of s"
+    blk = D // s
+    owners, rs, ag = sample_masks(rng, n, p, permute_owners, s=s)
     W = build_w(n, owners, rs, ag)
     Xn = np.empty_like(V)
-    for j in range(n):
+    for j in range(s):
         Vj = V[:, j * blk:(j + 1) * blk]                  # (n, blk)
         Xn[:, j * blk:(j + 1) * blk] = W[j].T @ Vj
     if return_w:

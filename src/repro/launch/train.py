@@ -33,6 +33,11 @@ def main():
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-test reduced variant")
     ap.add_argument("--workers", type=int, default=16)
+    ap.add_argument("--servers", type=int, default=None,
+                    help="parameter-server blocks s (DESIGN.md §10): "
+                         "round-robin worker owners, rectangular (n, s) "
+                         "drop masks; default: one block per worker "
+                         "(s = n, the paper's layout)")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--seq-len", type=int, default=64)
@@ -69,13 +74,14 @@ def main():
         n_workers=args.workers, drop_rate=args.drop_rate,
         aggregator=args.aggregator, lr=args.lr, steps=args.steps,
         warmup=args.warmup, batch_size=args.batch_size, seed=args.seed,
-        channel=args.channel)
+        channel=args.channel, n_servers=args.servers)
     t0 = time.time()
     hist = run_simulation(loss_fn, model.init, batch_fn, scfg)
     dt = time.time() - t0
     print(f"channel={hist['channel']} "
           f"eff_p={hist['channel_effective_p']:.4f}")
-    print(f"n={args.workers} p={args.drop_rate} agg={args.aggregator} "
+    print(f"n={args.workers} s={args.servers or args.workers} "
+          f"p={args.drop_rate} agg={args.aggregator} "
           f"final_loss={hist['final_loss']:.4f} "
           f"(entropy floor {task.entropy_floor():.4f}) "
           f"consensus={hist['consensus'][-1]:.3e} [{dt:.1f}s]")

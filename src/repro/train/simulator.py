@@ -51,6 +51,10 @@ class SimulatorConfig:
     # drop-process model: a repro.channels spec string
     # ("ge:p_bad=0.3,burst=8", "trace:lam=8000,prio=0.8", ...) or a built
     # Channel; None = i.i.d. Bernoulli(drop_rate), the seed behaviour.
+    n_servers: Optional[int] = None
+    # parameter-server blocks s (DESIGN.md §10): the model is partitioned
+    # into s blocks with round-robin worker owners; None = n_workers, the
+    # paper's square layout (bit-identical to the seed).
 
 
 def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool,
@@ -65,7 +69,8 @@ def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool,
                                        x.shape), tree)
     mode = "grad" if is_grad else "model"
     return rps_lib.rps_exchange_global(tree, key, scfg.drop_rate, n,
-                                       mode=mode, masks=masks)
+                                       mode=mode, masks=masks,
+                                       s=scfg.n_servers)
 
 
 def run_simulation(loss_fn: Callable, init_fn: Callable,
@@ -89,7 +94,8 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
     # the drop process: channels are sampled inside the jitted step with the
     # shared per-step key; their state (e.g. Gilbert–Elliott link states,
     # trace cursor) is carried across steps alongside params/opt_state
-    channel = channels_lib.make_channel(scfg.channel, n, scfg.drop_rate)
+    channel = channels_lib.make_channel(scfg.channel, n, scfg.drop_rate,
+                                        s=scfg.n_servers)
     rps_agg = scfg.aggregator.startswith("rps")
     ch_state = channel.init_state(jax.random.fold_in(key, 0x636831)) \
         if rps_agg else None

@@ -60,6 +60,10 @@ class TrainConfig:
                                            # signature. A channel spec makes
                                            # train_step carry channel state:
                                            # see make_train_setup.
+    n_servers: Optional[int] = None        # parameter-server blocks s
+                                           # (DESIGN.md §10); None = n_rps,
+                                           # the paper's square layout
+                                           # (bit-identical to the seed).
 
 
 def _is_model_mode(agg: str) -> bool:
@@ -89,8 +93,10 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
     n_rps = 1
     for a in rps_axes:
         n_rps *= mesh.shape[a]
+    n_servers = n_rps if tcfg.n_servers is None else int(tcfg.n_servers)
     opt = make_optimizer(tcfg.optimizer)
-    channel = channels_lib.make_channel(tcfg.channel, n_rps, tcfg.drop_rate)
+    channel = channels_lib.make_channel(tcfg.channel, n_rps, tcfg.drop_rate,
+                                        s=tcfg.n_servers)
     # only rps aggregators consume masks (same gate as the simulator's
     # rps_agg) — a channel configured alongside an allreduce/none baseline
     # keeps the seed 5-arg signature and samples nothing
@@ -138,7 +144,8 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
 
         def body(t, key, masks):
             if masks is None:
-                masks = rps_lib.sample_masks(key, n_rps, tcfg.drop_rate)
+                masks = rps_lib.sample_masks(key, n_rps, tcfg.drop_rate,
+                                             n_servers)
 
             def one(x):
                 shp = x.shape

@@ -61,6 +61,7 @@ def test_channel_marginal_matches_effective_p(spec):
         f"{channel.effective_p():.4f}"
 
 
+@pytest.mark.slow
 def test_ge_stationary_rate_and_burst_length():
     burst, p_target = 8.0, 0.1
     channel = ch.GilbertElliottChannel(4, p_bad=1.0, burst=burst, p=p_target)
@@ -297,6 +298,7 @@ def _converge(channel, aggregator, steps=120):
                                           channel=channel))
 
 
+@pytest.mark.slow
 def test_convergence_ge_and_trace_vs_grad():
     """Fig-4/Fig-5 on non-i.i.d. channels: rps_model converges under bursty
     and trace-driven loss while naive rps_grad degrades (same channel)."""

@@ -71,6 +71,7 @@ def test_grad_mode_zero_on_ag_drop():
                 np.testing.assert_allclose(piece, expect, rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_model_mode_preserves_mean_in_expectation():
     """E[x̄_{t+1}] = v̄_t (Lemma 4: E[Δx̄] = −γ·ḡ). Monte-Carlo check."""
     n, D = 8, 32

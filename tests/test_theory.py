@@ -22,6 +22,7 @@ def test_bounds_in_unit_interval(n, p):
     assert 0.0 <= a2 <= 1.0 and 0.0 <= a1 <= 1.0
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(n=st.sampled_from([8, 16]), p=st.floats(0.01, 0.4),
        seed=st.integers(0, 50))
@@ -38,6 +39,7 @@ def test_alpha2_diminishes_with_n():
     assert all(a > b for a, b in zip(vals, vals[1:]))
 
 
+@pytest.mark.slow
 def test_alpha_asymptotics_in_p():
     """α₁ = O(p): Monte-Carlo α₁ tracks p; α₂ = O(p(1−p)/n)."""
     n = 16
