@@ -16,8 +16,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (alpha, channels_bench, colocation, convergence,
-                            grad_vs_model, kernels_bench, server_sweep,
-                            speedup)
+                            exchange_bench, grad_vs_model, kernels_bench,
+                            server_sweep, speedup)
     all_benches = {
         "alpha": alpha.run,               # Figs 2/3
         "convergence": convergence.run,   # Fig 4
@@ -27,6 +27,7 @@ def main() -> None:
         "kernels": kernels_bench.run,     # ours
         "channels": channels_bench.run,   # beyond-paper: non-i.i.d. loss
         "server_sweep": server_sweep.run,  # Cor 2 server-count claim
+        "exchange": exchange_bench.run,   # DESIGN §11 bucketed vs per-leaf
     }
     names = list(all_benches) if not args.only else args.only.split(",")
     csv_rows = []

@@ -68,12 +68,14 @@ class Channel:
         self._owners = rps_lib.owners(self.n, self.s)
 
     def link_cols(self, link_mat: jax.Array) -> jax.Array:
-        """Gather a worker-link-indexed ``(n, n)`` matrix into block
-        columns ``(n, s)`` through the owner map. Identity when s == n, so
-        square-layout channels stay bit-identical to the seed draw."""
+        """Gather a worker-link-indexed ``(…, n, n)`` matrix into block
+        columns ``(…, n, s)`` through the owner map (leading batch dims —
+        e.g. the bucket dim of per-bucket packet draws — pass through).
+        Identity when s == n, so square-layout channels stay bit-identical
+        to the seed draw."""
         if self.s == self.n:
             return link_mat
-        return link_mat[:, self._owners]
+        return link_mat[..., self._owners]
 
     # -- state ------------------------------------------------------------
     def init_state(self, key: Optional[jax.Array] = None) -> Any:
@@ -88,6 +90,27 @@ class Channel:
         """Stateless convenience: one (rs, ag) draw from the initial state."""
         rs, ag, _ = self.sample(key, self.init_state(key))
         return rs, ag
+
+    def sample_packets(self, key: jax.Array, state: Any = None,
+                       n_buckets: int = 1
+                       ) -> Tuple[jax.Array, jax.Array, Any]:
+        """Per-bucket packet masks ``(n_buckets, n, s)`` for a bucketed
+        :class:`repro.core.plan.ExchangePlan` (DESIGN.md §11): every
+        bucket column is its own wire packet and draws its own fate.
+
+        The base implementation draws the iteration's link fates **once**
+        and broadcasts them across buckets — the right semantics for
+        channels whose loss events span a whole iteration (a straggler
+        missing the deadline loses *all* its packets; a replayed trace
+        period applies to the round). Memoryless/per-packet channels
+        (Bernoulli, Gilbert–Elliott, heterogeneous) override this with
+        conditionally independent per-bucket draws; channel *state* always
+        advances exactly once per iteration either way.
+        """
+        rs, ag, state = self.sample(key, state)
+        shape = (int(n_buckets),) + rs.shape
+        return (jnp.broadcast_to(rs, shape), jnp.broadcast_to(ag, shape),
+                state)
 
     # -- theory hook ------------------------------------------------------
     def effective_p(self) -> float:

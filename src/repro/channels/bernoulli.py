@@ -29,6 +29,14 @@ class BernoulliChannel(Channel):
         rs, ag = rps_lib.sample_masks(key, self.n, self.p, self.s)
         return rs, ag, state
 
+    def sample_packets(self, key: jax.Array, state: Any = None,
+                       n_buckets: int = 1
+                       ) -> Tuple[jax.Array, jax.Array, Any]:
+        # i.i.d. per packet: every bucket column draws independently
+        rs, ag = rps_lib.sample_masks(key, self.n, self.p, self.s,
+                                      n_buckets=int(n_buckets))
+        return rs, ag, state
+
     def effective_p(self) -> float:
         return self.p
 

@@ -76,26 +76,44 @@ class GilbertElliottChannel(Channel):
                                    self.pi_bad, (self.n, self.n))
         return {"bad": bad}
 
-    def sample(self, key: jax.Array, state: Any = None
-               ) -> Tuple[jax.Array, jax.Array, Any]:
-        if state is None:
-            state = self.init_state(key)
-        k_tr, k_rs, k_ag = jax.random.split(key, 3)
+    def _advance(self, k_tr: jax.Array, state: Any):
+        """One per-iteration Markov transition → (p_link, new_state)."""
         bad = state["bad"]
         shape = (self.n, self.n)
         stay = jax.random.bernoulli(k_tr, 1.0 - self.p_bg, shape)
         enter = jax.random.bernoulli(jax.random.fold_in(k_tr, 1),
                                      self.p_gb, shape)
         bad = jnp.where(bad, stay, enter)
-        p_link = jnp.where(bad, self.p_bad, self.p_good)
+        return jnp.where(bad, self.p_bad, self.p_good), {"bad": bad}
+
+    def _sample_lead(self, key: jax.Array, state: Any,
+                     lead: Tuple[int, ...]):
+        """One Markov transition, then one conditional fate draw per link
+        (and per leading bucket dim — fates are conditionally independent
+        given the per-iteration link state, which advances exactly once).
+        Link-indexed (…, n, n) delivery → (…, n, s) block columns via the
+        owner map; ag[i, j] is the owner(j) → i broadcast, so the AG leg
+        gathers from the transposed link-indexed draw."""
+        if state is None:
+            state = self.init_state(key)
+        k_tr, k_rs, k_ag = jax.random.split(key, 3)
+        p_link, state = self._advance(k_tr, state)
+        shape = lead + (self.n, self.n)
         rs_drop = jax.random.uniform(k_rs, shape) < p_link
         ag_drop = jax.random.uniform(k_ag, shape) < p_link
-        # link-indexed (n, n) delivery → (n, s) block columns via the owner
-        # map; ag[i, j] is the owner(j) → i broadcast, so the AG leg gathers
-        # from the transposed link-indexed draw
-        rs, ag = force_diag(self.link_cols(~rs_drop),
-                            self.link_cols(~ag_drop.T))
-        return rs, ag, {"bad": bad}
+        rs, ag = force_diag(
+            self.link_cols(~rs_drop),
+            self.link_cols(~jnp.swapaxes(ag_drop, -1, -2)))
+        return rs, ag, state
+
+    def sample(self, key: jax.Array, state: Any = None
+               ) -> Tuple[jax.Array, jax.Array, Any]:
+        return self._sample_lead(key, state, ())
+
+    def sample_packets(self, key: jax.Array, state: Any = None,
+                       n_buckets: int = 1
+                       ) -> Tuple[jax.Array, jax.Array, Any]:
+        return self._sample_lead(key, state, (int(n_buckets),))
 
     def effective_p(self) -> float:
         pi = self.pi_bad

@@ -49,13 +49,25 @@ class HeterogeneousChannel(Channel):
         pm = np.where(same, p_intra, p_cross).astype(np.float32)
         return cls(n, pm, s=s)
 
-    def sample(self, key: jax.Array, state: Any = None
-               ) -> Tuple[jax.Array, jax.Array, Any]:
+    def _draw(self, key: jax.Array, lead: Tuple[int, ...]):
+        """One delivery draw per link (and per leading bucket dim): the RS
+        leg from P, the AG leg (already receiver-indexed) from Pᵀ."""
         k_rs, k_ag = jax.random.split(key)
-        shape = (self.n, self.n)
+        shape = lead + (self.n, self.n)
         rs = jax.random.uniform(k_rs, shape) >= self.p_matrix
         ag = jax.random.uniform(k_ag, shape) >= self.p_matrix.T
-        rs, ag = force_diag(self.link_cols(rs), self.link_cols(ag))
+        return force_diag(self.link_cols(rs), self.link_cols(ag))
+
+    def sample(self, key: jax.Array, state: Any = None
+               ) -> Tuple[jax.Array, jax.Array, Any]:
+        rs, ag = self._draw(key, ())
+        return rs, ag, state
+
+    def sample_packets(self, key: jax.Array, state: Any = None,
+                       n_buckets: int = 1
+                       ) -> Tuple[jax.Array, jax.Array, Any]:
+        # memoryless per-link marginals: packets draw independently
+        rs, ag = self._draw(key, (int(n_buckets),))
         return rs, ag, state
 
     def effective_p(self) -> float:

@@ -1,7 +1,9 @@
 """The paper's primary contribution: RPS — distributed learning over
 unreliable networks (drop-tolerant Reduce-Scatter/All-Gather aggregation),
 its global-view W-matrix oracle, and the alpha1/alpha2 convergence theory."""
+from repro.core.plan import (  # noqa: F401
+    ExchangePlan, make_plan, per_leaf_plan, single_bucket_plan)
 from repro.core.rps import (  # noqa: F401
     reliable_average, rps_exchange, rps_exchange_flat, rps_exchange_global,
-    rps_exchange_leaf, sample_masks)
+    rps_exchange_leaf, rps_exchange_plan, sample_masks)
 from repro.core import theory, wmatrix  # noqa: F401

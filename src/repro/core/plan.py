@@ -1,0 +1,353 @@
+"""Bucketed ExchangePlan — the static layout of one RPS round (DESIGN.md §11).
+
+The paper's exchange is one logical RS+AG round per iteration, but a
+parameter *pytree* leaves the lowering a choice: per-leaf collectives (the
+seed behaviour — 2 collectives per leaf per round) or coalesced buckets.
+Real loss-tolerant transports (LTP-style bundles) coalesce parameters into
+fixed-byte buckets that map onto wire packets; this module computes that
+layout **once at setup time** so the traced step does no pytree
+introspection at all:
+
+  - every leaf is assigned to exactly one *bucket*;
+  - tensor-parallel leaves (a ``model_dims`` entry) get their own
+    model-dim-preserving bucket — the TP dim rides along intact as a
+    trailing ``m`` axis, so no cross-model-axis resharding is triggered;
+  - all other leaves coalesce, in pytree order, into contiguous flat
+    buffers of at most ``bucket_bytes`` (or split evenly into
+    ``n_buckets`` groups);
+  - each bucket's payload is laid out as an ``(s, blk, m)`` block table —
+    s server blocks (DESIGN.md §10) of ``blk`` elements — with the
+    padding precomputed. The owner-major scatter permutation
+    (``core.rps._scatter_layout``) is shared by every bucket since s is.
+
+The bucket is also the *packetisation unit*: a fixed-byte bucket plan
+(``per_bucket_masks=True``) draws an independent ``(n, s)`` drop-mask pair
+per bucket — each bucket column is its own wire packet — so
+``model_packets = s × n_buckets`` flows into the §6 theory bounds through
+``theory.block_drop_rate`` (each server block spans ``n_buckets`` packets).
+The degenerate plans are exactly the legacy layouts and stay bit-identical
+to them: :func:`single_bucket_plan` is ``jax.flatten_util.ravel_pytree`` +
+``rps_exchange_flat`` (the seed ``rps_exchange``), :func:`per_leaf_plan` is
+the seed trainer/simulator per-leaf lowering, and both share one mask draw
+across buckets (``per_bucket_masks=False``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One coalesced exchange unit: a contiguous run of pytree leaves laid
+    out as an (s, blk, m) block table. ``model_dim`` is set only for
+    single-leaf TP buckets (m = that dim's width; 1 otherwise)."""
+    leaf_ids: Tuple[int, ...]
+    shapes: Tuple[Tuple[int, ...], ...]     # per-member per-worker shapes
+    dtypes: Tuple[str, ...]                 # per-member dtypes
+    sizes: Tuple[int, ...]                  # per-member free-element counts
+    model_dim: Optional[int]
+    m: int                                  # model-dim width (1 = flat)
+    free: int                               # Σ sizes (rows before padding)
+    blk: int                                # block width: ceil(free / s)
+    pad: int                                # s·blk − free padding rows
+    dtype: str                              # payload dtype (promoted)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangePlan:
+    """Static layout of one bucketed RPS round over an n-worker axis with
+    s server blocks. Built once at setup (never inside a traced step);
+    closed over by the jitted exchange."""
+    n: int
+    s: int
+    buckets: Tuple[Bucket, ...]
+    n_leaves: int
+    per_bucket_masks: bool
+    treedef: Any = dataclasses.field(hash=False)
+
+    # ---- derived ---------------------------------------------------------
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def packets_per_block(self) -> int:
+        """Wire packets a server block spans: each bucket's column j is its
+        own packet under per-bucket masks, one shared packet otherwise."""
+        return self.n_buckets if self.per_bucket_masks else 1
+
+    @property
+    def model_packets(self) -> int:
+        """Total loss-atomic wire packets per model replica per direction —
+        the quantity the §6 packetisation bounds take (s·1 = s for the
+        legacy shared-mask plans, i.e. the paper's one-packet-per-block
+        layout when s = n)."""
+        return self.s * self.packets_per_block
+
+    def payload_elems(self) -> int:
+        return sum(self.s * b.blk * b.m for b in self.buckets)
+
+    def wire_bytes(self, rs_dtype="float32") -> int:
+        """Bytes one device moves per round over every bucket's
+        scatter-padded (S, blk, m) table (S = ceil(s/n)·n): the RS leg
+        carries the accumulation dtype (``rs_dtype`` — f32 by default,
+        the bf16 hillclimb knob halves it), the AG leg the payload
+        dtype."""
+        S = _ceil_div(self.s, self.n) * self.n
+        rs_b = jnp.dtype(rs_dtype).itemsize
+        return sum(S * b.blk * b.m * (rs_b + jnp.dtype(b.dtype).itemsize)
+                   for b in self.buckets)
+
+    def describe(self, rs_dtype="float32") -> dict:
+        elems = self.payload_elems()
+        free = sum(b.free * b.m for b in self.buckets)
+        return {"n": self.n, "s": self.s, "n_buckets": self.n_buckets,
+                "collectives_per_round": 2 * self.n_buckets,
+                "per_bucket_masks": self.per_bucket_masks,
+                "model_packets": self.model_packets,
+                "payload_bytes": int(sum(
+                    self.s * b.blk * b.m * jnp.dtype(b.dtype).itemsize
+                    for b in self.buckets)),
+                "wire_bytes_per_round": int(self.wire_bytes(rs_dtype)),
+                "pad_frac": float(1.0 - free / elems) if elems else 0.0}
+
+    # ---- gather / scatter ------------------------------------------------
+    def _check(self, leaves: Sequence[jax.Array], lead: int) -> None:
+        if len(leaves) != self.n_leaves:
+            raise ValueError(f"plan built for {self.n_leaves} leaves, "
+                             f"tree has {len(leaves)}")
+        for b in self.buckets:
+            for lid, shp in zip(b.leaf_ids, b.shapes):
+                got = tuple(leaves[lid].shape[lead:])
+                if got != shp:
+                    raise ValueError(
+                        f"leaf {lid} shape {got} != plan shape {shp} "
+                        f"(lead={lead}) — rebuild the plan for this tree")
+
+    def gather(self, tree: Any, lead: int = 0) -> list:
+        """Tree -> list of (lead…, s, blk, m) block tables, one per bucket.
+        ``lead`` leading dims (e.g. the stacked worker dim of the global
+        path) are preserved. Coalesced buckets promote members to the
+        bucket dtype exactly like ``ravel_pytree`` does."""
+        leaves = jax.tree.flatten(tree)[0]
+        self._check(leaves, lead)
+        tables = []
+        for b in self.buckets:
+            lshape = tuple(leaves[b.leaf_ids[0]].shape[:lead])
+            if b.model_dim is not None:
+                x = jnp.moveaxis(leaves[b.leaf_ids[0]], lead + b.model_dim,
+                                 -1)
+                seg = x.reshape(lshape + (b.free, b.m))
+            else:
+                parts = [leaves[i].reshape(lshape + (-1,)).astype(b.dtype)
+                         for i in b.leaf_ids]
+                seg = parts[0] if len(parts) == 1 \
+                    else jnp.concatenate(parts, axis=lead)
+                seg = seg[..., None]
+            if b.pad:
+                seg = jnp.pad(seg, ((0, 0),) * lead
+                              + ((0, b.pad), (0, 0)))
+            tables.append(seg.reshape(lshape + (self.s, b.blk, b.m)))
+        return tables
+
+    def scatter(self, tables: Sequence[jax.Array], lead: int = 0) -> Any:
+        """Inverse of :meth:`gather`: block tables back to the pytree
+        (members restored to their own dtypes/shapes)."""
+        new_leaves: list = [None] * self.n_leaves
+        for b, tbl in zip(self.buckets, tables):
+            lshape = tuple(tbl.shape[:lead])
+            seg = tbl.reshape(lshape + (self.s * b.blk, b.m))
+            if b.pad:
+                seg = seg[..., :b.free, :]
+            if b.model_dim is not None:
+                shp = b.shapes[0]
+                rest = tuple(d for j, d in enumerate(shp)
+                             if j != b.model_dim)
+                inter = seg.reshape(lshape + rest + (b.m,))
+                new_leaves[b.leaf_ids[0]] = jnp.moveaxis(
+                    inter, -1, lead + b.model_dim).astype(b.dtypes[0])
+            else:
+                off = 0
+                for lid, sz, shp, dt in zip(b.leaf_ids, b.sizes, b.shapes,
+                                            b.dtypes):
+                    piece = seg[..., off:off + sz, 0]
+                    new_leaves[lid] = piece.reshape(lshape + shp).astype(dt)
+                    off += sz
+        return jax.tree.unflatten(self.treedef, new_leaves)
+
+
+def _leaf_meta(leaves) -> Tuple[list, list, list]:
+    shapes = [tuple(int(d) for d in x.shape) for x in leaves]
+    dtypes = [jnp.dtype(x.dtype).name for x in leaves]
+    sizes = [int(np.prod(s, dtype=np.int64)) if s else 1 for s in shapes]
+    return shapes, dtypes, sizes
+
+
+def _flat_bucket(ids, shapes, dtypes, sizes, s: int) -> Bucket:
+    free = sum(sizes[i] for i in ids)
+    blk = max(_ceil_div(free, s), 1)
+    dtype = jnp.dtype(jnp.result_type(*[dtypes[i] for i in ids])).name
+    return Bucket(leaf_ids=tuple(ids),
+                  shapes=tuple(shapes[i] for i in ids),
+                  dtypes=tuple(dtypes[i] for i in ids),
+                  sizes=tuple(sizes[i] for i in ids),
+                  model_dim=None, m=1, free=free, blk=blk,
+                  pad=s * blk - free, dtype=dtype)
+
+
+def _tp_bucket(i, shapes, dtypes, model_dim: int, s: int) -> Bucket:
+    shp = shapes[i]
+    model_dim = model_dim % len(shp)
+    m = shp[model_dim]
+    free = int(np.prod(shp, dtype=np.int64)) // m
+    blk = max(_ceil_div(free, s), 1)
+    return Bucket(leaf_ids=(i,), shapes=(shp,), dtypes=(dtypes[i],),
+                  sizes=(free,), model_dim=model_dim, m=m, free=free,
+                  blk=blk, pad=s * blk - free, dtype=dtypes[i])
+
+
+def _flatten_model_dims(model_dims: Any, n_leaves: int) -> list:
+    if model_dims is None:
+        return [None] * n_leaves
+    md = jax.tree.flatten(model_dims, is_leaf=lambda x: x is None)[0]
+    if len(md) != n_leaves:
+        raise ValueError(f"model_dims has {len(md)} leaves, tree has "
+                         f"{n_leaves}")
+    return md
+
+
+def make_plan(tree: Any, n: int, s: Optional[int] = None, *,
+              bucket_bytes: Optional[float] = None,
+              n_buckets: Optional[int] = None,
+              model_dims: Any = None,
+              per_bucket_masks: Optional[bool] = None) -> ExchangePlan:
+    """Build an :class:`ExchangePlan` for ``tree`` (arrays or
+    ShapeDtypeStructs — only shapes/dtypes are read).
+
+    ``bucket_bytes`` — greedy fixed-byte coalescing (a leaf larger than the
+    budget gets its own bucket; leaves are never split). ``n_buckets`` —
+    split the coalesced payload into that many size-balanced contiguous
+    groups instead. Neither → one single bucket (the ``ravel_pytree``
+    layout). Leaves with a ``model_dims`` entry are pulled out into
+    model-dim-preserving buckets of their own in every mode.
+
+    ``per_bucket_masks`` defaults to True exactly when a bucketing knob is
+    given: fixed-byte buckets are wire packets and draw independent masks;
+    the degenerate plans keep the legacy one-draw-per-round semantics.
+    """
+    if n < 1:
+        raise ValueError(f"need n >= 1 workers, got {n}")
+    s = n if s is None else int(s)
+    if s < 1:
+        raise ValueError(f"need s >= 1 server blocks, got {s}")
+    if bucket_bytes is not None and n_buckets is not None:
+        raise ValueError("give bucket_bytes or n_buckets, not both")
+    if n_buckets is not None and int(n_buckets) < 1:
+        raise ValueError(f"need n_buckets >= 1, got {n_buckets}")
+    if bucket_bytes is not None and float(bucket_bytes) <= 0:
+        raise ValueError(f"need bucket_bytes > 0, got {bucket_bytes}")
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("cannot plan an empty pytree")
+    shapes, dtypes, sizes = _leaf_meta(leaves)
+    mdims = _flatten_model_dims(model_dims, len(leaves))
+
+    flat_ids = [i for i in range(len(leaves)) if mdims[i] is None]
+    tp_ids = [i for i in range(len(leaves)) if mdims[i] is not None]
+
+    groups: list = []
+    if flat_ids:
+        if n_buckets is not None:
+            k = max(1, min(int(n_buckets), len(flat_ids)))
+            total = sum(sizes[i] for i in flat_ids)
+            cur: list = []
+            acc = 0
+            for idx, i in enumerate(flat_ids):
+                cur.append(i)
+                acc += sizes[i]
+                left = len(flat_ids) - idx - 1   # leaves still unassigned
+                need = k - len(groups) - 1       # groups still to fill
+                # close at the next evenly-spaced size boundary, or when
+                # the remaining leaves are exactly one per remaining group
+                if len(groups) < k - 1 and (
+                        acc >= total * (len(groups) + 1) / k
+                        or left == need):
+                    groups.append(cur)
+                    cur = []
+            if cur:
+                groups.append(cur)
+        elif bucket_bytes is not None:
+            cap = max(float(bucket_bytes), 1.0)
+            cur, acc = [], 0.0
+            for i in flat_ids:
+                nbytes = sizes[i] * jnp.dtype(dtypes[i]).itemsize
+                if cur and acc + nbytes > cap:
+                    groups.append(cur)
+                    cur, acc = [], 0.0
+                cur.append(i)
+                acc += nbytes
+            if cur:
+                groups.append(cur)
+        else:
+            groups.append(list(flat_ids))
+
+    buckets = [_flat_bucket(g, shapes, dtypes, sizes, s) for g in groups]
+    buckets += [_tp_bucket(i, shapes, dtypes, mdims[i], s) for i in tp_ids]
+    if per_bucket_masks is None:
+        per_bucket_masks = bucket_bytes is not None or n_buckets is not None
+    return ExchangePlan(n=int(n), s=s, buckets=tuple(buckets),
+                        n_leaves=len(leaves),
+                        per_bucket_masks=bool(per_bucket_masks),
+                        treedef=treedef)
+
+
+def plan_from_config(tree: Any, n: int, s: Optional[int] = None, *,
+                     bucket_mb: Optional[float] = None,
+                     n_buckets: Optional[int] = None,
+                     model_dims: Any = None) -> ExchangePlan:
+    """The config-knob → plan policy shared by the trainer and the
+    simulator: ``bucket_mb`` MiB fixed-byte coalescing / ``n_buckets``
+    size-balanced groups (packetised, per-bucket masks), both unset → the
+    per-leaf legacy plan, bit-identical to the seed lowering."""
+    if bucket_mb is not None or n_buckets is not None:
+        return make_plan(tree, n, s,
+                         bucket_bytes=(bucket_mb * 2 ** 20
+                                       if bucket_mb is not None else None),
+                         n_buckets=n_buckets, model_dims=model_dims)
+    return per_leaf_plan(tree, n, s)
+
+
+def single_bucket_plan(tree: Any, n: int,
+                       s: Optional[int] = None) -> ExchangePlan:
+    """The legacy ``rps_exchange`` layout: every leaf ravelled into one
+    flat bucket (same member order and dtype promotion as
+    ``ravel_pytree``), one shared mask draw — bit-identical to the seed."""
+    return make_plan(tree, n, s)
+
+
+def per_leaf_plan(tree: Any, n: int,
+                  s: Optional[int] = None) -> ExchangePlan:
+    """The legacy trainer/simulator layout: one bucket per leaf (each leaf
+    fully flattened — no model-dim special-casing, exactly the seed's
+    per-leaf ``rps_exchange_flat`` tree-map), one shared mask draw."""
+    if n < 1:
+        raise ValueError(f"need n >= 1 workers, got {n}")
+    s = n if s is None else int(s)
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("cannot plan an empty pytree")
+    shapes, dtypes, sizes = _leaf_meta(leaves)
+    buckets = tuple(_flat_bucket([i], shapes, dtypes, sizes, s)
+                    for i in range(len(leaves)))
+    return ExchangePlan(n=int(n), s=s, buckets=buckets,
+                        n_leaves=len(leaves), per_bucket_masks=False,
+                        treedef=treedef)

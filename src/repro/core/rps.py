@@ -27,16 +27,25 @@ default s = n reproduces the paper's one-server-per-worker layout
 bit-identically — owner j is then the j-th device on the RPS axes (the
 paper's random owner assignment is symmetric across blocks — validated
 against the permuted W-matrix oracle in tests).
+
+Since DESIGN.md §11 there is exactly **one** RS+AG engine:
+:func:`_exchange_table` runs the drop-masked round on an ``(s, blk[, m])``
+block table, and every public entry point — :func:`rps_exchange_flat` (one
+flat vector), :func:`rps_exchange_leaf` (partial-manual per-leaf),
+:func:`rps_exchange_plan` (bucketed collective pytree path) and
+:func:`rps_exchange_global` (stacked single-device view) — is a thin
+executor of an :class:`repro.core.plan.ExchangePlan` layout over it.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.flatten_util import ravel_pytree
+
+from repro.core import plan as plan_lib
 
 AxisNames = Union[str, Tuple[str, ...]]
 
@@ -90,7 +99,8 @@ def owner_mask(n: int, s: Optional[int] = None) -> jnp.ndarray:
 
 
 def sample_masks(key: jax.Array, n: int, p: float,
-                 s: Optional[int] = None):
+                 s: Optional[int] = None,
+                 n_buckets: Optional[int] = None):
     """(rs, ag) boolean (n, s) masks, owner entries forced True.
 
     rs[i, j]: worker i's block-j packet reaches the owner (worker j % n).
@@ -102,6 +112,12 @@ def sample_masks(key: jax.Array, n: int, p: float,
     bit-identical to the seed behaviour (the forced owner entries are then
     the diagonal).
 
+    ``n_buckets`` (DESIGN.md §11): when given, every bucket of a bucketed
+    :class:`repro.core.plan.ExchangePlan` is its own packetisation unit
+    and draws an independent mask pair — the returned masks are
+    ``(n_buckets, n, s)``. ``None`` (default) keeps the legacy one-draw
+    shape ``(n, s)``.
+
     This is the i.i.d. Bernoulli drop process of the paper. The pluggable
     generalisation lives in ``repro.channels`` (DESIGN.md §9): any
     ``Channel.sample`` produces an ``(rs, ag)`` pair with the same
@@ -110,9 +126,10 @@ def sample_masks(key: jax.Array, n: int, p: float,
     bit-identical to this function.
     """
     s = n if s is None else int(s)
+    shape = (n, s) if n_buckets is None else (int(n_buckets), n, s)
     k1, k2 = jax.random.split(key)
-    rs = jax.random.bernoulli(k1, 1.0 - p, (n, s))
-    ag = jax.random.bernoulli(k2, 1.0 - p, (n, s))
+    rs = jax.random.bernoulli(k1, 1.0 - p, shape)
+    ag = jax.random.bernoulli(k2, 1.0 - p, shape)
     own = owner_mask(n, s)
     return rs | own, ag | own
 
@@ -158,6 +175,100 @@ def _masks_to_scatter(rs: jax.Array, ag: jax.Array, S: int, order):
     return rs_sc, ag_sc
 
 
+# ---------------------------------------------------------------------------
+# The one collective RS+AG engine (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
+                    names: Tuple[str, ...], n: int, i: jax.Array,
+                    mode: str, rs_dtype=jnp.float32,
+                    pin: Optional[Callable] = None) -> jax.Array:
+    """One drop-masked RS+AG round on an ``(s, blk[, m])`` block table
+    inside a shard_map region over ``names`` (the RPS axes).
+
+    This is the single engine every exchange path executes: pad the table
+    to the owner-major scatter layout, one tiled ``psum_scatter`` with the
+    RS mask applied sender-side, local renormalisation by the received
+    count, one tiled ``all_gather``, and the AG-mask select. ``pin`` is an
+    optional per-intermediate sharding hook (the partial-manual per-leaf
+    path pins its TP dim); identity when None. Exactly two collectives per
+    call, regardless of how many pytree leaves the table coalesces.
+    """
+    if pin is None:
+        def pin(x):
+            return x
+    s = rs.shape[-1]
+    k, S, order, inv = _scatter_layout(n, s)
+    trail = blocks.ndim - 1
+    wide = (slice(None),) + (None,) * trail      # (S, 1[, 1]) broadcast
+    if S != s:      # dummy blocks pad the table to k blocks per owner
+        blocks = jnp.pad(blocks,
+                         ((0, S - s),) + ((0, 0),) * trail)
+    rs_sc, ag_sc = _masks_to_scatter(rs, ag, S, order)
+    if order is not None:                   # owner-major scatter order
+        blocks = blocks[order]
+    blocks = pin(blocks)
+    rs_f = rs_sc.astype(rs_dtype)
+
+    # ---- Reduce-Scatter with send-side drops --------------------------
+    # rs_dtype=f32 (default): renormalised-mean precision / the paper-
+    # faithful setting; bf16 halves the RS wire bytes (hillclimb knob).
+    # (f32 also works around an XLA-CPU AllReducePromotion crash on
+    # sub-32-bit reduce-scatter under partial-manual shard_map.)
+    masked = pin(blocks.astype(rs_dtype) * rs_f[i][wide])
+    sums = masked
+    for a in names:     # scatter over the flattened axes, major to minor
+        sums = pin(lax.psum_scatter(sums, a, scatter_dimension=0,
+                                    tiled=True))
+    sums = pin(sums.reshape((k,) + blocks.shape[1:]))
+    counts = jnp.sum(rs_f.astype(jnp.float32), axis=0)   # (S,) known locally
+    my_counts = lax.dynamic_slice_in_dim(counts, i * k, k).astype(rs_dtype)
+
+    if mode == "model" or mode == "grad_renorm":
+        tilde = sums / jnp.maximum(my_counts[wide], 1.0)
+    elif mode == "grad":
+        tilde = sums / float(n)                       # no renormalisation
+    else:
+        raise ValueError(mode)
+
+    # ---- All-Gather with receive-side drops ------------------------------
+    gathered = pin(tilde.astype(blocks.dtype))        # AG moves model dtype
+    for a in reversed(names):
+        gathered = pin(lax.all_gather(gathered, a, axis=0, tiled=True))
+    recv = ag_sc[i][wide]
+    if mode == "model" or mode == "grad_renorm":
+        out = jnp.where(recv, gathered, blocks)       # keep local block
+    else:                                             # "grad": no update
+        out = jnp.where(recv, gathered, jnp.zeros_like(blocks))
+    if inv is not None:
+        out = out[inv]                                # back to block order
+    return pin(out[:s])
+
+
+def _bucket_masks(rs: jax.Array, ag: jax.Array, b: int):
+    """Bucket b's (n, s) mask pair: per-bucket ``(n_buckets, n, s)`` masks
+    index their own draw, legacy ``(n, s)`` masks are shared by every
+    bucket (the seed one-draw-per-round semantics)."""
+    if rs.ndim == 3:
+        return rs[b], ag[b]
+    return rs, ag
+
+
+def _resolve_masks(key, n: int, p: float, plan: plan_lib.ExchangePlan,
+                   masks):
+    """Default mask draw for a plan: per-bucket draws for packetised
+    (fixed-byte) plans, one shared draw for the legacy layouts."""
+    if masks is not None:
+        rs, ag = masks
+        if rs.ndim == 3 and rs.shape[0] != plan.n_buckets:
+            raise ValueError(f"per-bucket masks carry {rs.shape[0]} "
+                             f"buckets, plan has {plan.n_buckets}")
+        return rs, ag
+    return sample_masks(key, n, p, plan.s,
+                        n_buckets=plan.n_buckets
+                        if plan.per_bucket_masks else None)
+
+
 def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
                       axis_name: AxisNames, *, mode: str = "model",
                       masks=None, rs_dtype=jnp.float32,
@@ -187,58 +298,23 @@ def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
     D = v.shape[0]
 
     rs, ag = sample_masks(key, n, p, s) if masks is None else masks
-    s = rs.shape[1]
-    k, S, order, _inv = _scatter_layout(n, s)
-
+    s = rs.shape[-1]
     pad = (-D) % s
     blk = (D + pad) // s
-    vp = jnp.pad(v, (0, pad + (S - s) * blk)) \
-        if pad or S != s else v
-    blocks = vp.reshape(S, blk)
-    rs_sc, ag_sc = _masks_to_scatter(rs, ag, S, order)
-    if order is not None:                   # owner-major scatter order
-        blocks = blocks[order]
-    rs_f = rs_sc.astype(rs_dtype)
-
-    # ---- Reduce-Scatter with send-side drops --------------------------
-    # rs_dtype=f32 (default): renormalised-mean precision / the paper-
-    # faithful setting; bf16 halves the RS wire bytes (hillclimb knob).
-    masked = blocks.astype(rs_dtype) * rs_f[i][:, None]
-    sums = masked
-    for a in names:     # scatter over the flattened axes, major to minor
-        sums = lax.psum_scatter(sums, a, scatter_dimension=0, tiled=True)
-    sums = sums.reshape(k, blk)   # my k owned blocks: Σ_i rs[i, j]·v_i^(j)
-    counts = jnp.sum(rs_f.astype(jnp.float32), axis=0)   # (S,) known locally
-    my_counts = lax.dynamic_slice_in_dim(counts, i * k, k).astype(rs_dtype)
-
-    if mode == "model" or mode == "grad_renorm":
-        tilde = sums / jnp.maximum(my_counts[:, None], 1.0)
-    elif mode == "grad":
-        tilde = sums / float(n)                       # no renormalisation
-    else:
-        raise ValueError(mode)
-
-    # ---- All-Gather with receive-side drops ------------------------------
-    gathered = tilde.astype(blocks.dtype)
-    for a in reversed(names):
-        gathered = lax.all_gather(gathered, a, axis=0, tiled=True)
-    gathered = gathered.reshape(S, blk)
-    recv = ag_sc[i][:, None]
-    if mode == "model" or mode == "grad_renorm":
-        out = jnp.where(recv, gathered, blocks)       # keep local block
-    else:                                             # "grad": no update
-        out = jnp.where(recv, gathered, jnp.zeros_like(blocks))
-    if _inv is not None:
-        out = out[_inv]                               # back to block order
+    vp = jnp.pad(v, (0, pad)) if pad else v
+    out = _exchange_table(vp.reshape(s, blk), rs, ag, names=names, n=n,
+                          i=i, mode=mode, rs_dtype=rs_dtype)
     out = out.reshape(-1)
-    return out[:D] if (pad or S != s) else out
+    return out[:D] if pad else out
 
 
 def rps_exchange(tree: Any, key: jax.Array, p: float,
                  axis_name: AxisNames, *, mode: str = "model",
                  masks=None, rs_dtype=jnp.float32,
                  s: Optional[int] = None) -> Any:
-    """Pytree wrapper around :func:`rps_exchange_flat`.
+    """Pytree wrapper around :func:`rps_exchange_flat` — semantically the
+    single-bucket plan (``plan.single_bucket_plan``): the whole tree is
+    one ``ravel_pytree`` buffer, exchanged in one RS+AG round.
 
     Forwards ``rs_dtype`` (the seed version silently dropped it, so bf16 RS
     accumulation was unreachable from the pytree API) and the server-block
@@ -247,6 +323,40 @@ def rps_exchange(tree: Any, key: jax.Array, p: float,
     flat, unravel = ravel_pytree(tree)
     return unravel(rps_exchange_flat(flat, key, p, axis_name, mode=mode,
                                      masks=masks, rs_dtype=rs_dtype, s=s))
+
+
+def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
+                      axis_name: AxisNames, *,
+                      plan: plan_lib.ExchangePlan, mode: str = "model",
+                      masks=None, rs_dtype=jnp.float32,
+                      pin: Optional[Callable] = None) -> Any:
+    """Bucketed collective exchange of a (worker-local) pytree inside a
+    shard_map region: exactly ``2 × plan.n_buckets`` collectives per round
+    (one psum_scatter + one all_gather per bucket), however many leaves
+    the tree has.
+
+    ``plan`` is an :class:`repro.core.plan.ExchangePlan` built **once at
+    setup** from this tree's (local) shapes. ``masks`` accepts the legacy
+    shared ``(n, s)`` pair or a per-bucket ``(n_buckets, n, s)`` pair; the
+    default draw follows ``plan.per_bucket_masks``. A
+    ``per_leaf_plan`` reproduces the seed per-leaf tree-map of
+    :func:`rps_exchange_flat` bit-identically; a ``single_bucket_plan``
+    reproduces :func:`rps_exchange`.
+    """
+    names = _axis_tuple(axis_name)
+    n = axis_size(axis_name)
+    if plan.n != n:
+        raise ValueError(f"plan built for n={plan.n}, axes give n={n}")
+    i = _my_index(axis_name)
+    rs, ag = _resolve_masks(key, n, p, plan, masks)
+    tables = plan.gather(tree)
+    outs = []
+    for b, tbl in enumerate(tables):
+        rs_b, ag_b = _bucket_masks(rs, ag, b)
+        outs.append(_exchange_table(tbl, rs_b, ag_b, names=names, n=n,
+                                    i=i, mode=mode, rs_dtype=rs_dtype,
+                                    pin=pin))
+    return plan.scatter(outs)
 
 
 def _blockify(x: jax.Array, s: int, model_dim: Optional[int]):
@@ -293,8 +403,7 @@ def rps_exchange_leaf(x: jax.Array, rs: jax.Array, ag: jax.Array,
     names = _axis_tuple(axis_name)
     n = axis_size(axis_name)
     i = _my_index(axis_name)
-    s = rs.shape[1]
-    k, S, order, _inv = _scatter_layout(n, s)
+    s = rs.shape[-1]
     blocks, restore = _blockify(x, s, model_dim)
 
     def pin(v):
@@ -306,40 +415,11 @@ def rps_exchange_leaf(x: jax.Array, rs: jax.Array, ag: jax.Array,
         return jax.lax.with_sharding_constraint(
             v, _P(*([None] * (v.ndim - 1) + ["model"])))
 
-    if S != s:      # dummy blocks pad the table to k blocks per owner
-        blocks = jnp.pad(blocks, ((0, S - s),) + ((0, 0),) * (blocks.ndim - 1))
-    rs_sc, ag_sc = _masks_to_scatter(rs, ag, S, order)
-    if order is not None:                   # owner-major scatter order
-        blocks = blocks[order]
-    blocks = pin(blocks)
-    rs_f = rs_sc.astype(jnp.float32)
     # Reduce-Scatter accumulates in f32: the renormalised mean should not
-    # round per-addend (also works around an XLA-CPU AllReducePromotion
-    # crash on sub-32-bit reduce-scatter under partial-manual shard_map).
-    masked = pin(blocks.astype(jnp.float32) * rs_f[i][:, None, None])
-    sums = masked
-    for a in names:
-        sums = pin(lax.psum_scatter(sums, a, scatter_dimension=0, tiled=True))
-    sums = pin(sums.reshape((k,) + blocks.shape[1:]))
-    counts = jnp.sum(rs_f, axis=0)
-    my_counts = lax.dynamic_slice_in_dim(counts, i * k, k)
-    if mode in ("model", "grad_renorm"):
-        tilde = sums / jnp.maximum(my_counts[:, None, None], 1.0)
-    elif mode == "grad":
-        tilde = sums / float(n)
-    else:
-        raise ValueError(mode)
-    gathered = pin(tilde.astype(blocks.dtype))        # AG moves model dtype
-    for a in reversed(names):
-        gathered = pin(lax.all_gather(gathered, a, axis=0, tiled=True))
-    recv = ag_sc[i][:, None, None]
-    if mode in ("model", "grad_renorm"):
-        out = jnp.where(recv, gathered, blocks)
-    else:
-        out = jnp.where(recv, gathered, jnp.zeros_like(blocks))
-    if _inv is not None:
-        out = out[_inv]                               # back to block order
-    return restore(pin(out[:s]))
+    # round per-addend (see _exchange_table).
+    out = _exchange_table(blocks, rs, ag, names=names, n=n, i=i,
+                          mode=mode, rs_dtype=jnp.float32, pin=pin)
+    return restore(out)
 
 
 def _resolve_global_backend(backend: str) -> str:
@@ -354,10 +434,23 @@ def _resolve_global_backend(backend: str) -> str:
     return backend
 
 
+def _global_groups(plan: plan_lib.ExchangePlan):
+    """Bucket indices grouped by (blk, m, dtype): every group is one
+    stacked batched dispatch in the global path. Fixed-byte plans are
+    near-uniform (one or two groups); per-leaf legacy plans degrade to one
+    group per distinct leaf size — the seed per-leaf lowering."""
+    groups: dict = {}
+    for b, bk in enumerate(plan.buckets):
+        groups.setdefault((bk.blk, bk.m, bk.dtype), []).append(b)
+    return groups
+
+
 def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
                         mode: str = "model", masks=None,
                         backend: str = "auto",
-                        s: Optional[int] = None) -> Any:
+                        s: Optional[int] = None,
+                        plan: Optional[plan_lib.ExchangePlan] = None
+                        ) -> Any:
     """Global-view exchange on *stacked* worker trees (leading dim n).
 
     Mathematically identical to the collective path (same masks, same block
@@ -365,55 +458,71 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
     n-worker simulation harness and as the cross-check in tests.
 
     ``masks``: optional precomputed ``(rs, ag)`` pair from any
-    ``repro.channels`` channel; defaults to the i.i.d. Bernoulli draw from
-    ``sample_masks(key, n, p, s)``.
+    ``repro.channels`` channel — legacy shared ``(n, s)`` or per-bucket
+    ``(n_buckets, n, s)``; defaults to the draw the plan prescribes
+    (``sample_masks(key, n, p, s[, n_buckets])``).
 
     ``s``: number of parameter-server blocks (DESIGN.md §10); inferred from
-    ``masks`` when given, defaults to n (the paper's square layout,
-    bit-identical to the seed).
+    ``masks``/``plan`` when given, defaults to n (the paper's square
+    layout, bit-identical to the seed).
+
+    ``plan``: an :class:`repro.core.plan.ExchangePlan` over the
+    *per-worker* tree (leading n dim stripped). ``None`` builds the legacy
+    per-leaf plan on the fly — one bucket per leaf, shared masks — which
+    is exactly the seed per-leaf behaviour. Buckets of equal width execute
+    as **one** stacked batched dispatch (a single grid-over-blocks
+    ``masked_avg`` Pallas call on the "pallas" backend, one einsum on
+    "jnp") instead of a per-leaf loop.
 
     ``backend``: "jnp" (einsum), "pallas" (the fused
-    ``kernels.masked_avg_pallas`` renormalised block average, interpreted
-    off-TPU), or "auto" (pallas on TPU, jnp elsewhere).
+    ``kernels.masked_avg_grid_pallas`` renormalised block average,
+    interpreted off-TPU), or "auto" (pallas on TPU, jnp elsewhere).
     """
-    rs, ag = sample_masks(key, n, p, s) if masks is None else masks
-    s = rs.shape[1]
-    rs_f = rs.astype(jnp.float32)
-    counts = jnp.maximum(rs_f.sum(0), 1.0)                  # (s,)
+    if plan is None:
+        per_worker = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree)
+        if masks is not None:
+            s = masks[0].shape[-1]
+        plan = plan_lib.per_leaf_plan(per_worker, n, s)
+    rs, ag = _resolve_masks(key, n, p, plan, masks)
+    s = plan.s
+    renorm = mode in ("model", "grad_renorm")
+    if mode not in ("model", "grad", "grad_renorm"):
+        raise ValueError(mode)
     backend = _resolve_global_backend(backend)
-    use_pallas = backend == "pallas" and mode in ("model", "grad_renorm")
+    use_pallas = backend == "pallas" and renorm
     if use_pallas:
-        from repro.kernels.masked_avg import masked_avg_pallas
+        from repro.kernels.masked_avg import masked_avg_grid_pallas
         interp = jax.default_backend() != "tpu"
 
-    def leaf(x):
-        shape = x.shape[1:]
-        flat = x.reshape(n, -1)
-        D = flat.shape[1]
-        pad = (-D) % s
-        if pad:
-            flat = jnp.pad(flat, ((0, 0), (0, pad)))
-        blocks = flat.reshape(n, s, -1)                     # (worker, block, blk)
-        f32 = blocks.astype(jnp.float32)
-        if use_pallas:
-            blk = f32.shape[-1]
-            tilde = jax.vmap(functools.partial(
-                masked_avg_pallas, tile_d=min(512, blk), interpret=interp))(
-                    f32.transpose(1, 0, 2), rs_f.T)         # (block, blk)
+    tables = plan.gather(tree, lead=1)        # each (n, s, blk, m)
+    outs: list = [None] * len(tables)
+    for (blk, m, _dt), idxs in _global_groups(plan).items():
+        G = len(idxs)
+        d = blk * m
+        stack = jnp.stack([tables[j].reshape(n, s, d) for j in idxs])
+        f32 = stack.astype(jnp.float32)       # (G, n, s, d)
+        if rs.ndim == 3:
+            rs_g = jnp.stack([rs[j] for j in idxs]).astype(jnp.float32)
+            ag_g = jnp.stack([ag[j] for j in idxs])
         else:
-            sums = jnp.einsum("ij,ijd->jd", rs_f, f32)
-            if mode in ("model", "grad_renorm"):
-                tilde = sums / counts[:, None]
-            elif mode == "grad":
-                tilde = sums / float(n)
-            else:
-                raise ValueError(mode)
-        fallback = f32 if mode in ("model", "grad_renorm") else jnp.zeros_like(f32)
-        out = jnp.where(ag[:, :, None], tilde[None], fallback)
-        out = out.reshape(n, D + pad)[:, :D].astype(x.dtype)
-        return out.reshape((n,) + shape)
-
-    return jax.tree.map(leaf, tree)
+            rs_g = jnp.broadcast_to(rs.astype(jnp.float32), (G, n, s))
+            ag_g = jnp.broadcast_to(ag, (G, n, s))
+        counts = jnp.maximum(rs_g.sum(1), 1.0)            # (G, s)
+        if use_pallas:
+            blocks_k = f32.transpose(0, 2, 1, 3).reshape(G * s, n, d)
+            mask_k = rs_g.transpose(0, 2, 1).reshape(G * s, n)
+            tilde = masked_avg_grid_pallas(
+                blocks_k, mask_k, tile_d=min(512, d),
+                interpret=interp).reshape(G, s, d)
+        else:
+            sums = jnp.einsum("gij,gijd->gjd", rs_g, f32)
+            tilde = sums / counts[..., None] if renorm else sums / float(n)
+        fallback = f32 if renorm else jnp.zeros_like(f32)
+        out = jnp.where(ag_g[..., None], tilde[:, None], fallback)
+        for pos, j in enumerate(idxs):
+            outs[j] = out[pos].reshape(n, s, blk, m)
+    return plan.scatter(outs, lead=1)
 
 
 def reliable_average(tree: Any, axis_name: AxisNames) -> Any:

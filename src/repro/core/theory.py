@@ -160,6 +160,41 @@ def corollary2_rate(n: int, p: float, T: int, sigma: float = 1.0,
     return float(lead + 1.0 / T + tail)
 
 
+# ---- ExchangePlan extensions (DESIGN.md §11) -------------------------------
+
+def plan_packets(plan) -> "tuple[int, int]":
+    """``(s, model_packets)`` of an ``repro.core.plan.ExchangePlan`` (duck-
+    typed: anything with ``.s`` and ``.model_packets``). This is how the
+    bucketed plan drives the packetisation bounds: a fixed-byte plan sends
+    each server block as ``plan.n_buckets`` wire packets (one per bucket
+    column), so ``packets_per_block(s, model_packets) = n_buckets`` and
+    every bound below is evaluated at ``block_drop_rate(p, n_buckets)``.
+    The degenerate single-draw plans give ``model_packets = s`` — one
+    packet per block, the paper's layout, and the bounds reduce exactly
+    to the square formulas.
+
+    The resulting α's are *conservative* for a bucketed exchange: the
+    bound treats a server block as loss-atomic (all packets or nothing),
+    while the per-bucket masks actually deliver buckets independently —
+    the measured gap sits at or below the prediction
+    (``benchmarks/exchange_bench.py`` reports both).
+    """
+    return int(plan.s), int(plan.model_packets)
+
+
+def alpha_bounds_plan(plan, n: int, p: float):
+    """(α₁, α₂) Lemma-7/8 bounds at the plan's packetisation."""
+    s, mp = plan_packets(plan)
+    return (alpha1_bound(n, p, s=s, model_packets=mp),
+            alpha2_bound(n, p, s=s, model_packets=mp))
+
+
+def corollary2_rate_plan(plan, n: int, p: float, T: int, **kw) -> float:
+    """Corollary-2 rate prediction at the plan's packetisation."""
+    s, mp = plan_packets(plan)
+    return corollary2_rate(n, p, T, s=s, model_packets=mp, **kw)
+
+
 # ---- channel extensions (DESIGN.md §9) ------------------------------------
 
 def effective_p(channel_or_p) -> float:

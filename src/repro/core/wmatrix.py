@@ -81,6 +81,39 @@ def rps_round(V: np.ndarray, rng: np.random.Generator, p: float,
     return Xn
 
 
+def apply_w(V: np.ndarray, W: np.ndarray) -> np.ndarray:
+    """Apply a (s, n, n) W-stack to stacked models V (n, s·blk): block j of
+    every worker's next model is ``W[j].T @ V^(j)`` (paper eq. 4)."""
+    n, D = V.shape
+    s = W.shape[0]
+    assert D % s == 0, "pad the buffer to a multiple of s"
+    blk = D // s
+    out = np.empty_like(V)
+    for j in range(s):
+        out[:, j * blk:(j + 1) * blk] = W[j].T @ V[:, j * blk:(j + 1) * blk]
+    return out
+
+
+def bucketed_round(buffers, rs_masks, ag_masks) -> list:
+    """Per-bucket W-matrix oracle for a bucketed ExchangePlan round
+    (DESIGN.md §11): bucket b's flat buffer (n, s·blk_b) is transformed by
+    the W stack built from *its own* (n, s) mask pair — each bucket column
+    is an independent wire packet. Masks may also be a single shared
+    (n, s) pair (the legacy one-draw layouts). Returns the transformed
+    buffers; this is the reference the plan executors are validated
+    against per bucket."""
+    rs_masks = np.asarray(rs_masks)
+    ag_masks = np.asarray(ag_masks)
+    out = []
+    for b, V in enumerate(buffers):
+        rs = rs_masks[b] if rs_masks.ndim == 3 else rs_masks
+        ag = ag_masks[b] if ag_masks.ndim == 3 else ag_masks
+        n = V.shape[0]
+        W = build_w(n, np.arange(rs.shape[1]) % n, rs, ag)
+        out.append(apply_w(np.asarray(V, np.float64), W))
+    return out
+
+
 def monte_carlo_alphas(n: int, p: float, trials: int = 2000,
                        seed: int = 0) -> Tuple[float, float]:
     """Estimate α₁ (from E[WWᵀ]) and α₂ (from E[W Aₙ Wᵀ]).

@@ -6,10 +6,13 @@ computes ``sum_i m_i · v_i / sum_i m_i``. Fusing mask-multiply, reduce and
 renormalise keeps the traffic at one read of the (n, d) stack + one write of
 (d,) — the op is memory-bound, so the fusion is the whole win.
 
-Tiling: grid over the model-block dimension d; each step loads an
-(n, TILE_D) tile of worker contributions into VMEM (n = #workers on the
-unreliable axis, ≤ 64, so the tile is n·TILE_D·4B ≤ 64·512·4 = 128 KiB — well
-inside VMEM), reduces over n on the VPU, and writes a (TILE_D,) tile.
+Tiling: one 2-D grid over (block, model-dim tile) — **all** B blocks of an
+exchange round (every server block of every plan bucket, DESIGN.md §11) run
+as a single ``pallas_call`` dispatch instead of a per-block ``jax.vmap``.
+Each step loads an (n, TILE_D) tile of worker contributions into VMEM
+(n = #workers on the unreliable axis, ≤ 64, so the tile is n·TILE_D·4B ≤
+64·512·4 = 128 KiB — well inside VMEM), reduces over n on the VPU, and
+writes a (TILE_D,) tile.
 """
 from __future__ import annotations
 
@@ -24,33 +27,50 @@ DEFAULT_TILE_D = 512
 
 
 def _masked_avg_kernel(blocks_ref, mask_ref, out_ref):
-    blocks = blocks_ref[...].astype(jnp.float32)       # (n, TILE_D)
-    mask = mask_ref[...].astype(jnp.float32)           # (n, 1)
+    blocks = blocks_ref[0].astype(jnp.float32)         # (n, TILE_D)
+    mask = mask_ref[0].astype(jnp.float32)             # (n, 1)
     s = jnp.sum(blocks * mask, axis=0)                 # (TILE_D,)
     c = jnp.maximum(jnp.sum(mask), 1.0)
-    out_ref[...] = (s / c).astype(out_ref.dtype)
+    out_ref[...] = (s / c)[None].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def masked_avg_grid_pallas(blocks: jax.Array, mask: jax.Array, *,
+                           tile_d: int = DEFAULT_TILE_D,
+                           interpret: bool = False) -> jax.Array:
+    """Batched renormalised block average: one grid-over-blocks dispatch.
+
+    blocks: (B, n, d) — B independent server blocks, n workers each;
+    mask:   (B, n)    — per-block delivery mask. Returns (B, d) with
+    ``out[b] = Σ_i mask[b,i]·blocks[b,i] / max(Σ_i mask[b,i], 1)``.
+    """
+    B, n, d = blocks.shape
+    if mask.shape != (B, n):
+        raise ValueError(f"mask shape {mask.shape} != ({B}, {n})")
+    pad = (-d) % tile_d
+    if pad:
+        blocks = jnp.pad(blocks, ((0, 0), (0, 0), (0, pad)))
+    dp = d + pad
+    mask3 = mask.reshape(B, n, 1).astype(blocks.dtype)
+    out = pl.pallas_call(
+        _masked_avg_kernel,
+        grid=(B, dp // tile_d),
+        in_specs=[
+            pl.BlockSpec((1, n, tile_d), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((1, n, 1), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_d), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, dp), blocks.dtype),
+        interpret=interpret,
+    )(blocks, mask3)
+    return out[:, :d]
 
 
 @functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
 def masked_avg_pallas(blocks: jax.Array, mask: jax.Array, *,
                       tile_d: int = DEFAULT_TILE_D,
                       interpret: bool = False) -> jax.Array:
-    """blocks: (n, d); mask: (n,) -> (d,)."""
-    n, d = blocks.shape
-    pad = (-d) % tile_d
-    if pad:
-        blocks = jnp.pad(blocks, ((0, 0), (0, pad)))
-    dp = d + pad
-    mask2 = mask.reshape(n, 1).astype(blocks.dtype)
-    out = pl.pallas_call(
-        _masked_avg_kernel,
-        grid=(dp // tile_d,),
-        in_specs=[
-            pl.BlockSpec((n, tile_d), lambda i: (0, i)),
-            pl.BlockSpec((n, 1), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((tile_d,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((dp,), blocks.dtype),
-        interpret=interpret,
-    )(blocks, mask2)
-    return out[:d]
+    """blocks: (n, d); mask: (n,) -> (d,). Single-block convenience wrapper
+    over :func:`masked_avg_grid_pallas` (B = 1)."""
+    return masked_avg_grid_pallas(blocks[None], mask.reshape(1, -1),
+                                  tile_d=tile_d, interpret=interpret)[0]

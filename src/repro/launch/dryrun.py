@@ -38,7 +38,8 @@ DROP_RATE = 0.1          # the paper's headline tolerance
 
 # §Perf hillclimb overrides (set from CLI; None = paper-faithful baseline)
 OVERRIDES = {"exchange_dtype": "float32", "exchange_every": 1,
-             "capacity_factor": None, "remat_budget": None}
+             "capacity_factor": None, "remat_budget": None,
+             "bucket_mb": None, "n_buckets": None}
 
 
 def pick_microbatch(cfg: ArchConfig, b_local: int, seq: int,
@@ -93,7 +94,9 @@ def build_train_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh,
     tcfg = TrainConfig(optimizer="sgd", lr=0.05, drop_rate=DROP_RATE,
                        aggregator=agg, microbatch=mb,
                        exchange_dtype=OVERRIDES["exchange_dtype"],
-                       exchange_every=OVERRIDES["exchange_every"])
+                       exchange_every=OVERRIDES["exchange_every"],
+                       bucket_mb=OVERRIDES["bucket_mb"],
+                       n_buckets=OVERRIDES["n_buckets"])
     init_state, train_step, state_shardings = make_train_setup(
         model, cfg, tcfg, mesh, rps_axes=rps_axes, fsdp_axis=fsdp_axis)
 
@@ -123,7 +126,12 @@ def build_train_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh,
     with jax.set_mesh(mesh):      # with_sharding_constraint needs a context
         lowered = step.lower(params_shape, opt_shape, batch,
                              jnp.int32(0), jax.random.PRNGKey(0))
-    return lowered, {"n_rps": n_rps, "microbatch": mb, "aggregator": agg}
+    # static exchange cost straight from the plan (DESIGN.md §11): the RPS
+    # round is exactly 2 collectives per bucket, volume known pre-compile
+    info = {"n_rps": n_rps, "microbatch": mb, "aggregator": agg,
+            "exchange_plan": train_step.plan.describe(tcfg.exchange_dtype)
+            if train_step.plan is not None else None}
+    return lowered, info
 
 
 def _cache_spec_tree(cache_shape, cfg: ArchConfig, mesh, data_axes):
@@ -285,6 +293,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                "alias_gb": ma.alias_size_in_bytes / 1e9},
            "info": info,
            "roofline": dataclass_dict(report)}
+    if verbose and info.get("exchange_plan"):
+        ep = info["exchange_plan"]
+        print(f"  exchange plan: {ep['n_buckets']} buckets × s={ep['s']} -> "
+              f"{ep['collectives_per_round']} RPS collectives/round, "
+              f"{ep['wire_bytes_per_round']/1e6:.1f} MB wire/round "
+              f"(pad {ep['pad_frac']*100:.1f}%, "
+              f"model_packets={ep['model_packets']})")
     if verbose:
         print(f"[{arch} × {shape_name} × {mesh_desc}] compile {t_compile:.1f}s"
               f" | hbm/dev {report.hbm_per_device/1e9:.2f} GB"
@@ -319,11 +334,18 @@ def main():
     ap.add_argument("--exchange-every", type=int, default=1)
     ap.add_argument("--capacity", type=float, default=None)
     ap.add_argument("--remat-budget", type=float, default=None)
+    ap.add_argument("--bucket-mb", type=float, default=None,
+                    help="coalesce the exchange into fixed-byte buckets of "
+                         "this many MiB (DESIGN.md §11); default: per-leaf")
+    ap.add_argument("--buckets", type=int, default=None,
+                    help="… or exactly this many size-balanced buckets")
     args = ap.parse_args()
     OVERRIDES.update(exchange_dtype=args.exchange_dtype,
                      exchange_every=args.exchange_every,
                      capacity_factor=args.capacity,
-                     remat_budget=args.remat_budget)
+                     remat_budget=args.remat_budget,
+                     bucket_mb=args.bucket_mb,
+                     n_buckets=args.buckets)
 
     archs = ARCH_IDS if (args.sweep or args.arch is None) else [args.arch]
     shapes = list(SHAPES) if (args.sweep or args.shape is None) \

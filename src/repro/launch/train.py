@@ -51,6 +51,13 @@ def main():
     ap.add_argument("--aggregator", default="rps_model",
                     choices=["rps_model", "rps_grad", "allreduce_model",
                              "allreduce_grad", "local"])
+    ap.add_argument("--bucket-mb", type=float, default=None,
+                    help="coalesce the exchange into fixed-byte buckets "
+                         "of this many MiB (DESIGN.md §11) — buckets are "
+                         "also the packetisation unit (per-bucket drop "
+                         "masks); default: the per-leaf legacy plan")
+    ap.add_argument("--buckets", type=int, default=None,
+                    help="… or exactly this many size-balanced buckets")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--warmup", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
@@ -74,12 +81,18 @@ def main():
         n_workers=args.workers, drop_rate=args.drop_rate,
         aggregator=args.aggregator, lr=args.lr, steps=args.steps,
         warmup=args.warmup, batch_size=args.batch_size, seed=args.seed,
-        channel=args.channel, n_servers=args.servers)
+        channel=args.channel, n_servers=args.servers,
+        bucket_mb=args.bucket_mb, n_buckets=args.buckets)
     t0 = time.time()
     hist = run_simulation(loss_fn, model.init, batch_fn, scfg)
     dt = time.time() - t0
     print(f"channel={hist['channel']} "
           f"eff_p={hist['channel_effective_p']:.4f}")
+    if hist.get("exchange_plan"):
+        ep = hist["exchange_plan"]
+        print(f"exchange plan: {ep['n_buckets']} buckets × s={ep['s']} -> "
+              f"{ep['collectives_per_round']} collectives/round, "
+              f"model_packets={ep['model_packets']}")
     print(f"n={args.workers} s={args.servers or args.workers} "
           f"p={args.drop_rate} agg={args.aggregator} "
           f"final_loss={hist['final_loss']:.4f} "
@@ -91,6 +104,7 @@ def main():
         print("checkpoint ->", args.checkpoint)
     if args.out:
         hist.pop("params")
+        hist.pop("channel_state")          # jax pytree, not JSON
         with open(args.out, "w") as f:
             json.dump(hist, f, indent=1)
         print("history ->", args.out)

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import channels as channels_lib
+from repro.core import plan as plan_lib
 from repro.core import rps as rps_lib
 from repro.optim import make_optimizer
 
@@ -55,10 +56,17 @@ class SimulatorConfig:
     # parameter-server blocks s (DESIGN.md §10): the model is partitioned
     # into s blocks with round-robin worker owners; None = n_workers, the
     # paper's square layout (bit-identical to the seed).
+    bucket_mb: Optional[float] = None
+    # ExchangePlan coalescing (DESIGN.md §11): fixed-byte buckets of this
+    # many MiB — buckets are also the packetisation unit (per-bucket mask
+    # draws). Both bucket knobs None = the per-leaf legacy plan,
+    # bit-identical to the seed.
+    n_buckets: Optional[int] = None
+    # … or exactly this many size-balanced buckets.
 
 
 def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool,
-              masks=None):
+              masks=None, plan=None):
     n = scfg.n_workers
     agg = scfg.aggregator
     if agg == "local":
@@ -70,7 +78,19 @@ def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool,
     mode = "grad" if is_grad else "model"
     return rps_lib.rps_exchange_global(tree, key, scfg.drop_rate, n,
                                        mode=mode, masks=masks,
-                                       s=scfg.n_servers)
+                                       s=scfg.n_servers, plan=plan)
+
+
+def make_exchange_plan(params: Any, scfg: SimulatorConfig):
+    """The :class:`repro.core.plan.ExchangePlan` a config prescribes, built
+    from a *per-worker* param tree (no stacked dim): per-leaf legacy when
+    the bucket knobs are unset (bit-identical to the seed), fixed-byte /
+    count-balanced coalescing otherwise (DESIGN.md §11)."""
+    if not scfg.aggregator.startswith("rps"):
+        return None
+    return plan_lib.plan_from_config(params, scfg.n_workers, scfg.n_servers,
+                                     bucket_mb=scfg.bucket_mb,
+                                     n_buckets=scfg.n_buckets)
 
 
 def run_simulation(loss_fn: Callable, init_fn: Callable,
@@ -99,6 +119,9 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
     rps_agg = scfg.aggregator.startswith("rps")
     ch_state = channel.init_state(jax.random.fold_in(key, 0x636831)) \
         if rps_agg else None
+    # the exchange layout, computed once — never inside the jitted step
+    # (DESIGN.md §11); grads share the params' tree so one plan serves both
+    plan = make_exchange_plan(p1, scfg)
 
     @functools.partial(jax.jit, static_argnames=("exchange",))
     def step_fn(params, opt_state, batch, key, lr, ch_state, exchange=True):
@@ -107,19 +130,23 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
 
         masks = None
         if rps_agg:     # channel time advances every step, exchange or not
-            rs, ag, ch_state_new = channel.sample(key, ch_state)
+            if plan.per_bucket_masks:   # packetised: one draw per bucket
+                rs, ag, ch_state_new = channel.sample_packets(
+                    key, ch_state, plan.n_buckets)
+            else:
+                rs, ag, ch_state_new = channel.sample(key, ch_state)
             masks, ch_state = (rs, ag), ch_state_new
         loss, grads = jax.value_and_grad(total)(params, batch)
         if is_grad_mode:
             if exchange:
                 grads = _exchange(grads, key, scfg, is_grad=True,
-                                  masks=masks)
+                                  masks=masks, plan=plan)
             params, opt_state = opt.update(grads, opt_state, params, lr)
         else:
             params, opt_state = opt.update(grads, opt_state, params, lr)
             if exchange:
                 params = _exchange(params, key, scfg, is_grad=False,
-                                   masks=masks)
+                                   masks=masks, plan=plan)
         mean_p = jax.tree.map(lambda x: jnp.mean(x, 0, keepdims=True), params)
         consensus = jax.tree.reduce(
             lambda a, x: a + jnp.sum(jnp.square(x.astype(jnp.float32))),
@@ -129,7 +156,9 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
     history = {"step": [], "loss": [], "consensus": [], "eval": [],
                "channel": repr(channel),
                "channel_effective_p": channel.effective_p() if rps_agg
-               else 0.0}
+               else 0.0,
+               "exchange_plan": plan.describe() if plan is not None
+               else None}
     for t in range(scfg.steps):
         kt = jax.random.fold_in(key, t)
         lr = scfg.lr * min(1.0, (t + 1) / max(scfg.warmup, 1))
@@ -146,4 +175,7 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
                 history["eval"].append(float(eval_fn(mean_params)))
     history["final_loss"] = history["loss"][-1]
     history["params"] = params
+    # final channel state: lets callers verify channel time advanced once
+    # per wall-clock step (exchanged or skipped — DESIGN.md §9)
+    history["channel_state"] = ch_state
     return history

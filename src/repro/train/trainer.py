@@ -15,10 +15,14 @@ Layout (DESIGN.md §4/§5):
     On a single pod n_rps = 1 and the exchange degenerates to local — ICI is
     reliable (DESIGN.md §5).
 
-The exchange runs in a partial-manual ``jax.shard_map`` over the RPS axes
-only; model/FSDP dims stay under GSPMD, and ``rps_exchange_leaf`` keeps the
-model-sharded dim of each leaf intact so the lowered HLO is exactly one
-reduce-scatter + one all-gather per leaf-group over the unreliable axes.
+The exchange runs in a fully-manual ``shard_map`` over *all* mesh axes and
+executes an :class:`repro.core.plan.ExchangePlan` computed **once at
+setup** (DESIGN.md §11): the param pytree is coalesced into buckets —
+2 collectives per bucket per round instead of 2 per leaf — with TP-sharded
+leaves in model-dim-preserving buckets of their own. The default
+(``bucket_mb``/``n_buckets`` unset) is the per-leaf plan, bit-identical to
+the seed lowering; a bucketed plan is also the packetisation unit and draws
+per-bucket drop masks (``Channel.sample_packets``).
 """
 from __future__ import annotations
 
@@ -28,11 +32,13 @@ from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro import channels as channels_lib
 from repro.configs.base import ArchConfig
+from repro.core import plan as plan_lib
 from repro.core import rps as rps_lib
 from repro.launch import sharding as shlib
 from repro.models.registry import Model
@@ -64,10 +70,46 @@ class TrainConfig:
                                            # (DESIGN.md §10); None = n_rps,
                                            # the paper's square layout
                                            # (bit-identical to the seed).
+    bucket_mb: Optional[float] = None      # ExchangePlan coalescing
+                                           # (DESIGN.md §11): fixed-byte
+                                           # buckets of this many MiB.
+    n_buckets: Optional[int] = None        # … or exactly this many size-
+                                           # balanced buckets. Both None =
+                                           # the per-leaf legacy plan,
+                                           # bit-identical to the seed.
 
 
 def _is_model_mode(agg: str) -> bool:
     return agg.endswith("_model")
+
+
+def _shard_map(f, mesh, in_specs, out_specs, axis_names):
+    if hasattr(jax, "shard_map"):                 # jax >= 0.6
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names)
+    from jax.experimental.shard_map import shard_map as sm   # jax < 0.6
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
+def _local_struct(params_shape: Any, especs: Any, mesh: Mesh) -> Any:
+    """Per-device (manual-region) shapes of a sharded param tree: each
+    spec'd dim divided by its mesh-axis extent. This is the view the
+    fully-manual exchange body sees, and the tree the ExchangePlan is
+    built from."""
+    def loc(sds, spec):
+        entries = list(spec) + [None] * (len(sds.shape) - len(spec))
+        dims = []
+        for d, ent in zip(sds.shape, entries):
+            if ent is None:
+                dims.append(int(d))
+                continue
+            axes = ent if isinstance(ent, tuple) else (ent,)
+            div = int(np.prod([mesh.shape[a] for a in axes]))
+            dims.append(int(d) // div)
+        return jax.ShapeDtypeStruct(tuple(dims), sds.dtype)
+
+    return jax.tree.map(loc, params_shape, especs)
 
 
 def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
@@ -89,6 +131,11 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
     channel itself is exposed as ``train_step.channel``). Channel state is
     replicated — every device evolves it identically from the shared key,
     like the masks themselves.
+
+    The exchange layout is precomputed here (``train_step.plan``, an
+    :class:`repro.core.plan.ExchangePlan`): param specs and local shapes
+    are derived once via ``jax.eval_shape`` — nothing shape-related runs
+    inside the traced step body.
     """
     n_rps = 1
     for a in rps_axes:
@@ -100,14 +147,33 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
     # only rps aggregators consume masks (same gate as the simulator's
     # rps_agg) — a channel configured alongside an allreduce/none baseline
     # keeps the seed 5-arg signature and samples nothing
-    stateful = tcfg.channel is not None \
-        and tcfg.aggregator.startswith("rps")
+    rps_agg = tcfg.aggregator.startswith("rps")
+    stateful = tcfg.channel is not None and rps_agg
 
     def init_state(key):
         p1 = model.init(key)
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (n_rps,) + x.shape).copy(), p1)
         return stacked, opt.init(stacked)
+
+    # ---- static setup: specs, local shapes, the ExchangePlan --------------
+    # (hoisted out of the traced step — the seed recomputed eval_shape +
+    # param_specs twice per trace: once in train_step, again in _exchange)
+    params_shape = jax.eval_shape(init_state, jax.random.PRNGKey(0))[0]
+    especs = shlib.param_specs(params_shape, cfg, worker_axes=rps_axes,
+                               fsdp_axis=fsdp_axis, stacked=True)
+    plan = None
+    if rps_agg:
+        local_shape = _local_struct(params_shape, especs, mesh)
+        bucketing = tcfg.bucket_mb is not None or tcfg.n_buckets is not None
+        mdims = jax.tree.map(
+            lambda d: None if d is None else d + 1,        # + stacked dim
+            shlib.model_dims(params_shape, cfg, stacked=True),
+            is_leaf=lambda x: x is None) if bucketing else None
+        plan = plan_lib.plan_from_config(local_shape, n_rps, n_servers,
+                                         bucket_mb=tcfg.bucket_mb,
+                                         n_buckets=tcfg.n_buckets,
+                                         model_dims=mdims)
 
     # ---- shardings --------------------------------------------------------
     def state_shardings(params_shape):
@@ -121,68 +187,52 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
         ``mode=None`` derives the exchange mode from the aggregator (None
         is the *only* sentinel — the seed code did ``mode = mode or rmode``,
         which silently overwrote any falsy caller value). ``masks`` is an
-        optional precomputed ``(rs, ag)`` pair from a channel, replicated
-        into the manual region; None keeps the in-body Bernoulli draw,
-        bit-identical to the seed path.
+        optional precomputed pair from a channel — legacy shared ``(n, s)``
+        or per-bucket ``(n_buckets, n, s)`` — replicated into the manual
+        region; None keeps the in-body draw the plan prescribes,
+        bit-identical to the seed path for the default per-leaf plan.
 
         Fully-manual shard_map over *all* mesh axes with the param
         PartitionSpecs as in_specs: every leaf arrives as its local shard,
         the RS+AG runs over the RPS axes only, and the TP/FSDP dims are
         plain local data. (A partial-manual region left the model dim to
-        shardy, which de-sharded it — full params in f32 per device.)"""
+        shardy, which de-sharded it — full params in f32 per device.)
+        The body executes the precomputed plan: exactly
+        ``2 × plan.n_buckets`` collectives per round."""
         if tcfg.aggregator == "none" or n_rps == 1:
             return tree
         if tcfg.aggregator.startswith("allreduce"):
             return jax.tree.map(lambda x: jnp.broadcast_to(
                 jnp.mean(x, axis=0, keepdims=True), x.shape), tree)
-        especs = shlib.param_specs(jax.eval_shape(lambda t: t, tree), cfg,
-                                   worker_axes=rps_axes,
-                                   fsdp_axis=fsdp_axis, stacked=True)
         if mode is None:
             mode = ("model" if _is_model_mode(tcfg.aggregator)
                     else "grad_renorm")
 
         def body(t, key, masks):
-            if masks is None:
-                masks = rps_lib.sample_masks(key, n_rps, tcfg.drop_rate,
-                                             n_servers)
-
-            def one(x):
-                shp = x.shape
-                out = rps_lib.rps_exchange_flat(
-                    x.reshape(-1), key, tcfg.drop_rate, rps_axes,
-                    mode=mode, masks=masks,
-                    rs_dtype=jnp.dtype(tcfg.exchange_dtype))
-                return out.reshape(shp)
-
-            return jax.tree.map(one, t)
+            return rps_lib.rps_exchange_plan(
+                t, key, tcfg.drop_rate, rps_axes, plan=plan, mode=mode,
+                masks=masks, rs_dtype=jnp.dtype(tcfg.exchange_dtype))
 
         if masks is None:
-            fn = jax.shard_map(
-                lambda t, k: body(t, k, None), mesh=mesh,
-                in_specs=(especs, P()), out_specs=especs,
-                axis_names=set(mesh.axis_names))
+            fn = _shard_map(
+                lambda t, k: body(t, k, None), mesh,
+                (especs, P()), especs, set(mesh.axis_names))
             return fn(tree, key)
-        fn = jax.shard_map(body, mesh=mesh,
-                           in_specs=(especs, P(), (P(), P())),
-                           out_specs=especs,
-                           axis_names=set(mesh.axis_names))
+        fn = _shard_map(body, mesh, (especs, P(), (P(), P())), especs,
+                        set(mesh.axis_names))
         return fn(tree, key, masks)
 
     # ---- the step ---------------------------------------------------------
     def train_step(params, opt_state, batch, step, key, ch_state=None):
         # XLA leaves while-loop carries (the grad accumulator) replicated
-        # without explicit annotations — pin grads to the param shardings.
-        _pspecs = shlib.param_specs(jax.eval_shape(lambda t: t, params), cfg,
-                                    worker_axes=rps_axes,
-                                    fsdp_axis=fsdp_axis, stacked=True)
-
+        # without explicit annotations — pin grads to the param shardings
+        # (especs precomputed above, not re-derived per trace).
         def _pin(tree):
             if not cfg.shard_acts:
                 return tree
             return jax.tree.map(
                 lambda x, sp: jax.lax.with_sharding_constraint(x, sp),
-                tree, _pspecs)
+                tree, especs)
 
         def worker_loss(p, b):
             loss, metrics = model.loss(p, b)
@@ -229,8 +279,13 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
         masks = None
         if stateful:
             # channel time advances every step, exchanged or not (a trace
-            # cursor / burst state tracks wall-clock iterations)
-            rs, ag, ch_state = channel.sample(key, ch_state)
+            # cursor / burst state tracks wall-clock iterations); a
+            # packetised plan draws one mask entry per bucket column
+            if plan is not None and plan.per_bucket_masks:
+                rs, ag, ch_state = channel.sample_packets(
+                    key, ch_state, plan.n_buckets)
+            else:
+                rs, ag, ch_state = channel.sample(key, ch_state)
             masks = (rs, ag)
 
         lr = jnp.float32(tcfg.lr)
@@ -261,4 +316,5 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
 
     train_step.channel = channel
     train_step.init_channel_state = channel.init_state
+    train_step.plan = plan
     return init_state, train_step, state_shardings

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.masked_avg import masked_avg_pallas
+from repro.kernels.masked_avg import masked_avg_grid_pallas, masked_avg_pallas
 from repro.kernels.rglru_scan import rglru_pallas
 from repro.kernels.rwkv6_scan import rwkv6_pallas
 
@@ -32,6 +32,43 @@ def test_masked_avg_all_dropped_but_owner():
     got = masked_avg_pallas(blocks, mask, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(blocks[2]),
                                rtol=1e-6)
+
+
+@pytest.mark.parametrize("B", [1, 3, 16])
+@pytest.mark.parametrize("n,d", [(2, 7), (8, 512), (16, 1000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_avg_grid_sweep(B, n, d, dtype):
+    """The grid-over-blocks dispatch (one pallas_call for B blocks —
+    DESIGN.md §11) against the einsum oracle, per block."""
+    blocks = jnp.asarray(RNG.normal(size=(B, n, d)), dtype)
+    mask = jnp.asarray(RNG.integers(0, 2, size=(B, n)),
+                       jnp.float32).at[:, 0].set(1)
+    got = masked_avg_grid_pallas(blocks, mask, tile_d=256, interpret=True)
+    f32 = blocks.astype(jnp.float32)
+    want = jnp.einsum("bn,bnd->bd", mask, f32) \
+        / jnp.maximum(mask.sum(-1), 1.0)[:, None]
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_masked_avg_grid_matches_per_block_vmap():
+    """The fused grid call must equal the per-block vmap it replaced."""
+    B, n, d = 6, 8, 300
+    blocks = jnp.asarray(RNG.normal(size=(B, n, d)), jnp.float32)
+    mask = jnp.asarray(RNG.integers(0, 2, size=(B, n)),
+                       jnp.float32).at[:, 0].set(1)
+    got = masked_avg_grid_pallas(blocks, mask, tile_d=128, interpret=True)
+    want = jax.vmap(lambda b, m: masked_avg_pallas(
+        b, m, tile_d=128, interpret=True))(blocks, mask)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_masked_avg_grid_rejects_bad_mask_shape():
+    blocks = jnp.zeros((2, 4, 8))
+    with pytest.raises(ValueError):
+        masked_avg_grid_pallas(blocks, jnp.zeros((4,)), interpret=True)
 
 
 def _rwkv_inputs(B, S, h, dk, dv, dtype=jnp.float32):

@@ -1,0 +1,659 @@
+"""Bucketed ExchangePlan (DESIGN.md §11): construction invariants,
+gather/scatter roundtrips, bit-identity of the degenerate plans with the
+pre-refactor paths, the bucketed parity matrix (collective ≡ global ≡
+per-bucket W-matrix oracle, modes × s × rs_dtype), the lowered-HLO
+collective count (exactly 2 × n_buckets RPS collectives per round), and
+the exchange_every>1 skipped-step semantics."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                  # sealed envs: deterministic fallback
+    from _hypothesis_compat import given, settings, st
+
+from repro import channels as ch
+from repro.core import plan as plan_lib
+from repro.core import rps, theory, wmatrix
+
+KEY = jax.random.PRNGKey(7)
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+RNG = np.random.default_rng(11)
+
+
+def _tree(sizes=((6, 4), (17,), (3, 5), (8, 2), (9,)), dtypes=None):
+    dtypes = dtypes or [jnp.float32] * len(sizes)
+    return {f"p{i}": jnp.asarray(RNG.normal(size=s), dt)
+            for i, (s, dt) in enumerate(zip(sizes, dtypes))}
+
+
+def _run_sub(code: str, timeout=570) -> str:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, r.stdout + r.stderr
+    return r.stdout
+
+
+# ---- construction invariants ---------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([2, 4, 8]), s=st.sampled_from([1, 3, 8, 13]),
+       knob=st.sampled_from([None, ("n_buckets", 1), ("n_buckets", 2),
+                             ("n_buckets", 3), ("n_buckets", 99),
+                             ("bucket_bytes", 64), ("bucket_bytes", 200),
+                             ("bucket_bytes", 1e9)]),
+       seed=st.integers(0, 100))
+def test_plan_partitions_every_leaf_once(n, s, knob, seed):
+    tree = _tree()
+    kw = {} if knob is None else {knob[0]: knob[1]}
+    p = plan_lib.make_plan(tree, n, s, **kw)
+    seen = sorted(i for b in p.buckets for i in b.leaf_ids)
+    assert seen == list(range(p.n_leaves))
+    for b in p.buckets:
+        assert b.free == sum(b.sizes)
+        assert b.blk == max(-(-b.free // s), 1)
+        assert b.pad == s * b.blk - b.free
+    if knob and knob[0] == "n_buckets":
+        assert p.n_buckets == min(knob[1], len(tree))
+    assert p.per_bucket_masks == (knob is not None)
+    assert p.model_packets == s * (p.n_buckets if knob else 1)
+
+
+def test_plan_bucket_bytes_capacity():
+    tree = _tree(sizes=((10,), (10,), (10,), (10,), (100,)))
+    p = plan_lib.make_plan(tree, 4, bucket_bytes=2 * 10 * 4)
+    for b in p.buckets:
+        nbytes = sum(sz * 4 for sz in b.sizes)
+        assert nbytes <= 80 or len(b.leaf_ids) == 1   # oversize leaf alone
+    assert p.n_buckets == 3                            # 2+2 small, 1 big
+
+
+def test_plan_model_dim_buckets():
+    tree = {"tp": jnp.asarray(RNG.normal(size=(3, 8, 5)), jnp.float32),
+            "a": jnp.asarray(RNG.normal(size=(7,)), jnp.float32),
+            "b": jnp.asarray(RNG.normal(size=(4, 4)), jnp.float32)}
+    p = plan_lib.make_plan(tree, 4, 4, n_buckets=1,
+                           model_dims={"tp": 2, "a": None, "b": None})
+    tps = [b for b in p.buckets if b.model_dim is not None]
+    assert len(tps) == 1 and tps[0].m == 5 and tps[0].free == 24
+    # TP leaves never coalesce with flat ones
+    assert all(len(b.leaf_ids) == 1 for b in tps)
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.sampled_from([1, 2, 5, 8]), lead=st.sampled_from([0, 1]),
+       knob=st.sampled_from([None, ("n_buckets", 2), ("bucket_bytes", 128)]),
+       seed=st.integers(0, 1000))
+def test_gather_scatter_roundtrip(s, lead, knob, seed):
+    rng = np.random.default_rng(seed)
+    base = {"a": (6, 4), "b": (17,), "tp": (3, 8)}
+    tree = {k: jnp.asarray(rng.normal(size=v), jnp.float32)
+            for k, v in base.items()}
+    tree["c"] = jnp.asarray(rng.normal(size=(5,)), jnp.bfloat16)
+    kw = {} if knob is None else {knob[0]: knob[1]}
+    p = plan_lib.make_plan(tree, 4, s,
+                           model_dims={"a": None, "b": None, "tp": 1,
+                                       "c": None}, **kw)
+    t = tree if lead == 0 else jax.tree.map(
+        lambda x: jnp.stack([x, 2 * x, -x]), tree)
+    tables = p.gather(t, lead=lead)
+    assert all(tb.shape[lead:-2] == (s,) for tb in tables)
+    back = p.scatter(tables, lead=lead)
+    for k in t:
+        assert back[k].dtype == t[k].dtype
+        np.testing.assert_array_equal(
+            np.asarray(back[k], np.float32), np.asarray(t[k], np.float32))
+
+
+def test_single_bucket_plan_is_ravel_pytree_order():
+    from jax.flatten_util import ravel_pytree
+    tree = _tree(dtypes=[jnp.float32, jnp.bfloat16, jnp.float32,
+                         jnp.float32, jnp.float32])
+    p = plan_lib.single_bucket_plan(tree, 4)           # s = n = 4
+    (tbl,) = p.gather(tree)
+    flat, _ = ravel_pytree(tree)
+    D = flat.shape[0]
+    np.testing.assert_array_equal(
+        np.asarray(tbl.reshape(-1)[:D]), np.asarray(flat))
+    assert not p.per_bucket_masks and p.model_packets == p.s
+
+
+def test_plan_describe_and_wire_bytes():
+    tree = _tree()
+    p = plan_lib.make_plan(tree, 4, 8, n_buckets=2)
+    d = p.describe()
+    assert d["collectives_per_round"] == 2 * p.n_buckets
+    assert d["model_packets"] == 8 * p.n_buckets
+    assert d["wire_bytes_per_round"] == p.wire_bytes() > 0
+    assert 0.0 <= d["pad_frac"] < 1.0
+    with pytest.raises(ValueError):
+        plan_lib.make_plan(tree, 4, n_buckets=2, bucket_bytes=64)
+    with pytest.raises(ValueError):
+        plan_lib.make_plan(tree, 4, n_buckets=0)       # not "disable"
+    with pytest.raises(ValueError):
+        plan_lib.make_plan(tree, 4, bucket_bytes=0)
+    with pytest.raises(ValueError):
+        p.gather({"p0": tree["p0"]})                   # leaf count mismatch
+
+
+def test_plan_wire_bytes_prices_rs_leg_at_rs_dtype():
+    """The RS leg moves the accumulation dtype (f32 default), the AG leg
+    the payload dtype — a bf16 model at default rs_dtype must not report
+    half its true RS traffic, and the bf16-RS knob must show."""
+    tree = {"w": jnp.zeros((64,), jnp.bfloat16)}
+    p = plan_lib.make_plan(tree, 4)
+    elems = 4 * p.buckets[0].blk
+    assert p.wire_bytes() == elems * (4 + 2)               # f32 RS + bf16 AG
+    assert p.wire_bytes("bfloat16") == elems * (2 + 2)     # the hillclimb knob
+    f32 = plan_lib.make_plan({"w": jnp.zeros((64,))}, 4)
+    assert f32.describe()["wire_bytes_per_round"] == elems * 8
+
+
+# ---- global path: plan executes ≡ legacy per-leaf, and the W oracle -------
+
+@pytest.mark.parametrize("mode", ["model", "grad", "grad_renorm"])
+@pytest.mark.parametrize("s", [1, 8, 16])
+def test_global_bucketed_p0_is_mean(mode, s):
+    n = 8
+    tree = jax.tree.map(lambda x: jnp.stack([x] * 0 + [x + i for i in
+                                             range(n)]), _tree())
+    plan = plan_lib.make_plan(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                     tree), n, s, n_buckets=3)
+    out = rps.rps_exchange_global(tree, KEY, 0.0, n, mode=mode, plan=plan)
+    for k in tree:
+        want = np.broadcast_to(np.asarray(tree[k]).mean(0),
+                               tree[k].shape)
+        np.testing.assert_allclose(np.asarray(out[k]), want, atol=1e-5,
+                                   rtol=1e-5)
+
+
+@pytest.mark.parametrize("per_bucket", [False, True])
+@pytest.mark.parametrize("s", [3, 8, 16])
+def test_global_bucketed_matches_w_oracle(s, per_bucket):
+    """Model-mode bucketed exchange ≡ the per-bucket W-matrix oracle:
+    every bucket's flat buffer transformed by the W stack built from its
+    own mask columns (paper eq. 4, per packetisation unit)."""
+    n = 8
+    tree = {k: jnp.asarray(RNG.normal(size=(n,) + v), jnp.float32)
+            for k, v in {"a": (6, 4), "b": (33,), "c": (5, 5)}.items()}
+    plan = plan_lib.make_plan(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                     tree), n, s, n_buckets=2,
+        per_bucket_masks=per_bucket)
+    masks = rps.sample_masks(KEY, n, 0.4, s,
+                             n_buckets=plan.n_buckets if per_bucket
+                             else None)
+    out = rps.rps_exchange_global(tree, KEY, 0.4, n, mode="model",
+                                  masks=masks, plan=plan)
+    # oracle on the plan's own buffers
+    bufs = [np.asarray(t.reshape(n, -1)) for t in plan.gather(tree, lead=1)]
+    want = wmatrix.bucketed_round(bufs, np.asarray(masks[0]),
+                                  np.asarray(masks[1]))
+    got = [np.asarray(t.reshape(n, -1))
+           for t in plan.gather(out, lead=1)]
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, atol=1e-5, rtol=1e-5)
+
+
+def test_global_bucketed_preserves_leaf_dtypes():
+    """Regression: scatter must restore every member's dtype — the global
+    path computes in f32, and TP (model-dim) buckets used to come back
+    f32 while flat buckets were cast back."""
+    n = 4
+    tree = {"tp": jnp.ones((n, 3, 8), jnp.bfloat16),
+            "a": jnp.ones((n, 7), jnp.bfloat16),
+            "b": jnp.ones((n, 5), jnp.float32)}
+    plan = plan_lib.make_plan(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                     tree), n,
+        model_dims={"tp": 1, "a": None, "b": None})
+    out = rps.rps_exchange_global(tree, KEY, 0.3, n, plan=plan)
+    assert {k: v.dtype for k, v in out.items()} == \
+        {k: v.dtype for k, v in tree.items()}
+
+
+def test_global_plan_masks_shape_mismatch_raises():
+    n = 4
+    tree = {"x": jnp.zeros((n, 32))}
+    plan = plan_lib.make_plan(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                     tree), n, 4, n_buckets=1)
+    bad = rps.sample_masks(KEY, n, 0.3, 4, n_buckets=3)
+    with pytest.raises(ValueError):
+        rps.rps_exchange_global(tree, KEY, 0.3, n, plan=plan, masks=bad)
+
+
+# ---- collective path: bit-identity and parity (8 forced host devices) -----
+
+def test_plan_collective_bit_identity_and_parity_8dev():
+    """The plan executors against the legacy paths, in a subprocess with 8
+    forced host devices:
+
+      1. single-bucket plan ≡ ``rps_exchange`` (ravel_pytree) — bitwise,
+         f32 and bf16 rs_dtype, mixed-dtype tree;
+      2. per-leaf plan ≡ per-leaf tree-map of ``rps_exchange_flat`` —
+         bitwise, modes × s ∈ {1, n, 2n} × rs_dtype;
+      3. bucketed plan: collective ≡ global, shared and per-bucket masks,
+         modes × s ∈ {1, n, 2n}.
+    """
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, %r)
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.core import plan as plan_lib, rps
+        from repro.train.trainer import _shard_map
+
+        def sm(f, mesh, in_specs, out_specs):
+            return _shard_map(f, mesh, in_specs, out_specs, {"data"})
+
+        n = 8
+        mesh = Mesh(np.array(jax.devices()).reshape(n), ("data",))
+        rng = np.random.default_rng(5)
+        tree = {"a": jnp.asarray(rng.normal(size=(n, 6, 4)), jnp.float32),
+                "b": jnp.asarray(rng.normal(size=(n, 33)), jnp.float32),
+                "c": jnp.asarray(rng.normal(size=(n, 5, 5)), jnp.bfloat16)}
+        per_worker = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree)
+        key = jax.random.PRNGKey(11)
+        specs = jax.tree.map(lambda _: P("data"), per_worker)
+
+        def run_collective(fn):
+            def body(t, k):
+                sq = jax.tree.map(lambda x: x[0], t)
+                out = fn(sq, k)
+                return jax.tree.map(lambda x: x[None], out)
+            f = sm(body, mesh, (specs, P()), specs)
+            return jax.tree.map(np.asarray, jax.jit(f)(tree, key))
+
+        def tree_eq(a, b, exact=True, tol=2e-5):
+            for k in a:
+                x = np.asarray(a[k], np.float32)
+                y = np.asarray(b[k], np.float32)
+                if exact:
+                    assert np.array_equal(x, y), (k, np.abs(x - y).max())
+                else:
+                    assert np.abs(x - y).max() < tol, (k, np.abs(x-y).max())
+
+        checks = 0
+        # 1. single-bucket plan == rps_exchange (ravel_pytree), bitwise
+        for dt in (jnp.float32, jnp.bfloat16):
+            sb = plan_lib.single_bucket_plan(per_worker, n)
+            a = run_collective(lambda t, k: rps.rps_exchange_plan(
+                t, k, 0.25, "data", plan=sb, rs_dtype=dt))
+            b = run_collective(lambda t, k: rps.rps_exchange(
+                t, k, 0.25, "data", rs_dtype=dt))
+            tree_eq(a, b); checks += 1
+
+        # 2. per-leaf plan == tree-map of rps_exchange_flat, bitwise
+        for s in (1, n, 2 * n):
+            masks = rps.sample_masks(key, n, 0.3, s)
+            for mode in ("model", "grad", "grad_renorm"):
+                for dt in (jnp.float32, jnp.bfloat16):
+                    pl = plan_lib.per_leaf_plan(per_worker, n, s)
+                    a = run_collective(lambda t, k: rps.rps_exchange_plan(
+                        t, k, 0.3, "data", plan=pl, mode=mode,
+                        masks=masks, rs_dtype=dt))
+                    def legacy(t, k):
+                        def one(x):
+                            shp = x.shape
+                            out = rps.rps_exchange_flat(
+                                x.reshape(-1), k, 0.3, "data", mode=mode,
+                                masks=masks, rs_dtype=dt)
+                            return out.reshape(shp)
+                        return jax.tree.map(one, t)
+                    b = run_collective(legacy)
+                    tree_eq(a, b); checks += 1
+
+        # 3. bucketed plan: collective == global, shared + per-bucket masks
+        for s in (1, n, 2 * n):
+            bp = plan_lib.make_plan(per_worker, n, s, n_buckets=2)
+            for nb in (None, bp.n_buckets):
+                masks = rps.sample_masks(key, n, 0.3, s, n_buckets=nb)
+                for mode in ("model", "grad", "grad_renorm"):
+                    a = run_collective(lambda t, k: rps.rps_exchange_plan(
+                        t, k, 0.3, "data", plan=bp, mode=mode,
+                        masks=masks))
+                    g = jax.tree.map(np.asarray, rps.rps_exchange_global(
+                        tree, key, 0.3, n, mode=mode, masks=masks,
+                        plan=bp))
+                    tree_eq(a, g, exact=False); checks += 1
+
+        print("PLAN_PARITY_OK", checks)
+    """) % SRC
+    out = _run_sub(code)
+    assert "PLAN_PARITY_OK" in out, out
+
+
+def test_lowered_hlo_has_2_x_n_buckets_collectives():
+    """The tentpole claim, asserted on the compiled text of a stacked-
+    replica trainer step: the lowering contains exactly 2 × n_buckets
+    RPS-axis collectives (n_buckets psum_scatters + n_buckets all_gathers)
+    for a bucketed plan, vs 2 × n_leaves for the legacy per-leaf default."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, %r)
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs import get_config
+        from repro.models import build_model
+        from repro.models.inputs import make_batch
+        from repro.train.trainer import TrainConfig, make_train_setup
+
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 2),
+                    ("data", "model"))
+        cfg = dataclasses.replace(get_config("deepseek-7b").reduced(),
+                                  n_layers=2, shard_acts=False)
+        model = build_model(cfg, grouped=True)
+        n = 4
+
+        def count_collectives(tcfg):
+            init_state, train_step, _ = make_train_setup(
+                model, cfg, tcfg, mesh, rps_axes=("data",))
+            params, opt_state = jax.eval_shape(
+                init_state, jax.random.PRNGKey(0))
+            batch = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(
+                    (n, x.shape[0] // n) + x.shape[1:], x.dtype),
+                make_batch(cfg, 8, 32))
+            with mesh:
+                lowered = jax.jit(train_step).lower(
+                    params, opt_state, batch, jnp.int32(0),
+                    jax.random.PRNGKey(0))
+            txt = lowered.as_text()
+            # count collective *ops* — plain substring counting also hits
+            # attributes like all_gather_dim
+            return (train_step.plan,
+                    txt.count('"stablehlo.reduce_scatter"('),
+                    txt.count('"stablehlo.all_gather"('))
+
+        plan, rs_c, ag_c = count_collectives(
+            TrainConfig(aggregator="rps_model", drop_rate=0.1, n_buckets=3))
+        assert plan.per_bucket_masks
+        assert rs_c == plan.n_buckets, (rs_c, plan.n_buckets)
+        assert ag_c == plan.n_buckets, (ag_c, plan.n_buckets)
+
+        plan_pl, rs_pl, ag_pl = count_collectives(
+            TrainConfig(aggregator="rps_model", drop_rate=0.1))
+        n_leaves = plan_pl.n_leaves
+        assert plan_pl.n_buckets == n_leaves
+        assert rs_pl == n_leaves and ag_pl == n_leaves, (rs_pl, n_leaves)
+        assert rs_c < rs_pl
+        print("HLO_OK", plan.n_buckets, "buckets vs", n_leaves, "leaves")
+    """) % SRC
+    out = _run_sub(code)
+    assert "HLO_OK" in out, out
+
+
+# ---- exchange_every > 1: skipped steps (simulator) ------------------------
+
+def _lin_task(n, steps=1):
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.normal(size=(n, 8, 6)), jnp.float32)
+    ys = jnp.asarray(rng.normal(size=(n, 8, 4)), jnp.float32)
+
+    def init_fn(key):
+        return {"w": jax.random.normal(key, (6, 4)) * 0.1}
+
+    def loss_fn(p, b):
+        x, y = b
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    return init_fn, loss_fn, lambda t: (xs, ys)
+
+
+def _trace_pair(n):
+    """Two trace channels whose drop rates agree at period 0 and differ
+    wildly at period 1 — the probe for "are the period-1 masks ever
+    applied?": any computation consuming them must diverge between the
+    pair, any computation ignoring them must agree bit-for-bit."""
+    up0 = np.linspace(0.1, 0.4, n, dtype=np.float32)
+    a = ch.TraceChannel(n, {"up": np.stack([up0, up0 * 0.5]),
+                            "down": np.zeros((2, n), np.float32)})
+    b = ch.TraceChannel(n, {"up": np.stack([up0, np.full(n, 0.95,
+                                                         np.float32)]),
+                            "down": np.zeros((2, n), np.float32)})
+    return a, b
+
+
+@pytest.mark.parametrize("bucketed", [False, True])
+def test_simulator_skipped_steps_are_pure_local_sgd(bucketed):
+    """With exchange_every = 2, step 1 must not consume its masks: two runs
+    whose channels differ *only* in the period-1 drop rates stay
+    bit-identical (the period-0 exchange is common), and the run agrees
+    with a manual local-SGD recomputation of the skipped step."""
+    from repro.optim import make_optimizer
+    from repro.train.simulator import SimulatorConfig, run_simulation
+    init_fn, loss_fn, batch_fn = _lin_task(4)
+    kw = {"n_buckets": 2} if bucketed else {}
+    cha, chb = _trace_pair(4)
+    base = dict(n_workers=4, drop_rate=0.4, lr=0.1, eval_every=1,
+                aggregator="rps_model", **kw)
+    runs = [run_simulation(loss_fn, init_fn, batch_fn,
+                           SimulatorConfig(steps=2, exchange_every=2,
+                                           channel=c, **base))
+            for c in (cha, chb)]
+    np.testing.assert_array_equal(np.asarray(runs[0]["params"]["w"]),
+                                  np.asarray(runs[1]["params"]["w"]))
+    # control: with the exchange enabled at step 1 the pair must diverge
+    cha, chb = _trace_pair(4)
+    ex = [run_simulation(loss_fn, init_fn, batch_fn,
+                         SimulatorConfig(steps=2, exchange_every=1,
+                                         channel=c, **base))
+          for c in (cha, chb)]
+    assert not np.array_equal(np.asarray(ex[0]["params"]["w"]),
+                              np.asarray(ex[1]["params"]["w"]))
+    # and the skipped step is numerically a local SGD step
+    cha, _ = _trace_pair(4)
+    h0 = run_simulation(loss_fn, init_fn, batch_fn,
+                        SimulatorConfig(steps=1, exchange_every=1,
+                                        channel=cha, **base))
+    opt = make_optimizer("sgd")
+    p0 = h0["params"]
+
+    def total(ps, bs):
+        return jnp.sum(jax.vmap(loss_fn)(ps, bs))
+
+    grads = jax.grad(total)(p0, batch_fn(1))
+    want, _ = opt.update(grads, opt.init(p0), p0, jnp.float32(0.1))
+    np.testing.assert_allclose(np.asarray(runs[0]["params"]["w"]),
+                               np.asarray(want["w"]), rtol=2e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("bucketed", [False, True])
+def test_simulator_channel_state_advances_on_skipped_steps(bucketed):
+    """Channel time is wall-clock iterations (DESIGN.md §9): the trace
+    cursor must tick on every step even when exchange_every skips the
+    exchange — bucketed (sample_packets) or not."""
+    from repro.train.simulator import SimulatorConfig, run_simulation
+    n, steps = 4, 5
+    init_fn, loss_fn, batch_fn = _lin_task(n)
+    h = run_simulation(loss_fn, init_fn, batch_fn,
+                       SimulatorConfig(n_workers=n, drop_rate=0.3,
+                                       aggregator="rps_model", steps=steps,
+                                       eval_every=2, exchange_every=3,
+                                       channel="trace:lam=8000,prio=0.8",
+                                       n_buckets=2 if bucketed else None))
+    # only steps 0 and 3 exchange; the cursor must still have ticked 5×
+    assert int(h["channel_state"]["t"]) == steps
+
+
+# ---- exchange_every > 1: skipped steps (mesh trainer) ---------------------
+
+def test_trainer_skipped_step_is_pure_local_and_channel_advances():
+    """Mesh-trainer counterpart of the simulator skip tests, using the
+    trace-pair probe: two trainers whose channels differ *only* in the
+    period the skipped step would use must produce bit-identical params on
+    the skipped step (masks sampled, never applied) and diverge on an
+    exchanged step once the differing period is consumed — while the
+    channel cursor ticks on every step. Subprocess, 8 forced devices."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, %r)
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro import channels as ch
+        from repro.configs import get_config
+        from repro.models import build_model
+        from repro.models.inputs import make_batch
+        from repro.train.trainer import TrainConfig, make_train_setup
+
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 2),
+                    ("data", "model"))
+        cfg = dataclasses.replace(get_config("deepseek-7b").reduced(),
+                                  n_layers=2, shard_acts=False)
+        model = build_model(cfg, grouped=True)
+        n = 4
+        batch = jax.tree.map(
+            lambda x: x.reshape((n, -1) + x.shape[1:]),
+            make_batch(cfg, 8, 32))
+        key = jax.random.PRNGKey(42)
+
+        up0 = np.linspace(0.1, 0.4, n).astype(np.float32)
+        down = np.zeros((2, n), np.float32)
+        chans = [ch.TraceChannel(n, {"up": np.stack([up0, u1]),
+                                     "down": down})
+                 for u1 in (up0 * 0.5, np.full(n, 0.95, np.float32))]
+
+        outs = []
+        for c in chans:
+            tcfg = TrainConfig(optimizer="sgd", lr=0.1, drop_rate=0.3,
+                               aggregator="rps_model", exchange_every=2,
+                               channel=c, n_buckets=3)
+            init_state, train_step, _ = make_train_setup(
+                model, cfg, tcfg, mesh, rps_axes=("data",))
+            params, opt_state = init_state(jax.random.PRNGKey(0))
+            ch0 = train_step.init_channel_state(jax.random.PRNGKey(1))
+            with mesh:
+                step = jax.jit(train_step)
+                # t=0 exchanges on the COMMON period 0, advancing the
+                # cursor to the differing period 1…
+                p1, o1, _, ch1 = step(params, opt_state, batch,
+                                      jnp.int32(0), key, ch0)
+                # …then t=1 skips: the period-1 masks must go unused
+                p2, _, _, ch2 = step(p1, o1, batch, jnp.int32(1),
+                                     jax.random.fold_in(key, 1), ch1)
+                # …and t=2 exchanges, consuming period 0 again (wraps)
+                p3, _, _, ch3 = step(p2, o1, batch, jnp.int32(2),
+                                     jax.random.fold_in(key, 2), ch2)
+            assert int(ch1["t"]) == 1 and int(ch2["t"]) == 2 \\
+                and int(ch3["t"]) == 3, \\
+                "channel time must advance on every step, skipped or not"
+            outs.append((p2, p3))
+
+        for a, b in zip(jax.tree.leaves(outs[0][0]),
+                        jax.tree.leaves(outs[1][0])):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \\
+                "skipped-step params must not depend on the masks"
+
+        # control: with exchange_every=1, t=1 *consumes* the differing
+        # period-1 masks -> the pair must diverge
+        outs2 = []
+        for c in chans:
+            tcfg = TrainConfig(optimizer="sgd", lr=0.1, drop_rate=0.3,
+                               aggregator="rps_model", exchange_every=1,
+                               channel=c, n_buckets=3)
+            init_state, train_step, _ = make_train_setup(
+                model, cfg, tcfg, mesh, rps_axes=("data",))
+            params, opt_state = init_state(jax.random.PRNGKey(0))
+            ch0 = train_step.init_channel_state(jax.random.PRNGKey(1))
+            with mesh:
+                step = jax.jit(train_step)
+                p1, o1, _, ch1 = step(params, opt_state, batch,
+                                      jnp.int32(0), key, ch0)
+                p2, _, _, _ = step(p1, o1, batch, jnp.int32(1),
+                                   jax.random.fold_in(key, 1), ch1)
+            outs2.append(p2)
+        diff = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(jax.tree.leaves(outs2[0]),
+                                   jax.tree.leaves(outs2[1])))
+        assert diff, "exchanged step must consume its masks"
+        print("TRAINER_SKIP_OK")
+    """) % SRC
+    out = _run_sub(code)
+    assert "TRAINER_SKIP_OK" in out, out
+
+
+# ---- theory / channels plan hooks ----------------------------------------
+
+def test_theory_plan_hooks():
+    tree = {"a": jnp.zeros((64,)), "b": jnp.zeros((64,)),
+            "c": jnp.zeros((64,)), "d": jnp.zeros((64,))}
+    legacy = plan_lib.per_leaf_plan(tree, 16)
+    a1, a2 = theory.alpha_bounds_plan(legacy, 16, 0.1)
+    assert a1 == theory.alpha1_bound(16, 0.1)
+    assert a2 == theory.alpha2_bound(16, 0.1)
+    # bucketed packetisation: each block spans n_buckets packets → the
+    # conservative bound grows with the bucket count at fixed s
+    p2 = plan_lib.make_plan(tree, 16, 16, n_buckets=2)
+    p4 = plan_lib.make_plan(tree, 16, 16, n_buckets=4)
+    assert theory.plan_packets(p4) == (16, 64)
+    a2_2 = theory.alpha_bounds_plan(p2, 16, 0.1)[1]
+    a2_4 = theory.alpha_bounds_plan(p4, 16, 0.1)[1]
+    assert a2 < a2_2 < a2_4
+    assert theory.block_drop_rate(0.1, p4.packets_per_block) == \
+        pytest.approx(1 - 0.9 ** 4)
+    r = theory.corollary2_rate_plan(p2, 16, 0.1, 1000)
+    assert r > theory.corollary2_rate(16, 0.1, 1000, s=16,
+                                      model_packets=16)
+
+
+CHANNEL_SPECS = ["bernoulli:p=0.3", "ge:p_bad=0.6,burst=4,p=0.3",
+                 "hetero:n_pods=4,p_cross=0.4",
+                 "deadline:deadline_ms=4,straggler_frac=0.3",
+                 "trace:lam=8000,prio=0.8"]
+
+
+@pytest.mark.parametrize("spec", CHANNEL_SPECS)
+@pytest.mark.parametrize("s", [3, 8, 20])
+def test_channel_sample_packets_shapes_and_owner_forcing(spec, s):
+    n = 8
+    c = ch.make_channel(spec, n, s=s)
+    state = c.init_state(KEY)
+    own = np.arange(s) % n
+    rs_m, ag_m, _ = c.sample_packets(KEY, state, 5)
+    assert rs_m.shape == (5, n, s) and ag_m.shape == (5, n, s)
+    assert np.asarray(rs_m)[:, own, np.arange(s)].all()
+    assert np.asarray(ag_m)[:, own, np.arange(s)].all()
+
+
+def test_channel_sample_packets_independence_classes():
+    """Per-packet channels draw per-bucket; iteration-correlated channels
+    broadcast one draw (a straggler loses the whole round)."""
+    n, B = 8, 6
+
+    def distinct(spec):
+        c = ch.make_channel(spec, n)
+        rs_m, _, _ = c.sample_packets(KEY, c.init_state(KEY), B)
+        return len({np.asarray(rs_m[b]).tobytes() for b in range(B)})
+
+    assert distinct("bernoulli:p=0.4") > 1
+    assert distinct("hetero:n_pods=4,p_cross=0.5") > 1
+    assert distinct("ge:p_bad=0.5,burst=4,p_gb=0.3") > 1
+    assert distinct("deadline:deadline_ms=4,straggler_frac=0.3") == 1
+    assert distinct("trace:lam=8000,prio=0.8") == 1
+
+
+def test_channel_sample_packets_ge_state_advances_once():
+    c = ch.make_channel("ge:p_bad=1.0,burst=4,p=0.3", 8)
+    s0 = c.init_state(KEY)
+    _, _, s_a = c.sample(KEY, s0)
+    _, _, s_b = c.sample_packets(KEY, s0, 7)
+    np.testing.assert_array_equal(np.asarray(s_a["bad"]),
+                                  np.asarray(s_b["bad"]))
