@@ -67,8 +67,10 @@ def _min_of_batches(f, args, reps, iters):
     return best
 
 
-def bench_global(reps, iters):
-    """Full simulator exchange step, per plan, single device."""
+def bench_global(reps, iters, engine=None):
+    """Full simulator exchange step, per plan, single device. ``engine``
+    forwards the DESIGN §12 knob (None = the path's default "xla";
+    "ring" = the wire-accurate ring-order replay)."""
     import jax
     from repro.core import plan as plan_lib
     from repro.core import rps as rps_lib
@@ -84,7 +86,8 @@ def bench_global(reps, iters):
     out = {}
     for name, plan in plans.items():
         fn = jax.jit(lambda t, k, p=plan: rps_lib.rps_exchange_global(
-            t, k, DROP, N_WORKERS, mode="model", plan=p))
+            t, k, DROP, N_WORKERS, mode="model", plan=p,
+            engine=engine or "xla"))
         out[name] = _min_of_batches(fn, (tree, key), reps, iters) * 1e6
     return out, plans
 
@@ -184,9 +187,9 @@ def speedup_ok(result) -> bool:
                     .values()) > 0.5)
 
 
-def run_bench(smoke=False, out=None):
+def run_bench(smoke=False, out=None, engine=None):
     reps, iters = (3, 6) if smoke else (5, 12)
-    glob_us, plans = bench_global(reps, iters)
+    glob_us, plans = bench_global(reps, iters, engine=engine)
     coll = bench_collective(reps, max(4, iters // 2), smoke)
 
     sched = coll["ms"]
@@ -222,6 +225,7 @@ def run_bench(smoke=False, out=None):
         "simulator_step_speedup_vs_per_leaf": sim_speedup,
         "speedup": headline[1],
         "speedup_plan": headline[0],
+        "engine": engine or "xla",
         "note": ("speedup = collective-schedule round time (the 2 x "
                  f"n_buckets RS+AG rounds the plans lower to), per_leaf "
                  f"vs {headline[0]} — the term a real fabric is bound by "
@@ -244,10 +248,11 @@ def run_bench(smoke=False, out=None):
     return result
 
 
-def run(csv_rows, smoke=True):
+def run(csv_rows, smoke=True, engine=None):
     """benchmarks.run entry: smoke-size by default (the full matrix is the
-    CLI's job)."""
-    res = run_bench(smoke=smoke)
+    CLI's job). ``engine`` A/Bs the §12 exchange engine on the simulator
+    section without code edits (run.py --engine)."""
+    res = run_bench(smoke=smoke, engine=engine)
     print(json.dumps(res, indent=1))
     csv_rows.append(("exchange_schedule_per_leaf",
                      res["collective_schedule_ms"]["per_leaf"] * 1e3,
@@ -266,8 +271,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default="BENCH_exchange.json")
+    ap.add_argument("--engine", default=None,
+                    choices=["auto", "xla", "ring"],
+                    help="exchange engine for the simulator section "
+                         "(DESIGN.md §12)")
     args = ap.parse_args()
-    res = run_bench(smoke=args.smoke, out=args.out)
+    res = run_bench(smoke=args.smoke, out=args.out, engine=args.engine)
     print(json.dumps(res, indent=1))
 
 

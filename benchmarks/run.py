@@ -13,11 +13,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmarks")
+    ap.add_argument("--engine", default=None,
+                    choices=["auto", "xla", "ring"],
+                    help="exchange engine (DESIGN.md §12) for the benches "
+                         "that exchange — exchange/server_sweep/ring — so "
+                         "old benches can A/B the ring path without code "
+                         "edits; default: each bench's own default")
     args = ap.parse_args()
 
     from benchmarks import (alpha, channels_bench, colocation, convergence,
                             exchange_bench, grad_vs_model, kernels_bench,
-                            server_sweep, speedup)
+                            ring_bench, server_sweep, speedup)
     all_benches = {
         "alpha": alpha.run,               # Figs 2/3
         "convergence": convergence.run,   # Fig 4
@@ -28,14 +34,18 @@ def main() -> None:
         "channels": channels_bench.run,   # beyond-paper: non-i.i.d. loss
         "server_sweep": server_sweep.run,  # Cor 2 server-count claim
         "exchange": exchange_bench.run,   # DESIGN §11 bucketed vs per-leaf
+        "ring": ring_bench.run,           # DESIGN §12 ring vs xla engine
     }
+    engine_aware = {"exchange", "server_sweep", "ring"}
     names = list(all_benches) if not args.only else args.only.split(",")
     csv_rows = []
     failed = []
     for name in names:
         print(f"\n===== {name} =====")
         try:
-            all_benches[name](csv_rows)
+            kw = {"engine": args.engine} \
+                if name in engine_aware and args.engine else {}
+            all_benches[name](csv_rows, **kw)
         except Exception as e:
             traceback.print_exc()
             failed.append(name)

@@ -66,8 +66,10 @@ def _mlp():
     return init_fn, loss_fn
 
 
-def sweep(steps: int = 150, seeds: int = 2):
-    """Returns the result dict (also consumed by the CI smoke job)."""
+def sweep(steps: int = 150, seeds: int = 2, engine: str = None):
+    """Returns the result dict (also consumed by the CI smoke job).
+    ``engine`` forwards the DESIGN §12 exchange-arithmetic knob ("ring"
+    replays the ring engine's wire-order sums)."""
     init_fn, loss_fn = _mlp()
     batch_fn = make_worker_streams(TeacherTask(d_in=24, n_classes=8,
                                                hetero=0.3, seed=0), N, 32)
@@ -77,6 +79,7 @@ def sweep(steps: int = 150, seeds: int = 2):
         for seed in range(seeds):
             h = run_simulation(loss_fn, init_fn, batch_fn,
                                SimulatorConfig(n_workers=N, lr=0.2,
+                                               engine=engine or "auto",
                                                warmup=10, steps=steps,
                                                eval_every=steps - 1,
                                                seed=seed, **scfg_kw))
@@ -104,7 +107,7 @@ def sweep(steps: int = 150, seeds: int = 2):
         })
     return {"n": N, "p_packet": P_PACKET, "model_packets": MODEL_PACKETS,
             "steps": steps, "seeds": seeds, "baseline_loss": base,
-            "sweep": rows}
+            "engine": engine or "auto", "sweep": rows}
 
 
 def check(result) -> None:
@@ -127,9 +130,10 @@ def check(result) -> None:
         "expected the s=max gap to collapse well below the s=1 gap"
 
 
-def run(csv_rows, steps: int = 150, seeds: int = 2, out: str = None):
-    """benchmarks.run entry point."""
-    result = sweep(steps=steps, seeds=seeds)
+def run(csv_rows, steps: int = 150, seeds: int = 2, out: str = None,
+        engine: str = None):
+    """benchmarks.run entry point (``engine`` from run.py --engine)."""
+    result = sweep(steps=steps, seeds=seeds, engine=engine)
     print(f"# server sweep at per-packet p={P_PACKET} "
           f"(n={N}, {MODEL_PACKETS} packets/model, rps_model, "
           f"baseline={result['baseline_loss']:.4f})")
@@ -155,10 +159,13 @@ def main():
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--seeds", type=int, default=None)
     ap.add_argument("--out", default=None, help="write the bench JSON here")
+    ap.add_argument("--engine", default=None,
+                    choices=["auto", "xla", "ring"],
+                    help="exchange engine (DESIGN.md §12)")
     args = ap.parse_args()
     steps = args.steps or (80 if args.smoke else 150)
     seeds = args.seeds or (1 if args.smoke else 2)
-    run([], steps=steps, seeds=seeds, out=args.out)
+    run([], steps=steps, seeds=seeds, out=args.out, engine=args.engine)
     print(f"server sweep OK (steps={steps}, seeds={seeds}): "
           "gap to the reliable baseline is non-increasing in s")
 

@@ -73,6 +73,11 @@ class ExchangePlan:
     n_leaves: int
     per_bucket_masks: bool
     treedef: Any = dataclasses.field(hash=False)
+    engine: str = "xla"
+    # the round's lowering (DESIGN.md §12): "xla" = psum_scatter +
+    # all_gather per bucket (the seed schedule, bit-identical default);
+    # "ring" = the fused ring engine (one Pallas dispatch per bucket on
+    # TPU, interpret ppermute ring elsewhere); "auto" = ring on TPU.
 
     # ---- derived ---------------------------------------------------------
     @property
@@ -112,6 +117,7 @@ class ExchangePlan:
         free = sum(b.free * b.m for b in self.buckets)
         return {"n": self.n, "s": self.s, "n_buckets": self.n_buckets,
                 "collectives_per_round": 2 * self.n_buckets,
+                "engine": self.engine,
                 "per_bucket_masks": self.per_bucket_masks,
                 "model_packets": self.model_packets,
                 "payload_bytes": int(sum(
@@ -133,31 +139,43 @@ class ExchangePlan:
                         f"leaf {lid} shape {got} != plan shape {shp} "
                         f"(lead={lead}) — rebuild the plan for this tree")
 
+    def check_leaves(self, tree: Any, lead: int = 0) -> list:
+        """Flatten ``tree`` and validate it against the plan's shapes.
+        Returns the leaf list — the input :meth:`gather_bucket` takes, so
+        a pipelined per-bucket loop flattens/validates exactly once."""
+        leaves = jax.tree.flatten(tree)[0]
+        self._check(leaves, lead)
+        return leaves
+
+    def gather_bucket(self, leaves: Sequence[jax.Array], b: int,
+                      lead: int = 0) -> jax.Array:
+        """Bucket ``b``'s (lead…, s, blk, m) block table from a
+        :meth:`check_leaves` leaf list. Coalesced buckets promote members
+        to the bucket dtype exactly like ``ravel_pytree`` does."""
+        bk = self.buckets[b]
+        lshape = tuple(leaves[bk.leaf_ids[0]].shape[:lead])
+        if bk.model_dim is not None:
+            x = jnp.moveaxis(leaves[bk.leaf_ids[0]], lead + bk.model_dim,
+                             -1)
+            seg = x.reshape(lshape + (bk.free, bk.m))
+        else:
+            parts = [leaves[i].reshape(lshape + (-1,)).astype(bk.dtype)
+                     for i in bk.leaf_ids]
+            seg = parts[0] if len(parts) == 1 \
+                else jnp.concatenate(parts, axis=lead)
+            seg = seg[..., None]
+        if bk.pad:
+            seg = jnp.pad(seg, ((0, 0),) * lead
+                          + ((0, bk.pad), (0, 0)))
+        return seg.reshape(lshape + (self.s, bk.blk, bk.m))
+
     def gather(self, tree: Any, lead: int = 0) -> list:
         """Tree -> list of (lead…, s, blk, m) block tables, one per bucket.
         ``lead`` leading dims (e.g. the stacked worker dim of the global
-        path) are preserved. Coalesced buckets promote members to the
-        bucket dtype exactly like ``ravel_pytree`` does."""
-        leaves = jax.tree.flatten(tree)[0]
-        self._check(leaves, lead)
-        tables = []
-        for b in self.buckets:
-            lshape = tuple(leaves[b.leaf_ids[0]].shape[:lead])
-            if b.model_dim is not None:
-                x = jnp.moveaxis(leaves[b.leaf_ids[0]], lead + b.model_dim,
-                                 -1)
-                seg = x.reshape(lshape + (b.free, b.m))
-            else:
-                parts = [leaves[i].reshape(lshape + (-1,)).astype(b.dtype)
-                         for i in b.leaf_ids]
-                seg = parts[0] if len(parts) == 1 \
-                    else jnp.concatenate(parts, axis=lead)
-                seg = seg[..., None]
-            if b.pad:
-                seg = jnp.pad(seg, ((0, 0),) * lead
-                              + ((0, b.pad), (0, 0)))
-            tables.append(seg.reshape(lshape + (self.s, b.blk, b.m)))
-        return tables
+        path) are preserved."""
+        leaves = self.check_leaves(tree, lead)
+        return [self.gather_bucket(leaves, b, lead)
+                for b in range(self.n_buckets)]
 
     def scatter(self, tables: Sequence[jax.Array], lead: int = 0) -> Any:
         """Inverse of :meth:`gather`: block tables back to the pytree
@@ -229,7 +247,8 @@ def make_plan(tree: Any, n: int, s: Optional[int] = None, *,
               bucket_bytes: Optional[float] = None,
               n_buckets: Optional[int] = None,
               model_dims: Any = None,
-              per_bucket_masks: Optional[bool] = None) -> ExchangePlan:
+              per_bucket_masks: Optional[bool] = None,
+              engine: str = "xla") -> ExchangePlan:
     """Build an :class:`ExchangePlan` for ``tree`` (arrays or
     ShapeDtypeStructs — only shapes/dtypes are read).
 
@@ -243,6 +262,10 @@ def make_plan(tree: Any, n: int, s: Optional[int] = None, *,
     ``per_bucket_masks`` defaults to True exactly when a bucketing knob is
     given: fixed-byte buckets are wire packets and draw independent masks;
     the degenerate plans keep the legacy one-draw-per-round semantics.
+
+    ``engine`` picks the round's lowering (DESIGN.md §12): "xla" (the
+    seed two-collectives-per-bucket schedule, bit-identical default),
+    "ring" (the fused ring engine) or "auto" (ring on TPU).
     """
     if n < 1:
         raise ValueError(f"need n >= 1 workers, got {n}")
@@ -307,35 +330,38 @@ def make_plan(tree: Any, n: int, s: Optional[int] = None, *,
     return ExchangePlan(n=int(n), s=s, buckets=tuple(buckets),
                         n_leaves=len(leaves),
                         per_bucket_masks=bool(per_bucket_masks),
-                        treedef=treedef)
+                        treedef=treedef, engine=str(engine))
 
 
 def plan_from_config(tree: Any, n: int, s: Optional[int] = None, *,
                      bucket_mb: Optional[float] = None,
                      n_buckets: Optional[int] = None,
-                     model_dims: Any = None) -> ExchangePlan:
+                     model_dims: Any = None,
+                     engine: str = "xla") -> ExchangePlan:
     """The config-knob → plan policy shared by the trainer and the
     simulator: ``bucket_mb`` MiB fixed-byte coalescing / ``n_buckets``
     size-balanced groups (packetised, per-bucket masks), both unset → the
-    per-leaf legacy plan, bit-identical to the seed lowering."""
+    per-leaf legacy plan, bit-identical to the seed lowering. ``engine``
+    threads the §12 lowering knob into the plan."""
     if bucket_mb is not None or n_buckets is not None:
         return make_plan(tree, n, s,
                          bucket_bytes=(bucket_mb * 2 ** 20
                                        if bucket_mb is not None else None),
-                         n_buckets=n_buckets, model_dims=model_dims)
-    return per_leaf_plan(tree, n, s)
+                         n_buckets=n_buckets, model_dims=model_dims,
+                         engine=engine)
+    return per_leaf_plan(tree, n, s, engine=engine)
 
 
-def single_bucket_plan(tree: Any, n: int,
-                       s: Optional[int] = None) -> ExchangePlan:
+def single_bucket_plan(tree: Any, n: int, s: Optional[int] = None, *,
+                       engine: str = "xla") -> ExchangePlan:
     """The legacy ``rps_exchange`` layout: every leaf ravelled into one
     flat bucket (same member order and dtype promotion as
     ``ravel_pytree``), one shared mask draw — bit-identical to the seed."""
-    return make_plan(tree, n, s)
+    return make_plan(tree, n, s, engine=engine)
 
 
-def per_leaf_plan(tree: Any, n: int,
-                  s: Optional[int] = None) -> ExchangePlan:
+def per_leaf_plan(tree: Any, n: int, s: Optional[int] = None, *,
+                  engine: str = "xla") -> ExchangePlan:
     """The legacy trainer/simulator layout: one bucket per leaf (each leaf
     fully flattened — no model-dim special-casing, exactly the seed's
     per-leaf ``rps_exchange_flat`` tree-map), one shared mask draw."""
@@ -350,4 +376,4 @@ def per_leaf_plan(tree: Any, n: int,
                     for i in range(len(leaves)))
     return ExchangePlan(n=int(n), s=s, buckets=buckets,
                         n_leaves=len(leaves), per_bucket_masks=False,
-                        treedef=treedef)
+                        treedef=treedef, engine=str(engine))

@@ -28,13 +28,23 @@ bit-identically — owner j is then the j-th device on the RPS axes (the
 paper's random owner assignment is symmetric across blocks — validated
 against the permuted W-matrix oracle in tests).
 
-Since DESIGN.md §11 there is exactly **one** RS+AG engine:
+Since DESIGN.md §11 there is exactly **one** RS+AG engine entry:
 :func:`_exchange_table` runs the drop-masked round on an ``(s, blk[, m])``
 block table, and every public entry point — :func:`rps_exchange_flat` (one
 flat vector), :func:`rps_exchange_leaf` (partial-manual per-leaf),
 :func:`rps_exchange_plan` (bucketed collective pytree path) and
 :func:`rps_exchange_global` (stacked single-device view) — is a thin
 executor of an :class:`repro.core.plan.ExchangePlan` layout over it.
+
+Since DESIGN.md §12 the *lowering* of that round is pluggable
+(``engine=``): "xla" keeps the two opaque collectives per bucket
+(psum_scatter + all_gather, the seed lowering, bit-identical default);
+"ring" executes the same round as an explicit bi-phase ring schedule
+(:mod:`repro.kernels.rps_ring`) — one fused Pallas dispatch per bucket on
+TPU (n−1 ``make_async_remote_copy`` hops per phase, double-buffered, with
+in-kernel mask gating / renormalisation / AG-select and a donated table),
+and the bit-exact ``lax.ppermute`` interpret ring everywhere else.
+"auto" picks ring on TPU, xla elsewhere.
 """
 from __future__ import annotations
 
@@ -72,8 +82,8 @@ def axis_size(axis_name: AxisNames) -> int:
 def _my_index(axis_name: AxisNames) -> jax.Array:
     names = _axis_tuple(axis_name)
     idx = lax.axis_index(names[0])
-    for a in names[1:]:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    for a in names[1:]:       # _one_axis_size: jax<0.5 axis_size compat
+        idx = idx * _one_axis_size(a) + lax.axis_index(a)
     return idx
 
 
@@ -176,24 +186,45 @@ def _masks_to_scatter(rs: jax.Array, ag: jax.Array, S: int, order):
 
 
 # ---------------------------------------------------------------------------
-# The one collective RS+AG engine (DESIGN.md §11)
+# The one collective RS+AG engine (DESIGN.md §11); two lowerings (§12)
 # ---------------------------------------------------------------------------
+
+ENGINES = ("auto", "xla", "ring")
+
+
+def resolve_engine(engine: Optional[str]) -> str:
+    """"auto" (and None) → the fused ring engine on TPU, the XLA
+    collective pair elsewhere. Static — resolved at trace time."""
+    if engine is None or engine == "auto":
+        return "ring" if jax.default_backend() == "tpu" else "xla"
+    if engine not in ("xla", "ring"):
+        raise ValueError(f"engine={engine!r}, want one of {ENGINES}")
+    return engine
+
 
 def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
                     names: Tuple[str, ...], n: int, i: jax.Array,
                     mode: str, rs_dtype=jnp.float32,
-                    pin: Optional[Callable] = None) -> jax.Array:
+                    pin: Optional[Callable] = None,
+                    engine: str = "xla", ring_ids=None) -> jax.Array:
     """One drop-masked RS+AG round on an ``(s, blk[, m])`` block table
     inside a shard_map region over ``names`` (the RPS axes).
 
-    This is the single engine every exchange path executes: pad the table
-    to the owner-major scatter layout, one tiled ``psum_scatter`` with the
-    RS mask applied sender-side, local renormalisation by the received
-    count, one tiled ``all_gather``, and the AG-mask select. ``pin`` is an
-    optional per-intermediate sharding hook (the partial-manual per-leaf
-    path pins its TP dim); identity when None. Exactly two collectives per
-    call, regardless of how many pytree leaves the table coalesces.
+    This is the single engine entry every exchange path executes: pad the
+    table to the owner-major scatter layout, run the round under the
+    chosen ``engine`` lowering — "xla": one tiled ``psum_scatter`` with
+    the RS mask applied sender-side, local renormalisation by the
+    received count, one tiled ``all_gather`` and the AG-mask select
+    (exactly two collectives per call); "ring": the DESIGN §12 ring
+    schedule (one fused Pallas dispatch per bucket on TPU, the bit-exact
+    interpret ppermute ring elsewhere); "auto"/None resolves per backend
+    — and crop back to block order. ``pin`` is an optional
+    per-intermediate sharding hook (the partial-manual per-leaf path pins
+    its TP dim); identity when None. ``ring_ids`` forwards precomputed
+    ring-neighbour logical device ids (``rps_ring.logical_ring_ids``) for
+    the TPU kernel on meshes with non-RPS axes.
     """
+    raw_pin = pin      # None = fully-manual region (the fused-kernel gate)
     if pin is None:
         def pin(x):
             return x
@@ -208,6 +239,19 @@ def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
     if order is not None:                   # owner-major scatter order
         blocks = blocks[order]
     blocks = pin(blocks)
+
+    if resolve_engine(engine) == "ring":
+        from repro.kernels import rps_ring
+        # forward the RAW pin: rps_ring keys "fused kernel vs ppermute
+        # ring" on pin is None (a pin marks a partial-manual region the
+        # Pallas dispatch cannot serve) — the normalised identity above
+        # would make the fused TPU path unreachable
+        out = rps_ring.ring_exchange_scatter_table(
+            blocks, rs_sc, ag_sc, names=names, n=n, i=i, k=k, mode=mode,
+            rs_dtype=rs_dtype, pin=raw_pin, ring_ids=ring_ids)
+        if inv is not None:
+            out = out[inv]                        # back to block order
+        return pin(out[:s])
     rs_f = rs_sc.astype(rs_dtype)
 
     # ---- Reduce-Scatter with send-side drops --------------------------
@@ -272,7 +316,8 @@ def _resolve_masks(key, n: int, p: float, plan: plan_lib.ExchangePlan,
 def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
                       axis_name: AxisNames, *, mode: str = "model",
                       masks=None, rs_dtype=jnp.float32,
-                      s: Optional[int] = None):
+                      s: Optional[int] = None, engine: str = "xla",
+                      ring_ids=None):
     """One RPS round on a flat per-device vector v: (D,) -> (D,).
 
     mode:
@@ -289,6 +334,10 @@ def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
     pad the block table to k·n dummy-extended blocks in owner-major order
     so the schedule is still one psum_scatter + one all_gather.
 
+    ``engine`` — the round's lowering (DESIGN.md §12): "xla" (default,
+    two collectives, bit-identical to the seed), "ring" (fused Pallas
+    dispatch on TPU / interpret ppermute ring elsewhere), or "auto".
+
     Returns the exchanged vector (for "grad" modes: the per-block gradient
     each worker should apply).
     """
@@ -303,7 +352,8 @@ def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
     blk = (D + pad) // s
     vp = jnp.pad(v, (0, pad)) if pad else v
     out = _exchange_table(vp.reshape(s, blk), rs, ag, names=names, n=n,
-                          i=i, mode=mode, rs_dtype=rs_dtype)
+                          i=i, mode=mode, rs_dtype=rs_dtype,
+                          engine=engine, ring_ids=ring_ids)
     out = out.reshape(-1)
     return out[:D] if pad else out
 
@@ -311,29 +361,34 @@ def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
 def rps_exchange(tree: Any, key: jax.Array, p: float,
                  axis_name: AxisNames, *, mode: str = "model",
                  masks=None, rs_dtype=jnp.float32,
-                 s: Optional[int] = None) -> Any:
+                 s: Optional[int] = None, engine: str = "xla",
+                 ring_ids=None) -> Any:
     """Pytree wrapper around :func:`rps_exchange_flat` — semantically the
     single-bucket plan (``plan.single_bucket_plan``): the whole tree is
     one ``ravel_pytree`` buffer, exchanged in one RS+AG round.
 
     Forwards ``rs_dtype`` (the seed version silently dropped it, so bf16 RS
-    accumulation was unreachable from the pytree API) and the server-block
-    count ``s``.
+    accumulation was unreachable from the pytree API), the server-block
+    count ``s`` and the ``engine`` knob.
     """
     flat, unravel = ravel_pytree(tree)
     return unravel(rps_exchange_flat(flat, key, p, axis_name, mode=mode,
-                                     masks=masks, rs_dtype=rs_dtype, s=s))
+                                     masks=masks, rs_dtype=rs_dtype, s=s,
+                                     engine=engine, ring_ids=ring_ids))
 
 
 def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
                       axis_name: AxisNames, *,
                       plan: plan_lib.ExchangePlan, mode: str = "model",
                       masks=None, rs_dtype=jnp.float32,
-                      pin: Optional[Callable] = None) -> Any:
+                      pin: Optional[Callable] = None,
+                      engine: Optional[str] = None,
+                      ring_ids=None) -> Any:
     """Bucketed collective exchange of a (worker-local) pytree inside a
     shard_map region: exactly ``2 × plan.n_buckets`` collectives per round
-    (one psum_scatter + one all_gather per bucket), however many leaves
-    the tree has.
+    on the "xla" engine (one psum_scatter + one all_gather per bucket),
+    one fused ring dispatch per bucket on the TPU "ring" engine —
+    however many leaves the tree has.
 
     ``plan`` is an :class:`repro.core.plan.ExchangePlan` built **once at
     setup** from this tree's (local) shapes. ``masks`` accepts the legacy
@@ -341,21 +396,34 @@ def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
     default draw follows ``plan.per_bucket_masks``. A
     ``per_leaf_plan`` reproduces the seed per-leaf tree-map of
     :func:`rps_exchange_flat` bit-identically; a ``single_bucket_plan``
-    reproduces :func:`rps_exchange`.
+    reproduces :func:`rps_exchange`. ``engine=None`` defers to
+    ``plan.engine``.
+
+    The per-bucket loop is software-pipelined: bucket b+1's table
+    gather/blockify is emitted *before* bucket b's collective, so the
+    scheduler can overlap the reshape/concat work with the in-flight
+    round and at most two bucket tables are live at once (the all-up-
+    front gather kept every table alive across the whole round).
     """
     names = _axis_tuple(axis_name)
     n = axis_size(axis_name)
     if plan.n != n:
         raise ValueError(f"plan built for n={plan.n}, axes give n={n}")
     i = _my_index(axis_name)
+    engine = plan.engine if engine is None else engine
     rs, ag = _resolve_masks(key, n, p, plan, masks)
-    tables = plan.gather(tree)
+    leaves = plan.check_leaves(tree)
     outs = []
-    for b, tbl in enumerate(tables):
+    tbl = plan.gather_bucket(leaves, 0)
+    for b in range(plan.n_buckets):
+        nxt = plan.gather_bucket(leaves, b + 1) \
+            if b + 1 < plan.n_buckets else None   # prefetch next bucket
         rs_b, ag_b = _bucket_masks(rs, ag, b)
         outs.append(_exchange_table(tbl, rs_b, ag_b, names=names, n=n,
                                     i=i, mode=mode, rs_dtype=rs_dtype,
-                                    pin=pin))
+                                    pin=pin, engine=engine,
+                                    ring_ids=ring_ids))
+        tbl = nxt
     return plan.scatter(outs)
 
 
@@ -389,7 +457,8 @@ def _blockify(x: jax.Array, s: int, model_dim: Optional[int]):
 
 def rps_exchange_leaf(x: jax.Array, rs: jax.Array, ag: jax.Array,
                       axis_name: AxisNames, *, mode: str,
-                      model_dim: Optional[int] = None) -> jax.Array:
+                      model_dim: Optional[int] = None,
+                      engine: str = "xla") -> jax.Array:
     """Per-leaf RS+AG exchange inside a partial-manual shard_map region.
 
     `model_dim` marks a dim that stays auto-sharded (tensor-parallel): it is
@@ -398,6 +467,10 @@ def rps_exchange_leaf(x: jax.Array, rs: jax.Array, ag: jax.Array,
     shape; s == n is the paper's square layout) — reusing the same column j
     for the j-th block of *every* leaf is exactly the paper's partition where
     block j is the union of all leaves' j-th blocks.
+
+    ``engine="ring"`` here always runs the ppermute ring (the ``pin``
+    hook marks a partial-manual region whose auto-sharded TP dim the
+    fused Pallas dispatch cannot see — ``rps_ring`` falls back).
     """
     from jax.sharding import PartitionSpec as _P
     names = _axis_tuple(axis_name)
@@ -418,7 +491,8 @@ def rps_exchange_leaf(x: jax.Array, rs: jax.Array, ag: jax.Array,
     # Reduce-Scatter accumulates in f32: the renormalised mean should not
     # round per-addend (see _exchange_table).
     out = _exchange_table(blocks, rs, ag, names=names, n=n, i=i,
-                          mode=mode, rs_dtype=jnp.float32, pin=pin)
+                          mode=mode, rs_dtype=jnp.float32, pin=pin,
+                          engine=engine)
     return restore(out)
 
 
@@ -449,8 +523,9 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
                         mode: str = "model", masks=None,
                         backend: str = "auto",
                         s: Optional[int] = None,
-                        plan: Optional[plan_lib.ExchangePlan] = None
-                        ) -> Any:
+                        plan: Optional[plan_lib.ExchangePlan] = None,
+                        engine: str = "xla",
+                        rs_dtype=jnp.float32) -> Any:
     """Global-view exchange on *stacked* worker trees (leading dim n).
 
     Mathematically identical to the collective path (same masks, same block
@@ -477,6 +552,21 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
     ``backend``: "jnp" (einsum), "pallas" (the fused
     ``kernels.masked_avg_grid_pallas`` renormalised block average,
     interpreted off-TPU), or "auto" (pallas on TPU, jnp elsewhere).
+
+    ``engine``: "xla" (default) sums contributions the XLA way (one
+    einsum / one masked_avg dispatch per group, f32 accumulation —
+    bit-identical to the seed); "ring" replays the §12 ring engine's
+    arithmetic — contributions added **in ring order in the wire dtype**
+    ``rs_dtype`` (``kernels.rps_ring.ring_global_sums``) — so the
+    single-device simulator can study bf16-wire convergence without a
+    TPU. "auto" = "xla" (this path runs no collectives, so there is
+    nothing to fuse).
+
+    Memory: the whole path computes in the group's native dtype where
+    exact — no full-stack f32 copy — and the AG fallback is the input
+    stack itself (model/renorm) or a mask *multiply* (grad), so no
+    same-shape fallback buffer is ever materialised
+    (tests/test_ring.py pins the compiled temp bytes).
     """
     if plan is None:
         per_worker = jax.tree.map(
@@ -489,11 +579,18 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
     renorm = mode in ("model", "grad_renorm")
     if mode not in ("model", "grad", "grad_renorm"):
         raise ValueError(mode)
+    if engine in (None, "auto"):
+        engine = "xla"
+    elif engine not in ("xla", "ring"):
+        raise ValueError(f"engine={engine!r}")
     backend = _resolve_global_backend(backend)
-    use_pallas = backend == "pallas" and renorm
+    use_pallas = backend == "pallas" and renorm and engine == "xla"
     if use_pallas:
         from repro.kernels.masked_avg import masked_avg_grid_pallas
         interp = jax.default_backend() != "tpu"
+    if engine == "ring":
+        from repro.kernels.rps_ring import ring_global_sums
+        own = owners(n, s)
 
     tables = plan.gather(tree, lead=1)        # each (n, s, blk, m)
     outs: list = [None] * len(tables)
@@ -501,25 +598,42 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
         G = len(idxs)
         d = blk * m
         stack = jnp.stack([tables[j].reshape(n, s, d) for j in idxs])
-        f32 = stack.astype(jnp.float32)       # (G, n, s, d)
         if rs.ndim == 3:
             rs_g = jnp.stack([rs[j] for j in idxs]).astype(jnp.float32)
             ag_g = jnp.stack([ag[j] for j in idxs])
         else:
             rs_g = jnp.broadcast_to(rs.astype(jnp.float32), (G, n, s))
             ag_g = jnp.broadcast_to(ag, (G, n, s))
-        counts = jnp.maximum(rs_g.sum(1), 1.0)            # (G, s)
-        if use_pallas:
-            blocks_k = f32.transpose(0, 2, 1, 3).reshape(G * s, n, d)
+        if engine == "ring":                  # wire-dtype ring-order sums
+            sums = ring_global_sums(stack, rs_g, own, rs_dtype=rs_dtype)
+            counts = jnp.sum(rs_g, axis=1).astype(rs_dtype)     # (G, s)
+            tilde = sums / jnp.maximum(counts[..., None], 1.0) \
+                if renorm else sums / float(n)
+        elif use_pallas:
+            # the kernel casts per-VMEM-tile internally: no (G,n,s,d)
+            # f32 copy of the stack is ever materialised
+            blocks_k = stack.transpose(0, 2, 1, 3).reshape(G * s, n, d)
             mask_k = rs_g.transpose(0, 2, 1).reshape(G * s, n)
             tilde = masked_avg_grid_pallas(
-                blocks_k, mask_k, tile_d=min(512, d),
-                interpret=interp).reshape(G, s, d)
+                blocks_k, mask_k, interpret=interp).reshape(G, s, d)
         else:
-            sums = jnp.einsum("gij,gijd->gjd", rs_g, f32)
+            # the contraction runs on the *native*-dtype stack with f32
+            # accumulation (preferred_element_type): a 0/1 mask is exact
+            # in any float dtype and bf16→f32 products are exact, so the
+            # sums are bit-identical to the old promote-then-einsum — but
+            # no full-stack f32 copy is ever materialised
+            sums = jnp.einsum("gij,gijd->gjd", rs_g.astype(stack.dtype),
+                              stack, preferred_element_type=jnp.float32)
+            counts = jnp.maximum(rs_g.sum(1), 1.0)              # (G, s)
             tilde = sums / counts[..., None] if renorm else sums / float(n)
-        fallback = f32 if renorm else jnp.zeros_like(f32)
-        out = jnp.where(ag_g[..., None], tilde[:, None], fallback)
+        gathered = tilde.astype(stack.dtype)[:, None]  # AG moves payload
+        if renorm:
+            # the AG fallback *is* the input stack — no f32 copy of it
+            out = jnp.where(ag_g[..., None], gathered, stack)
+        else:
+            # grad mode: a dropped block means no update — multiply by
+            # the mask instead of materialising a zeros fallback
+            out = gathered * ag_g[..., None].astype(stack.dtype)
         for pos, j in enumerate(idxs):
             outs[j] = out[pos].reshape(n, s, blk, m)
     return plan.scatter(outs, lead=1)

@@ -1,0 +1,429 @@
+"""Fused drop-masked ring RS+AG: one Pallas dispatch per bucket (DESIGN §12).
+
+The XLA engine (``core.rps._exchange_table``, engine="xla") lowers every
+bucket's round as two opaque collectives — ``psum_scatter`` then
+``all_gather`` — so the drop-mask multiply, the renormalisation and the
+AG-select each run as separate memory-bound passes and nothing overlaps
+communication with compute. This module is the "ring" engine: the same
+drop-masked RS+AG round executed as an explicit bi-phase ring schedule,
+
+  RS phase   n−1 ring hops; the partial sum for server chunk c travels
+             c+1 → c+2 → … → c, each host adding its own *rs-mask-gated*
+             contribution in the wire dtype (``rs_dtype`` — bf16 halves
+             the RS bytes);
+  turnaround the owner renormalises its chunk by the received count
+             (computable locally — the mask is known everywhere);
+  AG phase   n−1 ring hops broadcasting the averaged chunks; each chunk
+             is AG-mask-selected against the local block as it lands, so
+             the fallback copy never materialises.
+
+Two implementations share that schedule *step for step* (same adds in the
+same order, so they agree bitwise whenever the sums are exact):
+
+  - :func:`ring_exchange_scatter_table` with ``use_kernel=False`` — the
+    **interpret-mode ring**: ``lax.ppermute`` transport + jnp compute.
+    This is the engine every CPU test and the parity matrix runs; it is
+    bit-identical to the XLA engine on exactly-summable data
+    (tests/test_ring.py) and within accumulation-order ULPs otherwise.
+  - :func:`ring_bucket_fused` — the TPU Pallas kernel: ONE ``pallas_call``
+    per bucket for the whole round. The n−1 hops per phase are
+    ``pltpu.make_async_remote_copy`` RDMAs, double-buffered over two comm
+    slots so hop t's DMA overlaps the masked accumulate of hop t−1's
+    payload; capacity handshakes (REGULAR semaphores signalled to the
+    left neighbour) keep a sender from overwriting a slot the receiver
+    has not drained. The bucket table is donated into the output
+    (``input_output_aliases``), so the dispatch is in-place.
+
+The kernel cannot execute on this repo's CPU CI, but its Mosaic lowering
+is validated from any host via ``jax.export`` with ``platforms=("tpu",)``
+— tests/test_ring.py asserts the exported module carries exactly **one**
+``tpu_custom_call`` per bucket (the ISSUE's fused-dispatch claim) through
+``tools/check_hlo.py``.
+
+Layout contract (identical to the XLA engine): the table arrives in
+owner-major scatter order — S = k·n rows, device i owning rows
+[i·k, (i+1)·k) — with masks already padded/permuted by
+``core.rps._masks_to_scatter``. Everything here happens *inside* that
+layout; ``_exchange_table`` owns the pad/permute/crop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+LANE = 128          # TPU lane width: trailing dim of the comm buffers
+
+
+def _axis_arg(names: Tuple[str, ...]):
+    return names if len(names) > 1 else names[0]
+
+
+# ---------------------------------------------------------------------------
+# Interpret-mode ring: lax.ppermute transport + jnp compute
+# ---------------------------------------------------------------------------
+
+def _ring_schedule_jax(blocks: jax.Array, rs_sc: jax.Array, ag_sc: jax.Array,
+                       *, names: Tuple[str, ...], n: int, i: jax.Array,
+                       k: int, mode: str, rs_dtype,
+                       pin: Optional[Callable] = None) -> jax.Array:
+    """The ring schedule at the JAX level — the interpret-mode engine.
+
+    blocks: (S, blk[, m]) scatter-ordered local table (S = k·n);
+    rs_sc/ag_sc: (n, S) scatter-ordered masks. Mirrors the Pallas kernel
+    hop for hop: chunk c's partial is initiated by device c+1 and
+    accumulates contributions in ring order c+1, c+2, …, c (owner last),
+    all in the wire dtype ``rs_dtype``.
+    """
+    if pin is None:
+        def pin(x):
+            return x
+    trail = blocks.ndim - 1
+    wide = (slice(None),) + (None,) * trail
+    axis = _axis_arg(names)
+    perm = [(j, (j + 1) % n) for j in range(n)]
+    rs_i = rs_sc.astype(rs_dtype)[i]                       # (S,) my row
+
+    def contrib(c):
+        b = lax.dynamic_slice_in_dim(blocks, c * k, k, 0).astype(rs_dtype)
+        m = lax.dynamic_slice_in_dim(rs_i, c * k, k, 0)
+        return b * m[wide]
+
+    # ---- RS phase: n−1 hops of masked partial sums (wire dtype) ----------
+    acc = pin(contrib(jnp.mod(i - 1, n)))
+    for t in range(n - 1):
+        acc = pin(lax.ppermute(acc, axis, perm))
+        acc = pin(acc + contrib(jnp.mod(i - 2 - t, n)))
+
+    # ---- turnaround: owner renormalises by the received count ------------
+    counts = jnp.sum(rs_sc.astype(jnp.float32), axis=0)    # (S,)
+    my_counts = lax.dynamic_slice_in_dim(counts, i * k, k).astype(rs_dtype)
+    if mode == "model" or mode == "grad_renorm":
+        tilde = acc / jnp.maximum(my_counts[wide], 1.0)
+    elif mode == "grad":
+        tilde = acc / float(n)
+    else:
+        raise ValueError(mode)
+
+    # ---- AG phase: n−1 hops broadcasting the averaged chunks -------------
+    cur = pin(tilde.astype(blocks.dtype))                  # AG moves payload
+    gathered = lax.dynamic_update_slice_in_dim(
+        jnp.zeros_like(blocks), cur, i * k, 0)
+    for t in range(n - 1):
+        cur = pin(lax.ppermute(cur, axis, perm))
+        gathered = lax.dynamic_update_slice_in_dim(
+            gathered, cur, jnp.mod(i - 1 - t, n) * k, 0)
+
+    recv = ag_sc[i][wide]
+    if mode == "model" or mode == "grad_renorm":
+        return pin(jnp.where(recv, gathered, blocks))      # keep local block
+    return pin(jnp.where(recv, gathered, jnp.zeros_like(blocks)))
+
+
+# ---------------------------------------------------------------------------
+# The fused TPU kernel: one pallas_call per bucket
+# ---------------------------------------------------------------------------
+
+def _drain_steps(n: int):
+    """Steps whose send-DMAs / capacity signals are still outstanding when
+    the n−1-hop loop exits: the last min(2, n−1) steps."""
+    return range(max(0, n - 3), n - 1)
+
+
+def _make_ring_kernel(*, n: int, k: int, W: int, mode: str, rs_dtype,
+                      payload_dtype):
+    """Kernel factory. Scalars (SMEM): my ring position and the *logical*
+    device ids of the left/right ring neighbours (precomputed by the
+    caller — inside a shard_map the kernel itself cannot know the full
+    mesh). VMEM operands: the (S, W) table, my rs row and the ag row as
+    (S, 1) columns, and the (S, 1) received counts."""
+    import jax.experimental.pallas.tpu as pltpu
+    from jax.experimental import pallas as pl
+
+    renorm = mode in ("model", "grad_renorm")
+
+    def kernel(pos_ref, left_ref, right_ref, table_ref, rs_ref, ag_ref,
+               cnt_ref, out_ref,
+               acc, send_buf, recv_buf, ag_send, ag_recv,
+               send_sem, recv_sem, ag_send_sem, ag_recv_sem,
+               cap_sem, ag_cap_sem):
+        i = pos_ref[0]
+        left, right = left_ref[0], right_ref[0]
+
+        # Neighbour barrier: nobody RDMAs into a peer that has not entered
+        # the kernel yet (the collective_id barrier semaphore).
+        barrier = pltpu.get_barrier_semaphore()
+        for nb in (left, right):
+            pltpu.semaphore_signal(barrier, inc=1, device_id=nb,
+                                   device_id_type=pltpu.DeviceIdType.LOGICAL)
+        pltpu.semaphore_wait(barrier, 2)
+
+        def contrib(c):
+            rows = pl.ds(c * k, k)
+            blk = table_ref[rows, :].astype(rs_dtype)          # (k, W)
+            m = rs_ref[rows, :].astype(rs_dtype)               # (k, 1)
+            return blk * m
+
+        # ---- RS phase --------------------------------------------------
+        acc[...] = contrib(lax.rem(i + n - 1, n))
+        rs_dmas = []
+        for t in range(n - 1):
+            slot = t % 2
+            if t >= 2:
+                rs_dmas[t - 2].wait_send()       # send_buf[slot] reusable
+                # right neighbour drained its recv_buf[slot] two hops ago
+                pltpu.semaphore_wait(cap_sem.at[slot], 1)
+            send_buf[slot] = acc[...]
+            dma = pltpu.make_async_remote_copy(
+                src_ref=send_buf.at[slot], dst_ref=recv_buf.at[slot],
+                send_sem=send_sem.at[slot], recv_sem=recv_sem.at[slot],
+                device_id=right,
+                device_id_type=pltpu.DeviceIdType.LOGICAL)
+            dma.start()
+            rs_dmas.append(dma)
+            # overlap: while the partial flies, build our own gated
+            # contribution for the chunk about to land
+            ctr = contrib(lax.rem(i + 2 * n - 2 - t, n))
+            dma.wait_recv()
+            acc[...] = recv_buf[slot] + ctr
+            pltpu.semaphore_signal(
+                cap_sem.at[slot], inc=1, device_id=left,
+                device_id_type=pltpu.DeviceIdType.LOGICAL)
+        for t in _drain_steps(n):
+            rs_dmas[t].wait_send()
+            pltpu.semaphore_wait(cap_sem.at[t % 2], 1)
+
+        # ---- turnaround: in-kernel renormalisation ---------------------
+        my_cnt = cnt_ref[pl.ds(i * k, k), :]                  # (k, 1)
+        if renorm:
+            tilde = acc[...] / jnp.maximum(my_cnt, 1.0)
+        else:
+            tilde = acc[...] / float(n)
+        mine = tilde.astype(payload_dtype)                    # (k, W)
+
+        # ---- AG phase: select-as-it-lands ------------------------------
+        def place(c, val):
+            rows = pl.ds(c * k, k)
+            keep = ag_ref[rows, :] != 0                       # (k, 1)
+            if renorm:
+                fb = table_ref[rows, :]                       # local block
+            else:
+                fb = jnp.zeros_like(val)
+            out_ref[rows, :] = jnp.where(keep, val, fb)
+
+        place(i, mine)
+        cur = mine
+        ag_dmas = []
+        for t in range(n - 1):
+            slot = t % 2
+            if t >= 2:
+                ag_dmas[t - 2].wait_send()
+                pltpu.semaphore_wait(ag_cap_sem.at[slot], 1)
+            ag_send[slot] = cur
+            dma = pltpu.make_async_remote_copy(
+                src_ref=ag_send.at[slot], dst_ref=ag_recv.at[slot],
+                send_sem=ag_send_sem.at[slot], recv_sem=ag_recv_sem.at[slot],
+                device_id=right,
+                device_id_type=pltpu.DeviceIdType.LOGICAL)
+            dma.start()
+            ag_dmas.append(dma)
+            dma.wait_recv()
+            cur = ag_recv[slot]
+            place(lax.rem(i + 2 * n - 1 - t, n), cur)
+            pltpu.semaphore_signal(
+                ag_cap_sem.at[slot], inc=1, device_id=left,
+                device_id_type=pltpu.DeviceIdType.LOGICAL)
+        for t in _drain_steps(n):
+            ag_dmas[t].wait_send()
+            pltpu.semaphore_wait(ag_cap_sem.at[t % 2], 1)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k", "mode", "rs_dtype",
+                                             "collective_id", "interpret"))
+def ring_bucket_fused(table: jax.Array, rs_row: jax.Array, ag_row: jax.Array,
+                      counts: jax.Array, pos: jax.Array, left: jax.Array,
+                      right: jax.Array, *, n: int, k: int, mode: str,
+                      rs_dtype=jnp.float32, collective_id: int = 7,
+                      interpret: bool = False) -> jax.Array:
+    """One bucket's full drop-masked RS+AG round as a single Pallas
+    dispatch (TPU only; the lowering is export-checked on any host).
+
+    table:  (S, W) local payload, scatter-ordered, W a multiple of 128;
+    rs_row: (S, 1) this device's RS-mask row in the wire dtype;
+    ag_row: (S, 1) this device's AG-mask row (nonzero = delivered);
+    counts: (S, 1) per-block received counts, wire dtype;
+    pos/left/right: (1,) int32 — ring position and the *logical* device
+    ids of the ring neighbours (see :func:`logical_ring_ids`).
+
+    The table is donated into the output (``input_output_aliases``): the
+    dispatch runs in place, no second (S, W) buffer.
+    """
+    import jax.experimental.pallas.tpu as pltpu
+    from jax.experimental import pallas as pl
+
+    S, W = table.shape
+    if S != k * n:
+        raise ValueError(f"table rows {S} != k*n = {k * n}")
+    if W % LANE:
+        raise ValueError(f"W={W} must be a multiple of {LANE}")
+    rs_dtype = jnp.dtype(rs_dtype)
+    kernel = _make_ring_kernel(n=n, k=k, W=W, mode=mode, rs_dtype=rs_dtype,
+                               payload_dtype=table.dtype)
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    vmem = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[smem, smem, smem, vmem, vmem, vmem, vmem],
+        out_specs=vmem,
+        out_shape=jax.ShapeDtypeStruct((S, W), table.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((k, W), rs_dtype),           # acc
+            pltpu.VMEM((2, k, W), rs_dtype),        # RS send slots
+            pltpu.VMEM((2, k, W), rs_dtype),        # RS recv slots
+            pltpu.VMEM((2, k, W), table.dtype),     # AG send slots
+            pltpu.VMEM((2, k, W), table.dtype),     # AG recv slots
+            pltpu.SemaphoreType.DMA((2,)),          # RS send sems
+            pltpu.SemaphoreType.DMA((2,)),          # RS recv sems
+            pltpu.SemaphoreType.DMA((2,)),          # AG send sems
+            pltpu.SemaphoreType.DMA((2,)),          # AG recv sems
+            pltpu.SemaphoreType.REGULAR((2,)),      # RS capacity handshake
+            pltpu.SemaphoreType.REGULAR((2,)),      # AG capacity handshake
+        ],
+        input_output_aliases={3: 0},                # donate the table
+        compiler_params=pltpu.TPUCompilerParams(
+            collective_id=collective_id),
+        interpret=interpret,
+    )(pos, left, right, table, rs_row, ag_row, counts)
+
+
+def logical_ring_ids(names: Tuple[str, ...],
+                     mesh_axis_names: Optional[Sequence[str]] = None,
+                     mesh_shape: Optional[dict] = None):
+    """(pos, left, right) int32 scalars for the ring over ``names`` inside
+    a manual region: ``pos`` is the flattened ring index, left/right the
+    *logical* device ids of the ring neighbours.
+
+    With only the ring axes given, the ring axes are assumed to be the
+    whole mesh (logical id = ring index). Passing the full mesh axis
+    order/shape (the trainer's mesh) places the neighbours correctly when
+    non-ring axes (e.g. "model") trail or interleave.
+    """
+    from repro.core.rps import _my_index, axis_size
+    pos = _my_index(names).astype(jnp.int32)
+    n = axis_size(names)
+    if mesh_axis_names is None:
+        left = jnp.mod(pos - 1, n).astype(jnp.int32)
+        right = jnp.mod(pos + 1, n).astype(jnp.int32)
+        return pos, left, right
+    # general mesh: logical id = sum(coord[a] * stride[a]); the ring
+    # varies the ``names`` coords jointly (major-to-minor), all other
+    # axes keep this device's coordinate.
+    sizes = [int(mesh_shape[a]) for a in mesh_axis_names]
+    strides = {}
+    acc = 1
+    for a, sz in zip(reversed(list(mesh_axis_names)), reversed(sizes)):
+        strides[a] = acc
+        acc *= sz
+    coords = {a: lax.axis_index(a) for a in mesh_axis_names}
+    base = sum((coords[a] * strides[a] for a in mesh_axis_names
+                if a not in names), jnp.int32(0))
+
+    def ring_logical(ring_pos):
+        out = base
+        rem = ring_pos
+        for a in names:                       # major-to-minor, like _my_index
+            extent = 1
+            seen = False
+            for b in names:
+                if b == a:
+                    seen = True
+                    continue
+                if seen:
+                    extent *= int(mesh_shape[b])
+            out = out + (rem // extent) * strides[a]
+            rem = jnp.mod(rem, extent)
+        return out.astype(jnp.int32)
+
+    return (pos, ring_logical(jnp.mod(pos - 1, n)),
+            ring_logical(jnp.mod(pos + 1, n)))
+
+
+# ---------------------------------------------------------------------------
+# The engine entry point _exchange_table dispatches to
+# ---------------------------------------------------------------------------
+
+def ring_exchange_scatter_table(blocks: jax.Array, rs_sc: jax.Array,
+                                ag_sc: jax.Array, *,
+                                names: Tuple[str, ...], n: int,
+                                i: jax.Array, k: int, mode: str,
+                                rs_dtype=jnp.float32,
+                                pin: Optional[Callable] = None,
+                                ring_ids=None,
+                                use_kernel: Optional[bool] = None
+                                ) -> jax.Array:
+    """Ring-engine exchange of one scatter-ordered (S, blk[, m]) table.
+
+    ``use_kernel=None`` picks the fused Pallas dispatch on TPU (fully-
+    manual regions only — a ``pin`` hook marks a partial-manual region
+    whose auto-sharded dim Pallas cannot see) and the interpret-mode
+    ppermute ring everywhere else. ``ring_ids`` supplies precomputed
+    (pos, left, right) logical ids for multi-axis meshes
+    (:func:`logical_ring_ids`); defaults to a ring over the whole mesh.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu" and pin is None
+    if not use_kernel:
+        return _ring_schedule_jax(blocks, rs_sc, ag_sc, names=names, n=n,
+                                  i=i, k=k, mode=mode, rs_dtype=rs_dtype,
+                                  pin=pin)
+    shape = blocks.shape
+    S = shape[0]
+    W = 1
+    for d in shape[1:]:
+        W *= d
+    pad = (-W) % LANE
+    tbl = blocks.reshape(S, W)
+    if pad:
+        tbl = jnp.pad(tbl, ((0, 0), (0, pad)))
+    rs_f = rs_sc.astype(rs_dtype)
+    rs_row = rs_f[i][:, None]
+    ag_row = (ag_sc[i][:, None] != 0).astype(jnp.float32)
+    counts = jnp.sum(rs_f.astype(jnp.float32), axis=0)[:, None] \
+        .astype(rs_dtype)
+    if ring_ids is None:
+        ring_ids = logical_ring_ids(names)
+    pos, left, right = (r.reshape(1).astype(jnp.int32) for r in ring_ids)
+    out = ring_bucket_fused(tbl, rs_row, ag_row, counts, pos, left, right,
+                            n=n, k=k, mode=mode, rs_dtype=rs_dtype)
+    if pad:
+        out = out[:, :W]
+    return out.reshape(shape)
+
+
+def ring_global_sums(stack: jax.Array, rs_g: jax.Array, own: jax.Array, *,
+                     rs_dtype=jnp.float32) -> jax.Array:
+    """Single-device (global-view) replay of the ring RS arithmetic:
+    ``stack`` (G, n, s, d) worker contributions, ``rs_g`` (G, n, s) f32
+    masks, ``own`` (s,) block owners. Returns (G, s, d) masked sums
+    accumulated **in ring order in the wire dtype** — contributions for
+    block j added in order owner+1, …, owner+n−1, owner, each gated and
+    cast to ``rs_dtype`` first, exactly like the collective ring engine.
+    Lets the simulator study bf16-wire convergence without a TPU."""
+    G, n, s, d = stack.shape
+    rs_w = rs_g.astype(rs_dtype)
+
+    def hop(acc, t):
+        idx = jnp.mod(own + t, n)                          # (s,)
+        cols = jnp.arange(s)
+        contrib = stack[:, idx, cols, :].astype(rs_dtype) \
+            * rs_w[:, idx, cols][..., None]
+        return acc + contrib, None
+
+    acc = jnp.zeros((G, s, d), rs_dtype)
+    acc, _ = lax.scan(hop, acc, jnp.arange(1, n + 1))
+    return acc

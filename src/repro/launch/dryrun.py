@@ -39,7 +39,7 @@ DROP_RATE = 0.1          # the paper's headline tolerance
 # §Perf hillclimb overrides (set from CLI; None = paper-faithful baseline)
 OVERRIDES = {"exchange_dtype": "float32", "exchange_every": 1,
              "capacity_factor": None, "remat_budget": None,
-             "bucket_mb": None, "n_buckets": None}
+             "bucket_mb": None, "n_buckets": None, "engine": "xla"}
 
 
 def pick_microbatch(cfg: ArchConfig, b_local: int, seq: int,
@@ -96,7 +96,8 @@ def build_train_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh,
                        exchange_dtype=OVERRIDES["exchange_dtype"],
                        exchange_every=OVERRIDES["exchange_every"],
                        bucket_mb=OVERRIDES["bucket_mb"],
-                       n_buckets=OVERRIDES["n_buckets"])
+                       n_buckets=OVERRIDES["n_buckets"],
+                       engine=OVERRIDES["engine"])
     init_state, train_step, state_shardings = make_train_setup(
         model, cfg, tcfg, mesh, rps_axes=rps_axes, fsdp_axis=fsdp_axis)
 
@@ -122,7 +123,7 @@ def build_train_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh,
     step = jax.jit(train_step,
                    in_shardings=(param_sh, opt_sh, batch_sh, None, None),
                    out_shardings=(param_sh, opt_sh, None),
-                   donate_argnums=(0, 1))
+                   donate_argnums=train_step.donate_argnums)
     with jax.set_mesh(mesh):      # with_sharding_constraint needs a context
         lowered = step.lower(params_shape, opt_shape, batch,
                              jnp.int32(0), jax.random.PRNGKey(0))
@@ -339,13 +340,20 @@ def main():
                          "this many MiB (DESIGN.md §11); default: per-leaf")
     ap.add_argument("--buckets", type=int, default=None,
                     help="… or exactly this many size-balanced buckets")
+    ap.add_argument("--engine", default="xla",
+                    choices=["auto", "xla", "ring"],
+                    help="RS+AG lowering (DESIGN.md §12): xla = 2 "
+                         "collectives/bucket; ring = fused ring engine "
+                         "(1 Pallas dispatch/bucket on TPU); auto = ring "
+                         "on TPU")
     args = ap.parse_args()
     OVERRIDES.update(exchange_dtype=args.exchange_dtype,
                      exchange_every=args.exchange_every,
                      capacity_factor=args.capacity,
                      remat_budget=args.remat_budget,
                      bucket_mb=args.bucket_mb,
-                     n_buckets=args.buckets)
+                     n_buckets=args.buckets,
+                     engine=args.engine)
 
     archs = ARCH_IDS if (args.sweep or args.arch is None) else [args.arch]
     shapes = list(SHAPES) if (args.sweep or args.shape is None) \

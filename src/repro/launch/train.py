@@ -58,6 +58,18 @@ def main():
                          "masks); default: the per-leaf legacy plan")
     ap.add_argument("--buckets", type=int, default=None,
                     help="… or exactly this many size-balanced buckets")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "xla", "ring"],
+                    help="exchange-arithmetic engine (DESIGN.md §12): "
+                         "xla/auto = the seed f32 einsum math (bit-"
+                         "identical); ring = replay the ring engine's "
+                         "wire arithmetic (ring-order sums in "
+                         "--exchange-dtype) to study e.g. bf16-wire "
+                         "convergence on one device")
+    ap.add_argument("--exchange-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="RS wire/accumulation dtype for --engine ring "
+                         "(bf16 halves RS bytes on a real fabric)")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--warmup", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
@@ -82,7 +94,8 @@ def main():
         aggregator=args.aggregator, lr=args.lr, steps=args.steps,
         warmup=args.warmup, batch_size=args.batch_size, seed=args.seed,
         channel=args.channel, n_servers=args.servers,
-        bucket_mb=args.bucket_mb, n_buckets=args.buckets)
+        bucket_mb=args.bucket_mb, n_buckets=args.buckets,
+        engine=args.engine, exchange_dtype=args.exchange_dtype)
     t0 = time.time()
     hist = run_simulation(loss_fn, model.init, batch_fn, scfg)
     dt = time.time() - t0

@@ -21,7 +21,6 @@ Bernoulli(drop_rate) process, bit-identical to the seed code.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -63,6 +62,21 @@ class SimulatorConfig:
     # bit-identical to the seed.
     n_buckets: Optional[int] = None
     # … or exactly this many size-balanced buckets.
+    engine: str = "auto"
+    # exchange-arithmetic engine (DESIGN.md §12): "xla"/"auto" = the seed
+    # f32 einsum math (bit-identical); "ring" replays the ring engine's
+    # wire arithmetic — contributions summed in ring order in
+    # exchange_dtype — so bf16-wire convergence is measurable on one
+    # device.
+    exchange_dtype: str = "float32"
+    # RS wire/accumulation dtype for engine="ring" (bf16 = half the RS
+    # bytes on the real fabric; here it makes the simulator's arithmetic
+    # match that wire).
+    donate: bool = True
+    # donate params/opt_state/channel state into the jitted step
+    # (donate_argnums) so the sweep never double-buffers the model;
+    # False keeps the seed's copying behaviour (the A/B for
+    # benchmarks/ring_bench.py's peak-memory delta).
 
 
 def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool,
@@ -76,9 +90,10 @@ def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool,
             lambda x: jnp.broadcast_to(jnp.mean(x, 0, keepdims=True),
                                        x.shape), tree)
     mode = "grad" if is_grad else "model"
-    return rps_lib.rps_exchange_global(tree, key, scfg.drop_rate, n,
-                                       mode=mode, masks=masks,
-                                       s=scfg.n_servers, plan=plan)
+    return rps_lib.rps_exchange_global(
+        tree, key, scfg.drop_rate, n, mode=mode, masks=masks,
+        s=scfg.n_servers, plan=plan, engine=scfg.engine,
+        rs_dtype=jnp.dtype(scfg.exchange_dtype))
 
 
 def make_exchange_plan(params: Any, scfg: SimulatorConfig):
@@ -90,40 +105,25 @@ def make_exchange_plan(params: Any, scfg: SimulatorConfig):
         return None
     return plan_lib.plan_from_config(params, scfg.n_workers, scfg.n_servers,
                                      bucket_mb=scfg.bucket_mb,
-                                     n_buckets=scfg.n_buckets)
+                                     n_buckets=scfg.n_buckets,
+                                     engine=scfg.engine)
 
 
-def run_simulation(loss_fn: Callable, init_fn: Callable,
-                   batch_fn: Callable, scfg: SimulatorConfig,
-                   eval_fn: Optional[Callable] = None) -> Dict[str, Any]:
-    """loss_fn(params, batch) -> scalar; init_fn(key) -> params;
-    batch_fn(step) -> stacked batch pytree with leading dim n_workers.
+def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
+                  plan, opt):
+    """The jitted simulator step, factored out so tests and benchmarks can
+    inspect its compilation (donation, peak memory) directly.
 
-    Returns history dict with per-eval mean loss and consensus distance
-    (the Lemma-3 quantity Σ_i ‖x_i − x̄‖²).
+    Hot-path buffers are donated (``donate_argnums``: params, opt_state
+    and the channel state) unless ``scfg.donate`` is False — a 100M-param
+    sweep otherwise double-buffers the whole model every step.
+    signature: step(params, opt_state, batch, key, lr, ch_state,
+    exchange=True) -> (params, opt_state, loss, consensus, ch_state).
     """
     n = scfg.n_workers
-    key = jax.random.PRNGKey(scfg.seed)
-    k_init, key = jax.random.split(key)
-    p1 = init_fn(k_init)
-    params = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), p1)
-    opt = make_optimizer(scfg.optimizer)
-    opt_state = opt.init(params)
     is_grad_mode = scfg.aggregator.endswith("_grad")
-    # the drop process: channels are sampled inside the jitted step with the
-    # shared per-step key; their state (e.g. Gilbert–Elliott link states,
-    # trace cursor) is carried across steps alongside params/opt_state
-    channel = channels_lib.make_channel(scfg.channel, n, scfg.drop_rate,
-                                        s=scfg.n_servers)
     rps_agg = scfg.aggregator.startswith("rps")
-    ch_state = channel.init_state(jax.random.fold_in(key, 0x636831)) \
-        if rps_agg else None
-    # the exchange layout, computed once — never inside the jitted step
-    # (DESIGN.md §11); grads share the params' tree so one plan serves both
-    plan = make_exchange_plan(p1, scfg)
 
-    @functools.partial(jax.jit, static_argnames=("exchange",))
     def step_fn(params, opt_state, batch, key, lr, ch_state, exchange=True):
         def total(ps, bs):
             return jnp.sum(jax.vmap(loss_fn)(ps, bs))
@@ -152,6 +152,41 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
             lambda a, x: a + jnp.sum(jnp.square(x.astype(jnp.float32))),
             jax.tree.map(lambda x, m: x - m, params, mean_p), jnp.float32(0))
         return params, opt_state, loss / n, consensus, ch_state
+
+    donate = (0, 1, 5) if scfg.donate else ()
+    return jax.jit(step_fn, static_argnames=("exchange",),
+                   donate_argnums=donate)
+
+
+def run_simulation(loss_fn: Callable, init_fn: Callable,
+                   batch_fn: Callable, scfg: SimulatorConfig,
+                   eval_fn: Optional[Callable] = None) -> Dict[str, Any]:
+    """loss_fn(params, batch) -> scalar; init_fn(key) -> params;
+    batch_fn(step) -> stacked batch pytree with leading dim n_workers.
+
+    Returns history dict with per-eval mean loss and consensus distance
+    (the Lemma-3 quantity Σ_i ‖x_i − x̄‖²).
+    """
+    n = scfg.n_workers
+    key = jax.random.PRNGKey(scfg.seed)
+    k_init, key = jax.random.split(key)
+    p1 = init_fn(k_init)
+    params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), p1)
+    opt = make_optimizer(scfg.optimizer)
+    opt_state = opt.init(params)
+    # the drop process: channels are sampled inside the jitted step with the
+    # shared per-step key; their state (e.g. Gilbert–Elliott link states,
+    # trace cursor) is carried across steps alongside params/opt_state
+    channel = channels_lib.make_channel(scfg.channel, n, scfg.drop_rate,
+                                        s=scfg.n_servers)
+    rps_agg = scfg.aggregator.startswith("rps")
+    ch_state = channel.init_state(jax.random.fold_in(key, 0x636831)) \
+        if rps_agg else None
+    # the exchange layout, computed once — never inside the jitted step
+    # (DESIGN.md §11); grads share the params' tree so one plan serves both
+    plan = make_exchange_plan(p1, scfg)
+    step_fn = make_sim_step(loss_fn, scfg, channel, plan, opt)
 
     history = {"step": [], "loss": [], "consensus": [], "eval": [],
                "channel": repr(channel),

@@ -77,6 +77,15 @@ class TrainConfig:
                                            # balanced buckets. Both None =
                                            # the per-leaf legacy plan,
                                            # bit-identical to the seed.
+    engine: str = "auto"                   # RS+AG lowering (DESIGN.md
+                                           # §12): "xla" = psum_scatter +
+                                           # all_gather per bucket (seed
+                                           # schedule); "ring" = fused
+                                           # ring engine (one Pallas
+                                           # dispatch per bucket on TPU,
+                                           # interpret ppermute ring
+                                           # elsewhere); "auto" = ring on
+                                           # TPU, xla elsewhere.
 
 
 def _is_model_mode(agg: str) -> bool:
@@ -173,7 +182,8 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
         plan = plan_lib.plan_from_config(local_shape, n_rps, n_servers,
                                          bucket_mb=tcfg.bucket_mb,
                                          n_buckets=tcfg.n_buckets,
-                                         model_dims=mdims)
+                                         model_dims=mdims,
+                                         engine=tcfg.engine)
 
     # ---- shardings --------------------------------------------------------
     def state_shardings(params_shape):
@@ -209,9 +219,19 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
                     else "grad_renorm")
 
         def body(t, key, masks):
+            ring_ids = None
+            if rps_lib.resolve_engine(tcfg.engine) == "ring":
+                # the fused kernel RDMAs by *logical* device id — derive
+                # the ring neighbours from the full mesh layout (the RPS
+                # axes vary, TP/FSDP coords stay fixed)
+                from repro.kernels.rps_ring import logical_ring_ids
+                ring_ids = logical_ring_ids(
+                    rps_axes, mesh_axis_names=mesh.axis_names,
+                    mesh_shape=dict(mesh.shape))
             return rps_lib.rps_exchange_plan(
                 t, key, tcfg.drop_rate, rps_axes, plan=plan, mode=mode,
-                masks=masks, rs_dtype=jnp.dtype(tcfg.exchange_dtype))
+                masks=masks, rs_dtype=jnp.dtype(tcfg.exchange_dtype),
+                engine=tcfg.engine, ring_ids=ring_ids)
 
         if masks is None:
             fn = _shard_map(
@@ -317,4 +337,8 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
     train_step.channel = channel
     train_step.init_channel_state = channel.init_state
     train_step.plan = plan
+    # donation hint for jit callers (launch/dryrun.py and the benches):
+    # params + opt_state always, the channel-state carry when present —
+    # without it every step double-buffers the whole sharded model
+    train_step.donate_argnums = (0, 1) + ((5,) if stateful else ())
     return init_state, train_step, state_shardings

@@ -71,6 +71,38 @@ def test_masked_avg_grid_rejects_bad_mask_shape():
         masked_avg_grid_pallas(blocks, jnp.zeros((4,)), interpret=True)
 
 
+def test_masked_avg_tile_d_auto_divisor():
+    """tile_d=None picks d itself below the cap (no padded lanes — the
+    seed default of 512 padded a d=40 sweep to 512) and a divisor of d in
+    [128, 512] above it (no ragged last tile)."""
+    from repro.kernels.masked_avg import pick_tile_d
+    assert pick_tile_d(40) == 40          # tiny model: one exact tile
+    assert pick_tile_d(512) == 512
+    assert pick_tile_d(1) == 1
+    assert pick_tile_d(1000) == 500       # divisor, not 512-with-pad
+    assert pick_tile_d(1024) == 512
+    assert pick_tile_d(513) == 171        # 513 = 3·171
+    assert pick_tile_d(1021) == 512       # prime: cap + end padding
+    for d in (40, 1000, 513):
+        t = pick_tile_d(d)
+        assert d % t == 0 and t <= 512
+
+
+@pytest.mark.parametrize("d", [40, 513, 1000])
+def test_masked_avg_auto_tile_matches_explicit(d):
+    """The auto tile must be numerically identical to any explicit tiling
+    (pure data-layout choice), including raw bool masks (the hoisted
+    cast-in-kernel path — no (B, n, 1) f32 mask copy at the caller)."""
+    B, n = 3, 8
+    blocks = jnp.asarray(RNG.normal(size=(B, n, d)), jnp.float32)
+    mask_b = jnp.asarray(RNG.integers(0, 2, size=(B, n)),
+                         bool).at[:, 0].set(True)
+    got = masked_avg_grid_pallas(blocks, mask_b, interpret=True)
+    want = masked_avg_grid_pallas(blocks, mask_b.astype(jnp.float32),
+                                  tile_d=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def _rwkv_inputs(B, S, h, dk, dv, dtype=jnp.float32):
     r = jnp.asarray(RNG.normal(size=(B, S, h, dk)) * 0.5, dtype)
     k = jnp.asarray(RNG.normal(size=(B, S, h, dk)) * 0.5, dtype)

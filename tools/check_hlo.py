@@ -1,0 +1,115 @@
+"""Count collectives / fused dispatches / fusions in lowered programs.
+
+Schedule regressions are silent: a refactor that re-serialises the
+exchange (2 collectives per *leaf* instead of per bucket, a fused ring
+dispatch that falls apart into its pieces) still trains correctly — only
+slower. This module is the loud failure: tests and CI lower the program
+and assert the op counts.
+
+Works on both program texts the repo produces:
+
+  - StableHLO MLIR from ``jax.jit(f).lower(...).as_text()`` or
+    ``jax.export`` — ops like ``stablehlo.reduce_scatter``, and Pallas
+    TPU kernels as ``stablehlo.custom_call`` with
+    ``call_target_name = "tpu_custom_call"`` (one per fused dispatch);
+  - optimized HLO from ``.compile().as_text()`` — dashed op names
+    (``all-gather``, ``collective-permute``) and ``fusion`` ops.
+
+CLI (used by the CI bench-smoke job)::
+
+  PYTHONPATH=src:. python -m tools.check_hlo prog.mlir \
+      --expect reduce_scatter=2 --expect all_gather=2
+
+reads the program text (or stdin with ``-``) and exits non-zero on any
+mismatch.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from typing import Dict
+
+#: op keys understood by :func:`collective_counts`
+COLLECTIVE_OPS = ("reduce_scatter", "all_gather", "collective_permute",
+                  "all_reduce", "all_to_all")
+
+
+def _count_op(txt: str, op: str) -> int:
+    """Occurrences of one collective op, StableHLO or optimized-HLO
+    spelling. Counts op *applications* only — substring counting would
+    also hit attributes like ``all_gather_dim``."""
+    n = len(re.findall(r'"stablehlo\.%s"\(' % re.escape(op), txt))
+    n += len(re.findall(r'stablehlo\.%s\s' % re.escape(op), txt))
+    dashed = op.replace("_", "-")
+    # optimized HLO: `%x = f32[...] all-gather(...)` (incl. -start/-done
+    # async pairs, counted once via -start; bare form for sync ops)
+    n += len(re.findall(r'= \S+ %s\(' % re.escape(dashed), txt))
+    n += len(re.findall(r'= \S+ %s-start\(' % re.escape(dashed), txt))
+    return n
+
+
+def collective_counts(txt: str) -> Dict[str, int]:
+    """{op: count} over :data:`COLLECTIVE_OPS` for a lowered/compiled
+    program text."""
+    return {op: _count_op(txt, op) for op in COLLECTIVE_OPS}
+
+
+def fused_dispatch_count(txt: str) -> int:
+    """Pallas-TPU fused dispatches: custom calls targeting
+    ``tpu_custom_call`` (one per ``pallas_call`` — the quantity the ring
+    engine pins to 1 per bucket)."""
+    return txt.count("tpu_custom_call")
+
+
+def fusion_count(txt: str) -> int:
+    """XLA ``fusion`` ops in an optimized-HLO text (0 for StableHLO —
+    fusion happens after lowering). One pattern only: the op application
+    ``%name = <shape> fusion(...)`` — matching the result name too would
+    double-count results named ``%fusion.N``."""
+    return len(re.findall(r"= \S+ fusion(?:\.\d+)?\(", txt))
+
+
+def summarize(txt: str) -> Dict[str, int]:
+    out = dict(collective_counts(txt))
+    out["tpu_custom_call"] = fused_dispatch_count(txt)
+    out["fusion"] = fusion_count(txt)
+    return out
+
+
+def assert_counts(txt: str, **expected: int) -> Dict[str, int]:
+    """Assert exact op counts (keys from :func:`summarize`); returns the
+    full summary so callers can log it."""
+    got = summarize(txt)
+    bad = {k: (got.get(k), v) for k, v in expected.items()
+           if got.get(k) != v}
+    if bad:
+        raise AssertionError(
+            "HLO op-count mismatch (got, want): " + repr(bad)
+            + " | full summary: " + repr(got))
+    return got
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="program text file, or - for stdin")
+    ap.add_argument("--expect", action="append", default=[],
+                    metavar="OP=N",
+                    help="assert op count (repeatable), e.g. "
+                         "--expect all_gather=2 --expect tpu_custom_call=1")
+    args = ap.parse_args()
+    txt = sys.stdin.read() if args.path == "-" else open(args.path).read()
+    expected = {}
+    for e in args.expect:
+        op, _, v = e.partition("=")
+        expected[op] = int(v)
+    try:
+        got = assert_counts(txt, **expected)
+    except AssertionError as e:
+        print("FAIL:", e)
+        sys.exit(1)
+    print(" ".join(f"{k}={v}" for k, v in got.items()))
+
+
+if __name__ == "__main__":
+    main()
