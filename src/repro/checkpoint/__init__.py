@@ -1,1 +1,2 @@
-from repro.checkpoint.ckpt import load_pytree, save_pytree  # noqa: F401
+from repro.checkpoint.ckpt import (load_pytree, load_state,  # noqa: F401
+                                   save_pytree, save_state)

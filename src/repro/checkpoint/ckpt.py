@@ -40,6 +40,22 @@ def save_pytree(path: str, tree: Any) -> None:
     os.replace(tmp, path)          # atomic publish
 
 
+def save_state(path: str, **trees: Any) -> None:
+    """Bundle several named pytrees (params, opt_state, the §13 EF
+    residual, channel state, …) into one atomic checkpoint — the carried
+    training state is more than params since the wire pipeline landed,
+    and a partial save (params without the EF residual it was trained
+    with) would resume to different bits. ``None`` entries are legal and
+    round-trip as empty subtrees."""
+    save_pytree(path, dict(trees))
+
+
+def load_state(path: str, **likes: Any) -> dict:
+    """Inverse of :func:`save_state`: restore each named tree into the
+    structure of its ``like`` (shapes/dtypes validated leaf-by-leaf)."""
+    return load_pytree(path, dict(likes))
+
+
 def load_pytree(path: str, like: Any) -> Any:
     """Restore into the structure of `like` (shapes/dtypes validated)."""
     with np.load(path) as data:

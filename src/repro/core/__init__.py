@@ -6,4 +6,7 @@ from repro.core.plan import (  # noqa: F401
 from repro.core.rps import (  # noqa: F401
     reliable_average, rps_exchange, rps_exchange_flat, rps_exchange_global,
     rps_exchange_leaf, rps_exchange_plan, sample_masks)
+from repro.core.wire import (  # noqa: F401
+    Recovery, WireCodec, canon_wire_dtype, canon_wire_name, init_ef_state,
+    make_codec, make_recovery)
 from repro.core import theory, wmatrix  # noqa: F401

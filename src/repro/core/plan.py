@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import wire as wire_lib
+
 
 def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
@@ -78,6 +80,14 @@ class ExchangePlan:
     # all_gather per bucket (the seed schedule, bit-identical default);
     # "ring" = the fused ring engine (one Pallas dispatch per bucket on
     # TPU, interpret ppermute ring elsewhere); "auto" = ring on TPU.
+    wire: str = "f32"
+    # RS-leg codec (DESIGN.md §13): "f32" passthrough (bit-identical
+    # default), "bf16" linear downcast, "int8" stochastic-rounding
+    # quantisation with per-block scales (repro.core.wire).
+    recovery: str = "renorm"
+    # loss-recovery policy (DESIGN.md §13): "renorm" = paper Algorithm 1,
+    # "scale" = unbiased 1/(1−p) zero-fill, "ef" = error-feedback
+    # residual carried in trainer/simulator state.
 
     # ---- derived ---------------------------------------------------------
     @property
@@ -101,29 +111,54 @@ class ExchangePlan:
     def payload_elems(self) -> int:
         return sum(self.s * b.blk * b.m for b in self.buckets)
 
-    def wire_bytes(self, rs_dtype="float32") -> int:
+    def rs_leg_bytes(self, wire=None) -> int:
+        """Bytes one device moves on the RS leg per round: every bucket's
+        scatter-padded (S, blk, m) table in the wire dtype (``wire``
+        accepts any :func:`repro.core.wire.canon_wire_dtype` spelling;
+        ``None`` = the plan's own codec). The int8 codec's tiny f32
+        scale side-channel (one scalar per block row) is *excluded* — it
+        is reported separately by :meth:`describe` so the headline
+        ``rs_bytes_ratio`` is the clean payload ratio (0.25 for int8)."""
+        wire = self.wire if wire is None else wire
+        S = _ceil_div(self.s, self.n) * self.n
+        rs_b = wire_lib.canon_wire_dtype(wire).itemsize
+        return sum(S * b.blk * b.m * rs_b for b in self.buckets)
+
+    def wire_bytes(self, rs_dtype=None) -> int:
         """Bytes one device moves per round over every bucket's
         scatter-padded (S, blk, m) table (S = ceil(s/n)·n): the RS leg
-        carries the accumulation dtype (``rs_dtype`` — f32 by default,
-        the bf16 hillclimb knob halves it), the AG leg the payload
-        dtype."""
+        carries the wire-codec dtype (``rs_dtype`` overrides the plan's
+        own ``wire`` — any spelling ``canon_wire_dtype`` takes; f32 is
+        the paper default, bf16 halves the leg, int8 quarters it), the
+        AG leg the payload dtype."""
         S = _ceil_div(self.s, self.n) * self.n
-        rs_b = jnp.dtype(rs_dtype).itemsize
-        return sum(S * b.blk * b.m * (rs_b + jnp.dtype(b.dtype).itemsize)
-                   for b in self.buckets)
+        return self.rs_leg_bytes(rs_dtype) + sum(
+            S * b.blk * b.m * jnp.dtype(b.dtype).itemsize
+            for b in self.buckets)
 
-    def describe(self, rs_dtype="float32") -> dict:
+    def describe(self, rs_dtype=None) -> dict:
         elems = self.payload_elems()
         free = sum(b.free * b.m for b in self.buckets)
+        wire = self.wire if rs_dtype is None else \
+            wire_lib.canon_wire_name(rs_dtype)
+        S = _ceil_div(self.s, self.n) * self.n
+        quantized = wire_lib.make_codec(wire).quantized
         return {"n": self.n, "s": self.s, "n_buckets": self.n_buckets,
                 "collectives_per_round": 2 * self.n_buckets,
                 "engine": self.engine,
+                "wire": wire,
+                "recovery": self.recovery,
                 "per_bucket_masks": self.per_bucket_masks,
                 "model_packets": self.model_packets,
                 "payload_bytes": int(sum(
                     self.s * b.blk * b.m * jnp.dtype(b.dtype).itemsize
                     for b in self.buckets)),
-                "wire_bytes_per_round": int(self.wire_bytes(rs_dtype)),
+                "rs_leg_bytes": int(self.rs_leg_bytes(wire)),
+                "rs_bytes_ratio": float(self.rs_leg_bytes(wire)
+                                        / max(self.rs_leg_bytes("f32"), 1)),
+                "scale_bytes": int(4 * S * self.n_buckets) if quantized
+                else 0,
+                "wire_bytes_per_round": int(self.wire_bytes(wire)),
                 "pad_frac": float(1.0 - free / elems) if elems else 0.0}
 
     # ---- gather / scatter ------------------------------------------------
@@ -243,12 +278,24 @@ def _flatten_model_dims(model_dims: Any, n_leaves: int) -> list:
     return md
 
 
+def _canon_pipeline(wire, recovery):
+    """Validated (wire, recovery) plan fields from any spelling."""
+    wire = wire_lib.canon_wire_name("f32" if wire is None else wire)
+    wire_lib.make_codec(wire)                      # validate
+    recovery = "renorm" if recovery is None else str(recovery)
+    if recovery not in wire_lib.RECOVERIES:
+        raise ValueError(f"recovery={recovery!r}, want one of "
+                         f"{wire_lib.RECOVERIES}")
+    return wire, recovery
+
+
 def make_plan(tree: Any, n: int, s: Optional[int] = None, *,
               bucket_bytes: Optional[float] = None,
               n_buckets: Optional[int] = None,
               model_dims: Any = None,
               per_bucket_masks: Optional[bool] = None,
-              engine: str = "xla") -> ExchangePlan:
+              engine: str = "xla", wire: str = "f32",
+              recovery: str = "renorm") -> ExchangePlan:
     """Build an :class:`ExchangePlan` for ``tree`` (arrays or
     ShapeDtypeStructs — only shapes/dtypes are read).
 
@@ -266,6 +313,11 @@ def make_plan(tree: Any, n: int, s: Optional[int] = None, *,
     ``engine`` picks the round's lowering (DESIGN.md §12): "xla" (the
     seed two-collectives-per-bucket schedule, bit-identical default),
     "ring" (the fused ring engine) or "auto" (ring on TPU).
+
+    ``wire``/``recovery`` pick the wire pipeline (DESIGN.md §13): the
+    RS-leg codec ("f32" bit-identical default / "bf16" / "int8") and the
+    loss-recovery policy ("renorm" paper default / "scale" / "ef") every
+    executor of this plan applies.
     """
     if n < 1:
         raise ValueError(f"need n >= 1 workers, got {n}")
@@ -327,41 +379,49 @@ def make_plan(tree: Any, n: int, s: Optional[int] = None, *,
     buckets += [_tp_bucket(i, shapes, dtypes, mdims[i], s) for i in tp_ids]
     if per_bucket_masks is None:
         per_bucket_masks = bucket_bytes is not None or n_buckets is not None
+    wire, recovery = _canon_pipeline(wire, recovery)
     return ExchangePlan(n=int(n), s=s, buckets=tuple(buckets),
                         n_leaves=len(leaves),
                         per_bucket_masks=bool(per_bucket_masks),
-                        treedef=treedef, engine=str(engine))
+                        treedef=treedef, engine=str(engine),
+                        wire=wire, recovery=recovery)
 
 
 def plan_from_config(tree: Any, n: int, s: Optional[int] = None, *,
                      bucket_mb: Optional[float] = None,
                      n_buckets: Optional[int] = None,
                      model_dims: Any = None,
-                     engine: str = "xla") -> ExchangePlan:
+                     engine: str = "xla", wire: str = "f32",
+                     recovery: str = "renorm") -> ExchangePlan:
     """The config-knob → plan policy shared by the trainer and the
     simulator: ``bucket_mb`` MiB fixed-byte coalescing / ``n_buckets``
     size-balanced groups (packetised, per-bucket masks), both unset → the
     per-leaf legacy plan, bit-identical to the seed lowering. ``engine``
-    threads the §12 lowering knob into the plan."""
+    threads the §12 lowering knob, ``wire``/``recovery`` the §13 wire
+    pipeline into the plan."""
     if bucket_mb is not None or n_buckets is not None:
         return make_plan(tree, n, s,
                          bucket_bytes=(bucket_mb * 2 ** 20
                                        if bucket_mb is not None else None),
                          n_buckets=n_buckets, model_dims=model_dims,
-                         engine=engine)
-    return per_leaf_plan(tree, n, s, engine=engine)
+                         engine=engine, wire=wire, recovery=recovery)
+    return per_leaf_plan(tree, n, s, engine=engine, wire=wire,
+                         recovery=recovery)
 
 
 def single_bucket_plan(tree: Any, n: int, s: Optional[int] = None, *,
-                       engine: str = "xla") -> ExchangePlan:
+                       engine: str = "xla", wire: str = "f32",
+                       recovery: str = "renorm") -> ExchangePlan:
     """The legacy ``rps_exchange`` layout: every leaf ravelled into one
     flat bucket (same member order and dtype promotion as
     ``ravel_pytree``), one shared mask draw — bit-identical to the seed."""
-    return make_plan(tree, n, s, engine=engine)
+    return make_plan(tree, n, s, engine=engine, wire=wire,
+                     recovery=recovery)
 
 
 def per_leaf_plan(tree: Any, n: int, s: Optional[int] = None, *,
-                  engine: str = "xla") -> ExchangePlan:
+                  engine: str = "xla", wire: str = "f32",
+                  recovery: str = "renorm") -> ExchangePlan:
     """The legacy trainer/simulator layout: one bucket per leaf (each leaf
     fully flattened — no model-dim special-casing, exactly the seed's
     per-leaf ``rps_exchange_flat`` tree-map), one shared mask draw."""
@@ -374,6 +434,8 @@ def per_leaf_plan(tree: Any, n: int, s: Optional[int] = None, *,
     shapes, dtypes, sizes = _leaf_meta(leaves)
     buckets = tuple(_flat_bucket([i], shapes, dtypes, sizes, s)
                     for i in range(len(leaves)))
+    wire, recovery = _canon_pipeline(wire, recovery)
     return ExchangePlan(n=int(n), s=s, buckets=buckets,
                         n_leaves=len(leaves), per_bucket_masks=False,
-                        treedef=treedef, engine=str(engine))
+                        treedef=treedef, engine=str(engine),
+                        wire=wire, recovery=recovery)

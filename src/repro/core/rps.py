@@ -45,6 +45,13 @@ TPU (n−1 ``make_async_remote_copy`` hops per phase, double-buffered, with
 in-kernel mask gating / renormalisation / AG-select and a donated table),
 and the bit-exact ``lax.ppermute`` interpret ring everywhere else.
 "auto" picks ring on TPU, xla elsewhere.
+
+Since DESIGN.md §13 the *wire treatment* is pluggable too: a
+:mod:`repro.core.wire` codec (``wire=`` — f32 passthrough / bf16 / int8
+stochastic rounding, absorbing the old ``rs_dtype`` knob) composed with a
+loss-recovery policy (``recovery=`` — the paper's renorm, unbiased
+1/(1−p) ``scale``, or the stateful error-feedback ``ef`` whose residual
+the plan/global paths carry via ``ef_state=``).
 """
 from __future__ import annotations
 
@@ -56,6 +63,7 @@ from jax import lax
 from jax.flatten_util import ravel_pytree
 
 from repro.core import plan as plan_lib
+from repro.core import wire as wire_lib
 
 AxisNames = Union[str, Tuple[str, ...]]
 
@@ -202,28 +210,77 @@ def resolve_engine(engine: Optional[str]) -> str:
     return engine
 
 
+def _divisor(rec: wire_lib.Recovery, mode: str, rs: jax.Array,
+             n: int) -> jax.Array:
+    """The (…, S) f32 per-block divisor the recovery policy prescribes,
+    from (…, n, S) RS masks (the worker axis is reduced; any leading
+    dims — e.g. the global path's group dim — pass through). The ONE
+    place divisor policy lives: computable locally on every device (the
+    mask is globally known, the ``scale`` divisor is a static constant):
+
+      renorm / ef  — the received count (the paper's Algorithm 1) for
+                     model / grad_renorm modes; the worker count n for
+                     the naive "grad" mode (the paper's fragile Fig-5
+                     baseline keeps its no-renormalisation asymmetry);
+      scale        — the *expected* count n(1−p) in every mode: unbiased
+                     zero-fill recovery (Weintraub et al., 2025).
+    """
+    shape = rs.shape[:-2] + rs.shape[-1:]
+    if rec.kind == "scale":
+        return jnp.full(shape, rec.expected_count(n), jnp.float32)
+    if mode == "model" or mode == "grad_renorm":
+        counts = jnp.sum(rs.astype(jnp.float32), axis=-2)
+        return jnp.maximum(counts, 1.0)
+    if mode == "grad":
+        return jnp.full(shape, float(n), jnp.float32)  # no renormalisation
+    raise ValueError(mode)
+
+
 def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
                     names: Tuple[str, ...], n: int, i: jax.Array,
                     mode: str, rs_dtype=jnp.float32,
                     pin: Optional[Callable] = None,
-                    engine: str = "xla", ring_ids=None) -> jax.Array:
+                    engine: str = "xla", ring_ids=None,
+                    wire=None, recovery=None, key=None,
+                    send=None) -> jax.Array:
     """One drop-masked RS+AG round on an ``(s, blk[, m])`` block table
     inside a shard_map region over ``names`` (the RPS axes).
 
     This is the single engine entry every exchange path executes: pad the
     table to the owner-major scatter layout, run the round under the
     chosen ``engine`` lowering — "xla": one tiled ``psum_scatter`` with
-    the RS mask applied sender-side, local renormalisation by the
-    received count, one tiled ``all_gather`` and the AG-mask select
-    (exactly two collectives per call); "ring": the DESIGN §12 ring
-    schedule (one fused Pallas dispatch per bucket on TPU, the bit-exact
-    interpret ppermute ring elsewhere); "auto"/None resolves per backend
-    — and crop back to block order. ``pin`` is an optional
-    per-intermediate sharding hook (the partial-manual per-leaf path pins
-    its TP dim); identity when None. ``ring_ids`` forwards precomputed
-    ring-neighbour logical device ids (``rps_ring.logical_ring_ids``) for
-    the TPU kernel on meshes with non-RPS axes.
+    the RS mask applied sender-side, the recovery divisor applied
+    locally, one tiled ``all_gather`` and the AG-mask select (exactly
+    two collectives per call); "ring": the DESIGN §12 ring schedule (one
+    fused Pallas dispatch per bucket on TPU, the bit-exact interpret
+    ppermute ring elsewhere); "auto"/None resolves per backend — and
+    crop back to block order. ``pin`` is an optional per-intermediate
+    sharding hook (the partial-manual per-leaf path pins its TP dim);
+    identity when None. ``ring_ids`` forwards precomputed ring-neighbour
+    logical device ids (``rps_ring.logical_ring_ids``) for the TPU
+    kernel on meshes with non-RPS axes.
+
+    Wire pipeline (DESIGN.md §13): ``wire`` picks the RS-leg codec
+    (``None`` = a linear codec of the legacy ``rs_dtype`` knob, which
+    the codec abstraction absorbs — the f32 default is bit-identical to
+    the seed); ``recovery`` the divisor policy (a
+    ``repro.core.wire.Recovery`` or spec string; None = the paper's
+    renorm). ``key`` seeds stochastic rounding for quantised codecs
+    (None = round-to-nearest-even). ``send`` overrides this device's
+    wire representation — the EF recovery passes the
+    residual-compensated, already-encoded intent (a plain array for
+    linear codecs, the ``codec.encode`` pair for quantised ones); the
+    AG-drop fallback always stays the *raw* local ``blocks``.
     """
+    codec = wire_lib.resolve_codec(wire, rs_dtype)
+    rec = wire_lib.make_recovery(recovery)
+    if rec.needs_state and send is None:
+        # ef without a compensated send would silently run as plain
+        # renorm, dropping the codec error every round — only the
+        # plan/global paths (which carry the residual) may pass it
+        raise ValueError("recovery='ef' carries a residual: use "
+                         "rps_exchange_plan / rps_exchange_global with "
+                         "ef_state=")
     raw_pin = pin      # None = fully-manual region (the fused-kernel gate)
     if pin is None:
         def pin(x):
@@ -232,13 +289,33 @@ def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
     k, S, order, inv = _scatter_layout(n, s)
     trail = blocks.ndim - 1
     wide = (slice(None),) + (None,) * trail      # (S, 1[, 1]) broadcast
-    if S != s:      # dummy blocks pad the table to k blocks per owner
-        blocks = jnp.pad(blocks,
-                         ((0, S - s),) + ((0, 0),) * trail)
+
+    def to_scatter(x, fill=0.0):
+        """Pad a block-ordered (s, …) per-block array to S rows and
+        permute to owner-major order — the transformation the table and
+        masks go through, applied to every send component too."""
+        if S != x.shape[0]:
+            x = jnp.pad(x,
+                        ((0, S - x.shape[0]),) + ((0, 0),) * (x.ndim - 1),
+                        constant_values=fill)
+        return x if order is None else x[order]
+
+    blocks = pin(to_scatter(blocks))
     rs_sc, ag_sc = _masks_to_scatter(rs, ag, S, order)
-    if order is not None:                   # owner-major scatter order
-        blocks = blocks[order]
-    blocks = pin(blocks)
+    div = _divisor(rec, mode, rs_sc, n)          # (S,) f32, known locally
+
+    # ---- wire representation of this device's contribution -------------
+    if codec.quantized:
+        if send is None:
+            enc = codec.encode(blocks, key)
+        else:
+            q, sc = send
+            enc = (to_scatter(q), to_scatter(sc, fill=1.0))
+        send_arr = codec.decode(*enc)            # f32 on the wire grid
+    else:
+        enc = None
+        send_arr = blocks if send is None else pin(to_scatter(send))
+    acc_dtype = codec.accum_dtype
 
     if resolve_engine(engine) == "ring":
         from repro.kernels import rps_ring
@@ -248,32 +325,31 @@ def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
         # would make the fused TPU path unreachable
         out = rps_ring.ring_exchange_scatter_table(
             blocks, rs_sc, ag_sc, names=names, n=n, i=i, k=k, mode=mode,
-            rs_dtype=rs_dtype, pin=raw_pin, ring_ids=ring_ids)
+            rs_dtype=acc_dtype, pin=raw_pin, ring_ids=ring_ids,
+            codec=codec, enc=enc,
+            send=None if send_arr is blocks else send_arr, div=div)
         if inv is not None:
             out = out[inv]                        # back to block order
         return pin(out[:s])
-    rs_f = rs_sc.astype(rs_dtype)
+    rs_f = rs_sc.astype(acc_dtype)
 
     # ---- Reduce-Scatter with send-side drops --------------------------
-    # rs_dtype=f32 (default): renormalised-mean precision / the paper-
-    # faithful setting; bf16 halves the RS wire bytes (hillclimb knob).
+    # Linear codecs accumulate in the wire dtype (f32 default: the
+    # renormalised-mean precision / paper-faithful setting; bf16 halves
+    # the RS wire bytes). Quantised codecs accumulate the decoded
+    # contributions in f32 — psum_scatter is opaque, so the XLA engine
+    # models a decode-at-receiver transport (the ring engine carries the
+    # quantised payload on the actual hops).
     # (f32 also works around an XLA-CPU AllReducePromotion crash on
     # sub-32-bit reduce-scatter under partial-manual shard_map.)
-    masked = pin(blocks.astype(rs_dtype) * rs_f[i][wide])
+    masked = pin(send_arr.astype(acc_dtype) * rs_f[i][wide])
     sums = masked
     for a in names:     # scatter over the flattened axes, major to minor
         sums = pin(lax.psum_scatter(sums, a, scatter_dimension=0,
                                     tiled=True))
     sums = pin(sums.reshape((k,) + blocks.shape[1:]))
-    counts = jnp.sum(rs_f.astype(jnp.float32), axis=0)   # (S,) known locally
-    my_counts = lax.dynamic_slice_in_dim(counts, i * k, k).astype(rs_dtype)
-
-    if mode == "model" or mode == "grad_renorm":
-        tilde = sums / jnp.maximum(my_counts[wide], 1.0)
-    elif mode == "grad":
-        tilde = sums / float(n)                       # no renormalisation
-    else:
-        raise ValueError(mode)
+    my_div = lax.dynamic_slice_in_dim(div, i * k, k).astype(acc_dtype)
+    tilde = sums / my_div[wide]
 
     # ---- All-Gather with receive-side drops ------------------------------
     gathered = pin(tilde.astype(blocks.dtype))        # AG moves model dtype
@@ -317,7 +393,7 @@ def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
                       axis_name: AxisNames, *, mode: str = "model",
                       masks=None, rs_dtype=jnp.float32,
                       s: Optional[int] = None, engine: str = "xla",
-                      ring_ids=None):
+                      ring_ids=None, wire=None, recovery=None):
     """One RPS round on a flat per-device vector v: (D,) -> (D,).
 
     mode:
@@ -338,6 +414,14 @@ def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
     two collectives, bit-identical to the seed), "ring" (fused Pallas
     dispatch on TPU / interpret ppermute ring elsewhere), or "auto".
 
+    ``wire``/``recovery`` — the wire pipeline (DESIGN.md §13): RS-leg
+    codec ("f32"/"bf16"/"int8"; None = a linear codec of ``rs_dtype``,
+    bit-identical to the seed) and loss-recovery policy
+    ("renorm"/"scale"; the stateful "ef" lives on the plan/global paths
+    that carry state). The ``scale`` divisor uses this call's ``p``
+    unless the passed ``Recovery`` already carries its own (a channel's
+    ``effective_p``).
+
     Returns the exchanged vector (for "grad" modes: the per-block gradient
     each worker should apply).
     """
@@ -346,6 +430,19 @@ def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
     i = _my_index(axis_name)
     D = v.shape[0]
 
+    rec = wire_lib.make_recovery(recovery, p=p)
+    if rec.needs_state:
+        raise ValueError("recovery='ef' carries a residual: use "
+                         "rps_exchange_plan / rps_exchange_global with "
+                         "ef_state=")
+    codec = wire_lib.resolve_codec(wire, rs_dtype)
+    # fold the device index into the encode key: the per-step key is
+    # replicated, and identical uniforms on every worker would correlate
+    # the stochastic-rounding dither — the 1/n error averaging the codec
+    # variance accounting relies on needs independent per-worker draws
+    k_enc = jax.random.fold_in(jax.random.fold_in(key, 0x77697265), i) \
+        if codec.quantized else None
+
     rs, ag = sample_masks(key, n, p, s) if masks is None else masks
     s = rs.shape[-1]
     pad = (-D) % s
@@ -353,7 +450,8 @@ def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
     vp = jnp.pad(v, (0, pad)) if pad else v
     out = _exchange_table(vp.reshape(s, blk), rs, ag, names=names, n=n,
                           i=i, mode=mode, rs_dtype=rs_dtype,
-                          engine=engine, ring_ids=ring_ids)
+                          engine=engine, ring_ids=ring_ids,
+                          wire=codec, recovery=rec, key=k_enc)
     out = out.reshape(-1)
     return out[:D] if pad else out
 
@@ -362,19 +460,21 @@ def rps_exchange(tree: Any, key: jax.Array, p: float,
                  axis_name: AxisNames, *, mode: str = "model",
                  masks=None, rs_dtype=jnp.float32,
                  s: Optional[int] = None, engine: str = "xla",
-                 ring_ids=None) -> Any:
+                 ring_ids=None, wire=None, recovery=None) -> Any:
     """Pytree wrapper around :func:`rps_exchange_flat` — semantically the
     single-bucket plan (``plan.single_bucket_plan``): the whole tree is
     one ``ravel_pytree`` buffer, exchanged in one RS+AG round.
 
     Forwards ``rs_dtype`` (the seed version silently dropped it, so bf16 RS
     accumulation was unreachable from the pytree API), the server-block
-    count ``s`` and the ``engine`` knob.
+    count ``s``, the ``engine`` knob and the §13 ``wire``/``recovery``
+    pipeline.
     """
     flat, unravel = ravel_pytree(tree)
     return unravel(rps_exchange_flat(flat, key, p, axis_name, mode=mode,
                                      masks=masks, rs_dtype=rs_dtype, s=s,
-                                     engine=engine, ring_ids=ring_ids))
+                                     engine=engine, ring_ids=ring_ids,
+                                     wire=wire, recovery=recovery))
 
 
 def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
@@ -383,7 +483,8 @@ def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
                       masks=None, rs_dtype=jnp.float32,
                       pin: Optional[Callable] = None,
                       engine: Optional[str] = None,
-                      ring_ids=None) -> Any:
+                      ring_ids=None, wire=None, recovery=None,
+                      ef_state: Any = None) -> Any:
     """Bucketed collective exchange of a (worker-local) pytree inside a
     shard_map region: exactly ``2 × plan.n_buckets`` collectives per round
     on the "xla" engine (one psum_scatter + one all_gather per bucket),
@@ -404,6 +505,15 @@ def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
     scheduler can overlap the reshape/concat work with the in-flight
     round and at most two bucket tables are live at once (the all-up-
     front gather kept every table alive across the whole round).
+
+    Wire pipeline (DESIGN.md §13): ``wire``/``recovery`` default to the
+    plan's own fields (``plan.wire``/``plan.recovery`` — "f32"/"renorm"
+    unless configured, bit-identical to the seed). The stateful ``ef``
+    recovery takes the residual pytree via ``ef_state`` (same structure
+    as ``tree``; :func:`repro.core.wire.init_ef_state` builds the zero
+    initial one) and then returns ``(exchanged_tree, new_ef_state)``
+    instead of the bare tree — the caller carries the residual across
+    rounds (trainer/simulator state, donated alongside params).
     """
     names = _axis_tuple(axis_name)
     n = axis_size(axis_name)
@@ -411,19 +521,62 @@ def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
         raise ValueError(f"plan built for n={plan.n}, axes give n={n}")
     i = _my_index(axis_name)
     engine = plan.engine if engine is None else engine
+    wire = plan.wire if wire is None else wire
+    recovery = plan.recovery if recovery is None else recovery
+    codec = wire_lib.resolve_codec(wire, rs_dtype)
+    rec = wire_lib.make_recovery(recovery, p=p)
+    use_ef = rec.needs_state
+    if use_ef and ef_state is None:
+        raise ValueError("recovery='ef' needs ef_state= (the carried "
+                         "residual; wire.init_ef_state(tree) to start)")
     rs, ag = _resolve_masks(key, n, p, plan, masks)
     leaves = plan.check_leaves(tree)
+    ef_leaves = plan.check_leaves(ef_state) if use_ef else None
     outs = []
+    new_ef = []
     tbl = plan.gather_bucket(leaves, 0)
     for b in range(plan.n_buckets):
         nxt = plan.gather_bucket(leaves, b + 1) \
             if b + 1 < plan.n_buckets else None   # prefetch next bucket
         rs_b, ag_b = _bucket_masks(rs, ag, b)
+        # per-bucket AND per-device encode keys (see rps_exchange_flat:
+        # correlated dither across workers would defeat the averaging)
+        k_b = jax.random.fold_in(jax.random.fold_in(
+            jax.random.fold_in(key, 0x77697265), b), i) \
+            if codec.quantized else None
+        send = None
+        if use_ef:
+            # EF: send the residual-compensated intent; the codec error
+            # of *this* round becomes the residual replayed into the next
+            # round's send (e' = intent − decode(encode(intent))).
+            # Delivery-aware (DESIGN §13): a block whose RS packet
+            # dropped injected nothing into the average, so its residual
+            # stays outstanding — only delivered blocks take the fresh
+            # codec error. Without this the random delivery subset
+            # breaks the per-worker telescoping the EF guarantee rests
+            # on (iid stochastic-rounding errors stop cancelling).
+            # deterministic encode under EF: the feedback loop supplies
+            # the unbiasing, so stochastic rounding's dither would only
+            # add fresh variance the residual can never cancel
+            e_tbl = plan.gather_bucket(ef_leaves, b)
+            intent = tbl + e_tbl
+            if codec.quantized:
+                send = codec.encode(intent, None)
+                delivered = codec.decode(*send)
+            else:
+                delivered = codec.fake_quant(intent)
+                send = delivered
+            gate = rs_b[i][(slice(None),) + (None,) * (tbl.ndim - 1)]
+            new_ef.append(jnp.where(
+                gate != 0, (intent - delivered).astype(tbl.dtype), e_tbl))
         outs.append(_exchange_table(tbl, rs_b, ag_b, names=names, n=n,
                                     i=i, mode=mode, rs_dtype=rs_dtype,
                                     pin=pin, engine=engine,
-                                    ring_ids=ring_ids))
+                                    ring_ids=ring_ids, wire=codec,
+                                    recovery=rec, key=k_b, send=send))
         tbl = nxt
+    if use_ef:
+        return plan.scatter(outs), plan.scatter(new_ef)
     return plan.scatter(outs)
 
 
@@ -458,7 +611,9 @@ def _blockify(x: jax.Array, s: int, model_dim: Optional[int]):
 def rps_exchange_leaf(x: jax.Array, rs: jax.Array, ag: jax.Array,
                       axis_name: AxisNames, *, mode: str,
                       model_dim: Optional[int] = None,
-                      engine: str = "xla") -> jax.Array:
+                      engine: str = "xla", rs_dtype=jnp.float32,
+                      wire=None, recovery=None,
+                      key: Optional[jax.Array] = None) -> jax.Array:
     """Per-leaf RS+AG exchange inside a partial-manual shard_map region.
 
     `model_dim` marks a dim that stays auto-sharded (tensor-parallel): it is
@@ -471,6 +626,14 @@ def rps_exchange_leaf(x: jax.Array, rs: jax.Array, ag: jax.Array,
     ``engine="ring"`` here always runs the ppermute ring (the ``pin``
     hook marks a partial-manual region whose auto-sharded TP dim the
     fused Pallas dispatch cannot see — ``rps_ring`` falls back).
+
+    ``rs_dtype`` is the RS accumulation/wire dtype, *forwarded* to the
+    engine (this path used to hard-code f32, so bf16-wire exchanges were
+    silently promoted — the same class of bug PR 2 fixed in
+    ``rps_exchange``). f32 stays the default: the renormalised mean
+    should not round per-addend. ``wire``/``recovery``/``key`` thread
+    the §13 pipeline (a ``scale`` Recovery must carry its own ``p`` —
+    this path sees masks, not a drop rate).
     """
     from jax.sharding import PartitionSpec as _P
     names = _axis_tuple(axis_name)
@@ -488,11 +651,10 @@ def rps_exchange_leaf(x: jax.Array, rs: jax.Array, ag: jax.Array,
         return jax.lax.with_sharding_constraint(
             v, _P(*([None] * (v.ndim - 1) + ["model"])))
 
-    # Reduce-Scatter accumulates in f32: the renormalised mean should not
-    # round per-addend (see _exchange_table).
     out = _exchange_table(blocks, rs, ag, names=names, n=n, i=i,
-                          mode=mode, rs_dtype=jnp.float32, pin=pin,
-                          engine=engine)
+                          mode=mode, rs_dtype=rs_dtype, pin=pin,
+                          engine=engine, wire=wire, recovery=recovery,
+                          key=key)
     return restore(out)
 
 
@@ -525,7 +687,8 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
                         s: Optional[int] = None,
                         plan: Optional[plan_lib.ExchangePlan] = None,
                         engine: str = "xla",
-                        rs_dtype=jnp.float32) -> Any:
+                        rs_dtype=jnp.float32, wire=None, recovery=None,
+                        ef_state: Any = None) -> Any:
     """Global-view exchange on *stacked* worker trees (leading dim n).
 
     Mathematically identical to the collective path (same masks, same block
@@ -567,6 +730,18 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
     stack itself (model/renorm) or a mask *multiply* (grad), so no
     same-shape fallback buffer is ever materialised
     (tests/test_ring.py pins the compiled temp bytes).
+
+    Wire pipeline (DESIGN.md §13): ``wire``/``recovery`` default to the
+    plan's fields. A linear codec narrower than the payload rounds each
+    contribution to the wire grid before the (f32-accumulated) sum — the
+    decode-at-receiver semantics of the collective XLA engine; widening
+    is exact, so the f32 default stays bit-identical *and* copy-free on
+    bf16 payloads. Quantised codecs fake-quant the contributions
+    (stochastic rounding keyed per group); the "ring" engine additionally
+    re-quantises the running partial on every replayed hop, matching the
+    collective ring's int8 RDMA wire. The stateful ``ef`` recovery takes
+    the *stacked* residual via ``ef_state`` (same structure as ``tree``,
+    per-worker residuals) and returns ``(out_tree, new_ef_state)``.
     """
     if plan is None:
         per_worker = jax.tree.map(
@@ -574,6 +749,14 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
         if masks is not None:
             s = masks[0].shape[-1]
         plan = plan_lib.per_leaf_plan(per_worker, n, s)
+    wire = plan.wire if wire is None else wire
+    recovery = plan.recovery if recovery is None else recovery
+    codec = wire_lib.resolve_codec(wire, rs_dtype)
+    rec = wire_lib.make_recovery(recovery, p=p)
+    use_ef = rec.needs_state
+    if use_ef and ef_state is None:
+        raise ValueError("recovery='ef' needs ef_state= (the stacked "
+                         "residual; wire.init_ef_state(tree) to start)")
     rs, ag = _resolve_masks(key, n, p, plan, masks)
     s = plan.s
     renorm = mode in ("model", "grad_renorm")
@@ -584,7 +767,10 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
     elif engine not in ("xla", "ring"):
         raise ValueError(f"engine={engine!r}")
     backend = _resolve_global_backend(backend)
-    use_pallas = backend == "pallas" and renorm and engine == "xla"
+    # the Pallas masked-average kernel renormalises by the received count
+    # internally — any other divisor (the scale recovery) takes the einsum
+    use_pallas = backend == "pallas" and renorm and engine == "xla" \
+        and rec.kind != "scale"
     if use_pallas:
         from repro.kernels.masked_avg import masked_avg_grid_pallas
         interp = jax.default_backend() != "tpu"
@@ -592,27 +778,68 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
         from repro.kernels.rps_ring import ring_global_sums
         own = owners(n, s)
 
+    def to_wire(x, k_enc):
+        """A contribution's wire representation. Linear: round to the
+        wire grid only when it actually narrows (widening is exact — the
+        native stack is kept, no copy). Quantised: per-(worker, block)
+        scales over the payload dim."""
+        if codec.quantized:
+            return codec.fake_quant(x, k_enc, lead=2)
+        if jnp.dtype(codec.wire_dtype).itemsize < jnp.dtype(x.dtype).itemsize:
+            return x.astype(codec.wire_dtype)
+        return x
+
     tables = plan.gather(tree, lead=1)        # each (n, s, blk, m)
+    ef_tables = plan.gather(ef_state, lead=1) if use_ef else None
     outs: list = [None] * len(tables)
-    for (blk, m, _dt), idxs in _global_groups(plan).items():
+    ef_outs: list = [None] * len(tables)
+    for g_idx, ((blk, m, _dt), idxs) in \
+            enumerate(_global_groups(plan).items()):
         G = len(idxs)
         d = blk * m
         stack = jnp.stack([tables[j].reshape(n, s, d) for j in idxs])
+        k_g = jax.random.fold_in(jax.random.fold_in(key, 0x77697265),
+                                 g_idx) if codec.quantized else None
         if rs.ndim == 3:
             rs_g = jnp.stack([rs[j] for j in idxs]).astype(jnp.float32)
             ag_g = jnp.stack([ag[j] for j in idxs])
         else:
             rs_g = jnp.broadcast_to(rs.astype(jnp.float32), (G, n, s))
             ag_g = jnp.broadcast_to(ag, (G, n, s))
+        if use_ef:
+            # EF: send the residual-compensated intent; this round's
+            # codec error becomes next round's replayed residual.
+            # Delivery-aware (DESIGN §13): a dropped block's residual
+            # stays outstanding — only delivered blocks take the fresh
+            # error, preserving the per-worker telescoping under drops.
+            # deterministic encode under EF (see rps_exchange_plan): the
+            # feedback loop unbiases, dither would only add variance
+            ef_stack = jnp.stack(
+                [ef_tables[j].reshape(n, s, d) for j in idxs]
+            ).astype(stack.dtype)
+            intent = stack + ef_stack
+            send = to_wire(intent, None) if codec.quantized \
+                else codec.fake_quant(intent)
+            resid = jnp.where(rs_g[..., None] != 0,
+                              intent - send.astype(stack.dtype), ef_stack)
+            for pos, j in enumerate(idxs):
+                ef_outs[j] = resid[pos].astype(stack.dtype) \
+                    .reshape(n, s, blk, m)
+        else:
+            send = to_wire(stack, k_g)
+        div_g = _divisor(rec, mode, rs_g, n)                 # (G, s) f32
         if engine == "ring":                  # wire-dtype ring-order sums
-            sums = ring_global_sums(stack, rs_g, own, rs_dtype=rs_dtype)
-            counts = jnp.sum(rs_g, axis=1).astype(rs_dtype)     # (G, s)
-            tilde = sums / jnp.maximum(counts[..., None], 1.0) \
-                if renorm else sums / float(n)
+            # the replay accumulates in the codec's accumulation dtype
+            # (the wire itself for linear codecs — resolving wire= and
+            # the legacy rs_dtype knob identically; f32 for quantised)
+            sums = ring_global_sums(send, rs_g, own,
+                                    rs_dtype=codec.accum_dtype,
+                                    codec=codec)
+            tilde = sums / div_g[..., None].astype(sums.dtype)
         elif use_pallas:
             # the kernel casts per-VMEM-tile internally: no (G,n,s,d)
             # f32 copy of the stack is ever materialised
-            blocks_k = stack.transpose(0, 2, 1, 3).reshape(G * s, n, d)
+            blocks_k = send.transpose(0, 2, 1, 3).reshape(G * s, n, d)
             mask_k = rs_g.transpose(0, 2, 1).reshape(G * s, n)
             tilde = masked_avg_grid_pallas(
                 blocks_k, mask_k, interpret=interp).reshape(G, s, d)
@@ -622,10 +849,9 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
             # in any float dtype and bf16→f32 products are exact, so the
             # sums are bit-identical to the old promote-then-einsum — but
             # no full-stack f32 copy is ever materialised
-            sums = jnp.einsum("gij,gijd->gjd", rs_g.astype(stack.dtype),
-                              stack, preferred_element_type=jnp.float32)
-            counts = jnp.maximum(rs_g.sum(1), 1.0)              # (G, s)
-            tilde = sums / counts[..., None] if renorm else sums / float(n)
+            sums = jnp.einsum("gij,gijd->gjd", rs_g.astype(send.dtype),
+                              send, preferred_element_type=jnp.float32)
+            tilde = sums / div_g[..., None]
         gathered = tilde.astype(stack.dtype)[:, None]  # AG moves payload
         if renorm:
             # the AG fallback *is* the input stack — no f32 copy of it
@@ -636,6 +862,8 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
             out = gathered * ag_g[..., None].astype(stack.dtype)
         for pos, j in enumerate(idxs):
             outs[j] = out[pos].reshape(n, s, blk, m)
+    if use_ef:
+        return plan.scatter(outs, lead=1), plan.scatter(ef_outs, lead=1)
     return plan.scatter(outs, lead=1)
 
 

@@ -31,6 +31,16 @@ is ≈ p·model_packets/s, giving the server-scaling law the benchmark
 With s = n (the default) p_block = p and everything reduces to the paper's
 square-layout bounds exactly.
 
+Wire pipeline (DESIGN.md §13): the convergence argument only needs an
+unbiased, bounded-variance estimate of the average, so codecs and
+recovery policies enter the bounds as *variance*, not structure: a codec
+contributes its relative quantisation second moment ω (``wire.WIRE_OMEGA``;
+ω² under error feedback, which telescopes the time-averaged codec error),
+the ``scale`` recovery its divisor variance p/((1−p)n) — both folded into
+α₂ by ``alpha_bounds_plan``/``corollary2_rate_plan`` via
+``plan_wire_alpha2_extra``. All recovery policies are (conditionally)
+unbiased, so α₁ is untouched; the f32/renorm default adds exactly 0.
+
 Non-i.i.d. channels (DESIGN.md §9): the bounds are functions of the
 marginal drop probability only, so they extend to any ``repro.channels``
 channel through its stationary marginal ``channel.effective_p()`` — that is
@@ -145,14 +155,19 @@ def corollary2_lr(n: int, p: float, T: int, L: float = 1.0,
 
 def corollary2_rate(n: int, p: float, T: int, sigma: float = 1.0,
                     zeta: float = 0.0, s: Optional[int] = None,
-                    model_packets: Optional[int] = None) -> float:
+                    model_packets: Optional[int] = None,
+                    a2_extra: float = 0.0) -> float:
     """Leading terms of the Corollary-2 convergence bound (up to constants):
 
       (σ+ζ)(1+√(nα₂)) / ((1−√β)√(nT)) + 1/T
       + n(σ²+ζ²)/((1+nα₂)σ²T + nα₂Tζ²)
+
+    ``a2_extra`` adds wire-pipeline variance on top of the Lemma-8 α₂
+    (codec ω + recovery-divisor variance, DESIGN.md §13); 0.0 — the
+    f32/renorm default — reduces exactly to the paper's rate.
     """
     b = beta(n, p, s, model_packets)
-    a2 = alpha2_bound(n, p, s, model_packets)
+    a2 = min(alpha2_bound(n, p, s, model_packets) + float(a2_extra), 1.0)
     lead = (sigma + zeta) * (1.0 + np.sqrt(n * a2)) / (
         (1.0 - np.sqrt(b)) * np.sqrt(n * T))
     tail = n * (sigma ** 2 + zeta ** 2) / (
@@ -182,16 +197,39 @@ def plan_packets(plan) -> "tuple[int, int]":
     return int(plan.s), int(plan.model_packets)
 
 
+def plan_wire_alpha2_extra(plan, n: int, p: float) -> float:
+    """Wire-pipeline variance the plan's codec/recovery add on top of the
+    Lemma-8 α₂ (DESIGN.md §13): the codec's relative quantisation second
+    moment ω (``wire.WIRE_OMEGA`` — ω² under EF, which compensates the
+    time-averaged codec error to higher order) plus the ``scale``
+    recovery's divisor variance p/((1−p)n). Duck-typed on ``plan.wire``
+    / ``plan.recovery`` — pre-§13 plan-likes without the fields get the
+    exact paper bounds (0.0 extra), as does the f32/renorm default."""
+    from repro.core import wire as wire_lib
+    w = getattr(plan, "wire", "f32")
+    r = getattr(plan, "recovery", "renorm")
+    return (wire_lib.effective_omega(w, r)
+            + wire_lib.recovery_alpha2_extra(r, n, p))
+
+
 def alpha_bounds_plan(plan, n: int, p: float):
-    """(α₁, α₂) Lemma-7/8 bounds at the plan's packetisation."""
+    """(α₁, α₂) Lemma-7/8 bounds at the plan's packetisation, with the
+    plan's wire-codec variance and recovery-divisor variance folded into
+    α₂ (:func:`plan_wire_alpha2_extra`). Every recovery policy is
+    (conditionally) unbiased, so α₁ carries no extra term. The
+    f32/renorm default reduces exactly to the packetisation bounds."""
     s, mp = plan_packets(plan)
+    extra = plan_wire_alpha2_extra(plan, n, p)
     return (alpha1_bound(n, p, s=s, model_packets=mp),
-            alpha2_bound(n, p, s=s, model_packets=mp))
+            float(min(alpha2_bound(n, p, s=s, model_packets=mp) + extra,
+                      1.0)))
 
 
 def corollary2_rate_plan(plan, n: int, p: float, T: int, **kw) -> float:
-    """Corollary-2 rate prediction at the plan's packetisation."""
+    """Corollary-2 rate prediction at the plan's packetisation and wire
+    pipeline (codec ω + recovery variance through ``a2_extra``)."""
     s, mp = plan_packets(plan)
+    kw.setdefault("a2_extra", plan_wire_alpha2_extra(plan, n, p))
     return corollary2_rate(n, p, T, s=s, model_packets=mp, **kw)
 
 

@@ -1,0 +1,310 @@
+"""Composable wire pipeline: codecs × loss-recovery (DESIGN.md §13).
+
+The paper's RPS analysis fixes one wire treatment — send f32 blocks,
+renormalise the mean over whatever arrives — but its convergence argument
+only needs an unbiased, bounded-variance estimate of the average, which
+admits a whole family of treatments. This module factors the wire
+semantics out of ``core.rps._exchange_table`` into two orthogonal,
+pluggable pieces:
+
+:class:`WireCodec` — how a bucket table is *represented* on the RS leg:
+
+  ``f32``   passthrough (paper-faithful, bit-identical default);
+  ``bf16``  linear downcast — absorbs the old ad-hoc ``rs_dtype`` knob,
+            halves the RS wire bytes;
+  ``int8``  stochastic-rounding quantisation with per-block scales — a
+            real 4× compression point (``rs_bytes_ratio = 0.25``).
+
+  Linear codecs (f32/bf16) put the *accumulation* in the wire dtype —
+  exactly the old ``rs_dtype`` semantics, so the default is bit-identical
+  to the seed. Quantised codecs encode each contribution onto the int8
+  grid (per-block scales, stochastic rounding when a key is supplied,
+  round-to-nearest-even otherwise) and accumulate the decoded values in
+  f32; on the ring engine the RDMA hops themselves carry the int8
+  payload with a tiny f32 scale side-channel and re-quantise the partial
+  per hop (see ``kernels.rps_ring``), on the XLA engine the collective
+  is opaque so the arithmetic models a decode-at-receiver transport.
+
+:class:`Recovery` — what the receiver does about *missing* contributions:
+
+  ``renorm`` divide by the received count (the paper's Algorithm 1;
+             conditionally unbiased given the delivery pattern);
+  ``scale``  divide by the *expected* count n(1−p): unbiased zero-fill
+             gradient/model estimation (Weintraub et al., 2025) — no
+             count-dependent divisor, at the price of O(p/((1−p)n))
+             extra variance;
+  ``ef``     renorm + an error-feedback residual on the *codec* error:
+             e' = (x + e) − decode(encode(x + e)), carried as an extra
+             params-shaped leaf of trainer/simulator state and replayed
+             into the next round's send — the compression error
+             telescopes instead of compounding (EF-SGD / CHOCO style),
+             closing the quantised-wire convergence gap.
+
+Composition table and EF state lifecycle: DESIGN.md §13. The bias /
+variance constants the theory layer folds into the §6 bounds
+(:data:`WIRE_OMEGA`, :func:`recovery_alpha2_extra`) live here so there is
+exactly one source of truth for "what does this wire cost".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+WIRES = ("f32", "bf16", "int8")
+RECOVERIES = ("renorm", "scale", "ef")
+
+#: canonical wire name for every accepted spelling (plus any numpy-
+#: parseable dtype name, handled in :func:`canon_wire_dtype`)
+_ALIASES = {"f32": "float32", "fp32": "float32", "float32": "float32",
+            "bf16": "bfloat16", "bfloat16": "bfloat16",
+            "int8": "int8"}
+_NAMES = {"float32": "f32", "bfloat16": "bf16", "int8": "int8"}
+
+
+def canon_wire_dtype(wire: Any) -> jnp.dtype:
+    """The one wire-dtype canonicaliser (plan describe, dryrun report,
+    benches, exchange paths all go through here): accepts short names
+    ("f32", "bf16", "int8"), numpy/jnp dtype names ("float32",
+    "bfloat16"), jnp dtypes, and :class:`WireCodec` instances; ``None``
+    means the f32 default."""
+    if wire is None:
+        return jnp.dtype(jnp.float32)
+    if isinstance(wire, WireCodec):
+        return jnp.dtype(wire.wire_dtype)
+    if isinstance(wire, str):
+        return jnp.dtype(_ALIASES.get(wire.lower(), wire))
+    return jnp.dtype(wire)
+
+
+def canon_wire_name(wire: Any) -> str:
+    """Canonical short name ("f32" | "bf16" | "int8" | dtype name) of any
+    wire spelling — the form :class:`repro.core.plan.ExchangePlan` stores."""
+    if isinstance(wire, WireCodec):
+        return wire.name
+    dt = canon_wire_dtype(wire)
+    return _NAMES.get(dt.name, dt.name)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """Per-bucket-table encode/decode for the RS leg.
+
+    ``levels > 0`` marks a quantised codec: values are mapped onto the
+    symmetric integer grid {−levels, …, levels} with one scale per block
+    row (``encode`` reduces over every dim after ``lead``), so a block is
+    self-describing on the wire: payload in ``wire_dtype`` plus a tiny
+    f32 scale per row. ``levels == 0`` is a linear codec: encode is a
+    dtype cast, decode the identity, and the accumulation itself runs in
+    ``wire_dtype`` (the old ``rs_dtype`` semantics).
+    """
+    name: str
+    wire_dtype: Any
+    levels: int = 0
+
+    @property
+    def quantized(self) -> bool:
+        return self.levels > 0
+
+    @property
+    def accum_dtype(self):
+        """Dtype the RS sums accumulate in: the wire dtype itself for
+        linear codecs (bit-identical to the seed's rs_dtype knob), f32
+        for quantised codecs (int8 partials would overflow)."""
+        return jnp.float32 if self.quantized else jnp.dtype(self.wire_dtype)
+
+    def _delta(self, x: jax.Array, lead: int) -> jax.Array:
+        """Per-row grid step: max|x| over every dim after ``lead``,
+        divided by the level count. All-zero rows get a harmless Δ so
+        decode(encode(0)) == 0 without a divide-by-zero."""
+        red = tuple(range(lead + 1, x.ndim))
+        amax = jnp.max(jnp.abs(x), axis=red, keepdims=True)
+        return jnp.where(amax > 0, amax, 1.0) / float(self.levels)
+
+    def encode(self, x: jax.Array, key: Optional[jax.Array] = None,
+               lead: int = 0) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """x → (wire payload, scales). Linear: a cast, scales None.
+        Quantised: per-row scales over dims > ``lead``; stochastic
+        rounding with ``key`` (unbiased — the compression point the
+        convergence study exercises), round-to-nearest-even without."""
+        if not self.quantized:
+            return x.astype(self.wire_dtype), None
+        xf = x.astype(jnp.float32)
+        delta = self._delta(xf, lead)
+        y = xf / delta
+        if key is None:
+            q = jnp.round(y)
+        else:
+            f = jnp.floor(y)
+            q = f + (jax.random.uniform(key, y.shape) < (y - f))
+        q = jnp.clip(q, -self.levels, self.levels)
+        return q.astype(self.wire_dtype), delta
+
+    def decode(self, enc: jax.Array, scale: Optional[jax.Array],
+               ) -> jax.Array:
+        """Wire payload back to accumulation values (f32 × scale for
+        quantised codecs, identity for linear ones)."""
+        if not self.quantized:
+            return enc
+        return enc.astype(jnp.float32) * scale
+
+    def fake_quant(self, x: jax.Array, key: Optional[jax.Array] = None,
+                   lead: int = 0) -> jax.Array:
+        """decode(encode(x)) in the payload dtype — the value the wire
+        actually delivers. The EF recovery's residual is x − fake_quant(x);
+        exact (x itself) for the f32 codec, so f32+ef ≡ f32+renorm."""
+        if not self.quantized:
+            return x.astype(self.wire_dtype).astype(x.dtype)
+        return self.decode(*self.encode(x, key, lead)).astype(x.dtype)
+
+
+_CODECS = {
+    "f32": WireCodec("f32", jnp.float32),
+    "bf16": WireCodec("bf16", jnp.bfloat16),
+    "int8": WireCodec("int8", jnp.int8, levels=127),
+}
+
+
+def make_codec(wire: Any) -> WireCodec:
+    """Codec from any wire spelling (name / dtype / codec)."""
+    if isinstance(wire, WireCodec):
+        return wire
+    name = canon_wire_name(wire)
+    if name in _CODECS:
+        return _CODECS[name]
+    dt = canon_wire_dtype(wire)
+    if dt.kind != "f":
+        raise ValueError(f"wire={wire!r}: no codec for dtype {dt.name} "
+                         f"(known: {WIRES})")
+    return WireCodec(name, dt)          # any float dtype = a linear codec
+
+
+def resolve_codec(wire: Any, rs_dtype: Any = jnp.float32) -> WireCodec:
+    """The exchange paths' resolution rule: a non-f32 ``wire=`` wins;
+    the "f32" default (and ``None``) defers to a linear codec of the
+    legacy ``rs_dtype`` knob — which this abstraction absorbs — so every
+    pre-wire call site (including plan-defaulted paths passing
+    ``rs_dtype=bf16``) stays bit-identical."""
+    if wire is not None:
+        codec = make_codec(wire)
+        if codec.name != "f32":
+            return codec
+    return make_codec(canon_wire_name(rs_dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class Recovery:
+    """Receiver-side loss-recovery policy. ``p`` is the expected
+    per-packet drop rate the ``scale`` divisor needs (a channel's
+    ``effective_p()`` for non-i.i.d. processes); unused by the others."""
+    kind: str = "renorm"
+    p: Optional[float] = None
+
+    def __post_init__(self):
+        if self.kind not in RECOVERIES:
+            raise ValueError(
+                f"recovery={self.kind!r}, want one of {RECOVERIES}")
+
+    @property
+    def needs_state(self) -> bool:
+        """EF carries a params-shaped residual across rounds."""
+        return self.kind == "ef"
+
+    def expected_count(self, n: int) -> float:
+        """The static ``scale`` divisor n(1−p) — every worker can compute
+        it without communication, like the renorm counts. Clamped to ≥ 1
+        (the owner's own contribution always arrives)."""
+        if self.p is None:
+            raise ValueError("recovery='scale' needs the expected drop "
+                             "rate p (pass p= or a channel effective_p)")
+        return max(float(n) * (1.0 - float(self.p)), 1.0)
+
+
+def make_recovery(recovery: Any, p: Optional[float] = None) -> Recovery:
+    """Recovery from a spec string or instance, binding ``p`` for the
+    ``scale`` divisor when the instance doesn't carry one. ``None`` is
+    the paper-faithful renorm."""
+    if recovery is None:
+        return Recovery("renorm")
+    if isinstance(recovery, Recovery):
+        if recovery.kind == "scale" and recovery.p is None:
+            return dataclasses.replace(recovery, p=p)
+        return recovery
+    return Recovery(str(recovery), p=p)
+
+
+def config_wire(wire: Any, exchange_dtype: Any = "float32") -> str:
+    """The effective wire codec of a (Train/Simulator) config pair: an
+    explicit non-f32 ``wire`` wins; otherwise the legacy
+    ``exchange_dtype`` knob is absorbed — a bf16 exchange dtype *is* the
+    bf16 linear codec, so pre-§13 configs keep their meaning."""
+    name = canon_wire_name(wire)
+    if name != "f32":
+        return name
+    return canon_wire_name(exchange_dtype)
+
+
+def init_ef_state(tree: Any) -> Any:
+    """Zero EF residual matching an exchanged pytree (same shapes/dtypes;
+    for a stacked simulator tree the residual is per-worker). Carried in
+    trainer/simulator state, donated alongside params, checkpointable
+    through ``checkpoint/ckpt.py``."""
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+# ---- theory constants (consumed by core.theory) ---------------------------
+
+#: Nominal relative second moment ω = E‖decode(encode(x)) − x‖² / ‖x‖² of
+#: one codec pass — the variance knob the §6 bounds inflate α₂ by.
+#: bf16: round-to-nearest at 8 mantissa bits, |err| ≤ ε|x| with ε = 2⁻⁸,
+#: second moment ≈ ε²/3 ≈ 2⁻¹⁹·⁴ (we keep the conservative ε²/4·4/3 = 2⁻¹⁷
+#: figure to cover subnormal-edge rows). int8: per-block max scale Δ =
+#: max|x|/127, stochastic rounding error uniform in ±Δ with second moment
+#: ≤ Δ²/4; against E x² ≈ max²/3 for spread-out rows that is ω ≈
+#: 3/(4·127²). f32 is exact by definition of the pipeline.
+WIRE_OMEGA = {
+    "f32": 0.0,
+    "bf16": 2.0 ** -17,
+    "int8": 3.0 / (4.0 * 127.0 ** 2),
+}
+
+
+def codec_omega(wire: Any) -> float:
+    """ω of any wire spelling. Unregistered linear float dtypes (e.g. an
+    f16 wire) get the generic round-to-nearest figure ε²/4 with ε the
+    dtype's unit roundoff (half its machine epsilon) — consistent with
+    the bf16 entry and never silently 0 for a wire that actually rounds
+    (an f16 wire gets ω ≈ 6e-8, not the exactness of the f32 entry)."""
+    name = canon_wire_name(wire)
+    if name in WIRE_OMEGA:
+        return WIRE_OMEGA[name]
+    eps = float(jnp.finfo(canon_wire_dtype(wire)).eps) / 2.0
+    return eps * eps / 4.0
+
+
+def effective_omega(wire: Any, recovery: Any = "renorm") -> float:
+    """Codec variance *after* recovery: EF compensates the time-averaged
+    codec error, so its stationary contribution drops to the usual
+    higher-order ω² (EF-SGD matches the uncompressed rate up to O(ω²)
+    terms); renorm/scale pass ω through unchanged."""
+    w = codec_omega(wire)
+    kind = recovery.kind if isinstance(recovery, Recovery) else \
+        ("renorm" if recovery is None else str(recovery))
+    return w * w if kind == "ef" else w
+
+
+def recovery_alpha2_extra(recovery: Any, n: int, p: float) -> float:
+    """Extra α₂-style variance of the recovery divisor. renorm/ef divide
+    by the realised count (the paper's bounds already price that in);
+    ``scale`` divides by the expected count n(1−p), so the estimate
+    carries the count's relative variance p/((1−p)n) on top. All
+    policies are (conditionally) unbiased — there is no α₁ bias term."""
+    kind = recovery.kind if isinstance(recovery, Recovery) else \
+        ("renorm" if recovery is None else str(recovery))
+    if kind != "scale":
+        return 0.0
+    if p >= 1.0:
+        return 1.0
+    return float(p / ((1.0 - p) * n))

@@ -69,7 +69,9 @@ def _axis_arg(names: Tuple[str, ...]):
 def _ring_schedule_jax(blocks: jax.Array, rs_sc: jax.Array, ag_sc: jax.Array,
                        *, names: Tuple[str, ...], n: int, i: jax.Array,
                        k: int, mode: str, rs_dtype,
-                       pin: Optional[Callable] = None) -> jax.Array:
+                       pin: Optional[Callable] = None,
+                       codec=None, send: Optional[jax.Array] = None,
+                       div: Optional[jax.Array] = None) -> jax.Array:
     """The ring schedule at the JAX level — the interpret-mode engine.
 
     blocks: (S, blk[, m]) scatter-ordered local table (S = k·n);
@@ -77,6 +79,15 @@ def _ring_schedule_jax(blocks: jax.Array, rs_sc: jax.Array, ag_sc: jax.Array,
     hop for hop: chunk c's partial is initiated by device c+1 and
     accumulates contributions in ring order c+1, c+2, …, c (owner last),
     all in the wire dtype ``rs_dtype``.
+
+    Wire pipeline (DESIGN.md §13): ``send`` overrides the contribution
+    source (decoded wire-grid values — a quantised codec's fake-quant
+    table or the EF-compensated intent); a quantised ``codec``
+    additionally re-encodes the running partial on *every hop* — the
+    int8 payload plus its per-row f32 scale travel, the receiver decodes
+    before adding — exactly the transport the fused kernel RDMAs.
+    ``div`` is the (S,) f32 recovery divisor, computed by the one policy
+    point ``core.rps._divisor`` (this module never re-derives it).
     """
     if pin is None:
         def pin(x):
@@ -85,28 +96,36 @@ def _ring_schedule_jax(blocks: jax.Array, rs_sc: jax.Array, ag_sc: jax.Array,
     wide = (slice(None),) + (None,) * trail
     axis = _axis_arg(names)
     perm = [(j, (j + 1) % n) for j in range(n)]
+    src = blocks if send is None else send
     rs_i = rs_sc.astype(rs_dtype)[i]                       # (S,) my row
+    quantized = codec is not None and codec.quantized
 
     def contrib(c):
-        b = lax.dynamic_slice_in_dim(blocks, c * k, k, 0).astype(rs_dtype)
+        b = lax.dynamic_slice_in_dim(src, c * k, k, 0).astype(rs_dtype)
         m = lax.dynamic_slice_in_dim(rs_i, c * k, k, 0)
         return b * m[wide]
 
     # ---- RS phase: n−1 hops of masked partial sums (wire dtype) ----------
     acc = pin(contrib(jnp.mod(i - 1, n)))
     for t in range(n - 1):
-        acc = pin(lax.ppermute(acc, axis, perm))
+        if quantized:
+            # the hop carries the wire payload + per-row scales; the
+            # receiver decodes before accumulating (matching the kernel)
+            q, sc = codec.encode(acc, None, lead=0)
+            q = pin(lax.ppermute(q, axis, perm))
+            sc = pin(lax.ppermute(sc, axis, perm))
+            acc = codec.decode(q, sc)
+        else:
+            acc = pin(lax.ppermute(acc, axis, perm))
         acc = pin(acc + contrib(jnp.mod(i - 2 - t, n)))
 
-    # ---- turnaround: owner renormalises by the received count ------------
-    counts = jnp.sum(rs_sc.astype(jnp.float32), axis=0)    # (S,)
-    my_counts = lax.dynamic_slice_in_dim(counts, i * k, k).astype(rs_dtype)
-    if mode == "model" or mode == "grad_renorm":
-        tilde = acc / jnp.maximum(my_counts[wide], 1.0)
-    elif mode == "grad":
-        tilde = acc / float(n)
-    else:
-        raise ValueError(mode)
+    # ---- turnaround: owner applies the recovery divisor ------------------
+    if div is None:
+        from repro.core.rps import _divisor
+        from repro.core.wire import make_recovery
+        div = _divisor(make_recovery(None), mode, rs_sc, n)
+    my_div = lax.dynamic_slice_in_dim(div, i * k, k).astype(rs_dtype)
+    tilde = acc / my_div[wide]
 
     # ---- AG phase: n−1 hops broadcasting the averaged chunks -------------
     cur = pin(tilde.astype(blocks.dtype))                  # AG moves payload
@@ -134,22 +153,50 @@ def _drain_steps(n: int):
 
 
 def _make_ring_kernel(*, n: int, k: int, W: int, mode: str, rs_dtype,
-                      payload_dtype):
+                      payload_dtype, wire_dtype=None, levels: int = 0,
+                      has_enc: bool = False):
     """Kernel factory. Scalars (SMEM): my ring position and the *logical*
     device ids of the left/right ring neighbours (precomputed by the
     caller — inside a shard_map the kernel itself cannot know the full
     mesh). VMEM operands: the (S, W) table, my rs row and the ag row as
-    (S, 1) columns, and the (S, 1) received counts."""
+    (S, 1) columns, and the (S, 1) recovery divisor.
+
+    Wire pipeline (DESIGN.md §13), two orthogonal capabilities:
+
+      ``has_enc``    the contribution source arrives as a separate
+                     encoded table (qt, per-row scales qs) — decode is
+                     fused into the gated accumulate; the raw payload
+                     table stays the AG fallback. Quantised codecs and
+                     the EF recovery's compensated send both use this.
+      ``levels > 0`` the *hops* are quantised: every RS hop re-encodes
+                     the f32 partial onto the ``wire_dtype`` (int8) grid
+                     — the RDMA payload is int8 and its (k, 1) scales
+                     travel as a LANE-wide f32 side-channel in a second
+                     remote copy sharing the slot's capacity handshake.
+
+    One ``pallas_call`` per bucket in every variant — the codec never
+    adds a dispatch."""
     import jax.experimental.pallas.tpu as pltpu
     from jax.experimental import pallas as pl
 
     renorm = mode in ("model", "grad_renorm")
+    requant = levels > 0
 
     def kernel(pos_ref, left_ref, right_ref, table_ref, rs_ref, ag_ref,
-               cnt_ref, out_ref,
-               acc, send_buf, recv_buf, ag_send, ag_recv,
-               send_sem, recv_sem, ag_send_sem, ag_recv_sem,
-               cap_sem, ag_cap_sem):
+               cnt_ref, *refs):
+        if has_enc:
+            qt_ref, qs_ref = refs[0], refs[1]
+            refs = refs[2:]
+        out_ref = refs[0]
+        if requant:
+            (acc, send_buf, recv_buf, scale_send, scale_recv,
+             ag_send, ag_recv,
+             send_sem, recv_sem, ssend_sem, srecv_sem,
+             ag_send_sem, ag_recv_sem, cap_sem, ag_cap_sem) = refs[1:]
+        else:
+            (acc, send_buf, recv_buf, ag_send, ag_recv,
+             send_sem, recv_sem, ag_send_sem, ag_recv_sem,
+             cap_sem, ag_cap_sem) = refs[1:]
         i = pos_ref[0]
         left, right = left_ref[0], right_ref[0]
 
@@ -163,7 +210,11 @@ def _make_ring_kernel(*, n: int, k: int, W: int, mode: str, rs_dtype,
 
         def contrib(c):
             rows = pl.ds(c * k, k)
-            blk = table_ref[rows, :].astype(rs_dtype)          # (k, W)
+            if has_enc:     # decode fused into the gated accumulate
+                blk = qt_ref[rows, :].astype(rs_dtype) \
+                    * qs_ref[rows, :].astype(rs_dtype)
+            else:
+                blk = table_ref[rows, :].astype(rs_dtype)      # (k, W)
             m = rs_ref[rows, :].astype(rs_dtype)               # (k, 1)
             return blk * m
 
@@ -173,35 +224,62 @@ def _make_ring_kernel(*, n: int, k: int, W: int, mode: str, rs_dtype,
         for t in range(n - 1):
             slot = t % 2
             if t >= 2:
-                rs_dmas[t - 2].wait_send()       # send_buf[slot] reusable
-                # right neighbour drained its recv_buf[slot] two hops ago
+                for d in rs_dmas[t - 2]:
+                    d.wait_send()                # slot buffers reusable
+                # right neighbour drained its recv slot two hops ago
                 pltpu.semaphore_wait(cap_sem.at[slot], 1)
-            send_buf[slot] = acc[...]
+            hop_dmas = []
+            if requant:
+                # re-encode the partial onto the wire grid: int8 payload
+                # + per-row scale side-channel (same slot, own DMA)
+                amax = jnp.max(jnp.abs(acc[...]), axis=1, keepdims=True)
+                delta = jnp.where(amax > 0, amax, 1.0) / float(levels)
+                q = jnp.clip(jnp.round(acc[...] / delta),
+                             -levels, levels)
+                send_buf[slot] = q.astype(wire_dtype)
+                scale_send[slot] = jnp.broadcast_to(
+                    delta, scale_send.shape[1:])
+                sdma = pltpu.make_async_remote_copy(
+                    src_ref=scale_send.at[slot],
+                    dst_ref=scale_recv.at[slot],
+                    send_sem=ssend_sem.at[slot],
+                    recv_sem=srecv_sem.at[slot],
+                    device_id=right,
+                    device_id_type=pltpu.DeviceIdType.LOGICAL)
+                sdma.start()
+                hop_dmas.append(sdma)
+            else:
+                send_buf[slot] = acc[...]
             dma = pltpu.make_async_remote_copy(
                 src_ref=send_buf.at[slot], dst_ref=recv_buf.at[slot],
                 send_sem=send_sem.at[slot], recv_sem=recv_sem.at[slot],
                 device_id=right,
                 device_id_type=pltpu.DeviceIdType.LOGICAL)
             dma.start()
-            rs_dmas.append(dma)
+            hop_dmas.append(dma)
+            rs_dmas.append(hop_dmas)
             # overlap: while the partial flies, build our own gated
             # contribution for the chunk about to land
             ctr = contrib(lax.rem(i + 2 * n - 2 - t, n))
-            dma.wait_recv()
-            acc[...] = recv_buf[slot] + ctr
+            for d in hop_dmas:
+                d.wait_recv()
+            if requant:     # decode the landed partial before adding
+                landed = recv_buf[slot].astype(rs_dtype) \
+                    * scale_recv[slot][:, :1]
+            else:
+                landed = recv_buf[slot]
+            acc[...] = landed + ctr
             pltpu.semaphore_signal(
                 cap_sem.at[slot], inc=1, device_id=left,
                 device_id_type=pltpu.DeviceIdType.LOGICAL)
         for t in _drain_steps(n):
-            rs_dmas[t].wait_send()
+            for d in rs_dmas[t]:
+                d.wait_send()
             pltpu.semaphore_wait(cap_sem.at[t % 2], 1)
 
-        # ---- turnaround: in-kernel renormalisation ---------------------
-        my_cnt = cnt_ref[pl.ds(i * k, k), :]                  # (k, 1)
-        if renorm:
-            tilde = acc[...] / jnp.maximum(my_cnt, 1.0)
-        else:
-            tilde = acc[...] / float(n)
+        # ---- turnaround: in-kernel recovery divisor --------------------
+        my_div = cnt_ref[pl.ds(i * k, k), :]                  # (k, 1)
+        tilde = acc[...] / my_div
         mine = tilde.astype(payload_dtype)                    # (k, W)
 
         # ---- AG phase: select-as-it-lands ------------------------------
@@ -244,21 +322,36 @@ def _make_ring_kernel(*, n: int, k: int, W: int, mode: str, rs_dtype,
 
 
 @functools.partial(jax.jit, static_argnames=("n", "k", "mode", "rs_dtype",
-                                             "collective_id", "interpret"))
+                                             "collective_id", "interpret",
+                                             "levels"))
 def ring_bucket_fused(table: jax.Array, rs_row: jax.Array, ag_row: jax.Array,
                       counts: jax.Array, pos: jax.Array, left: jax.Array,
                       right: jax.Array, *, n: int, k: int, mode: str,
                       rs_dtype=jnp.float32, collective_id: int = 7,
-                      interpret: bool = False) -> jax.Array:
+                      interpret: bool = False,
+                      qtable: Optional[jax.Array] = None,
+                      qscale: Optional[jax.Array] = None,
+                      levels: int = 0) -> jax.Array:
     """One bucket's full drop-masked RS+AG round as a single Pallas
     dispatch (TPU only; the lowering is export-checked on any host).
 
     table:  (S, W) local payload, scatter-ordered, W a multiple of 128;
-    rs_row: (S, 1) this device's RS-mask row in the wire dtype;
+    rs_row: (S, 1) this device's RS-mask row in the accumulation dtype;
     ag_row: (S, 1) this device's AG-mask row (nonzero = delivered);
-    counts: (S, 1) per-block received counts, wire dtype;
+    counts: (S, 1) per-block recovery divisor, accumulation dtype (the
+            received count pre-clamped to ≥ 1 for renorm/ef, n for the
+            naive grad mode, n(1−p) for the scale recovery — the kernel
+            divides by it verbatim);
     pos/left/right: (1,) int32 — ring position and the *logical* device
     ids of the ring neighbours (see :func:`logical_ring_ids`).
+
+    Wire pipeline (DESIGN.md §13): ``qtable``/``qscale`` supply an
+    encoded contribution table — (S, W) wire-dtype payload with (S, 1)
+    f32 per-row scales, decode fused into the in-kernel accumulate (the
+    int8 codec, or an EF-compensated send with unit scales). ``levels``
+    > 0 additionally re-encodes every RS hop onto the int8 grid (the
+    RDMA payload is int8 plus a scale side-channel). Still exactly one
+    dispatch in every variant.
 
     The table is donated into the output (``input_output_aliases``): the
     dispatch runs in place, no second (S, W) buffer.
@@ -271,34 +364,63 @@ def ring_bucket_fused(table: jax.Array, rs_row: jax.Array, ag_row: jax.Array,
         raise ValueError(f"table rows {S} != k*n = {k * n}")
     if W % LANE:
         raise ValueError(f"W={W} must be a multiple of {LANE}")
+    has_enc = qtable is not None
+    if has_enc and qscale is None:
+        raise ValueError("qtable needs qscale")
+    if levels > 0 and not has_enc:
+        raise ValueError("levels > 0 needs qtable/qscale")
     rs_dtype = jnp.dtype(rs_dtype)
-    kernel = _make_ring_kernel(n=n, k=k, W=W, mode=mode, rs_dtype=rs_dtype,
-                               payload_dtype=table.dtype)
+    kernel = _make_ring_kernel(
+        n=n, k=k, W=W, mode=mode, rs_dtype=rs_dtype,
+        payload_dtype=table.dtype,
+        wire_dtype=None if not has_enc else jnp.dtype(qtable.dtype),
+        levels=levels, has_enc=has_enc)
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
     vmem = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM)
+    in_specs = [smem, smem, smem, vmem, vmem, vmem, vmem]
+    args = [pos, left, right, table, rs_row, ag_row, counts]
+    if has_enc:
+        in_specs += [vmem, vmem]
+        args += [qtable, qscale]
+    wire_slot_dtype = qtable.dtype if levels > 0 else rs_dtype
+    comm = [
+        pltpu.VMEM((k, W), rs_dtype),               # acc
+        pltpu.VMEM((2, k, W), wire_slot_dtype),     # RS send slots
+        pltpu.VMEM((2, k, W), wire_slot_dtype),     # RS recv slots
+    ]
+    if levels > 0:
+        comm += [
+            pltpu.VMEM((2, k, LANE), jnp.float32),  # scale send slots
+            pltpu.VMEM((2, k, LANE), jnp.float32),  # scale recv slots
+        ]
+    comm += [
+        pltpu.VMEM((2, k, W), table.dtype),         # AG send slots
+        pltpu.VMEM((2, k, W), table.dtype),         # AG recv slots
+        pltpu.SemaphoreType.DMA((2,)),              # RS send sems
+        pltpu.SemaphoreType.DMA((2,)),              # RS recv sems
+    ]
+    if levels > 0:
+        comm += [
+            pltpu.SemaphoreType.DMA((2,)),          # scale send sems
+            pltpu.SemaphoreType.DMA((2,)),          # scale recv sems
+        ]
+    comm += [
+        pltpu.SemaphoreType.DMA((2,)),              # AG send sems
+        pltpu.SemaphoreType.DMA((2,)),              # AG recv sems
+        pltpu.SemaphoreType.REGULAR((2,)),          # RS capacity handshake
+        pltpu.SemaphoreType.REGULAR((2,)),          # AG capacity handshake
+    ]
     return pl.pallas_call(
         kernel,
-        in_specs=[smem, smem, smem, vmem, vmem, vmem, vmem],
+        in_specs=in_specs,
         out_specs=vmem,
         out_shape=jax.ShapeDtypeStruct((S, W), table.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((k, W), rs_dtype),           # acc
-            pltpu.VMEM((2, k, W), rs_dtype),        # RS send slots
-            pltpu.VMEM((2, k, W), rs_dtype),        # RS recv slots
-            pltpu.VMEM((2, k, W), table.dtype),     # AG send slots
-            pltpu.VMEM((2, k, W), table.dtype),     # AG recv slots
-            pltpu.SemaphoreType.DMA((2,)),          # RS send sems
-            pltpu.SemaphoreType.DMA((2,)),          # RS recv sems
-            pltpu.SemaphoreType.DMA((2,)),          # AG send sems
-            pltpu.SemaphoreType.DMA((2,)),          # AG recv sems
-            pltpu.SemaphoreType.REGULAR((2,)),      # RS capacity handshake
-            pltpu.SemaphoreType.REGULAR((2,)),      # AG capacity handshake
-        ],
+        scratch_shapes=comm,
         input_output_aliases={3: 0},                # donate the table
         compiler_params=pltpu.TPUCompilerParams(
             collective_id=collective_id),
         interpret=interpret,
-    )(pos, left, right, table, rs_row, ag_row, counts)
+    )(*args)
 
 
 def logical_ring_ids(names: Tuple[str, ...],
@@ -364,7 +486,11 @@ def ring_exchange_scatter_table(blocks: jax.Array, rs_sc: jax.Array,
                                 rs_dtype=jnp.float32,
                                 pin: Optional[Callable] = None,
                                 ring_ids=None,
-                                use_kernel: Optional[bool] = None
+                                use_kernel: Optional[bool] = None,
+                                codec=None,
+                                enc=None,
+                                send: Optional[jax.Array] = None,
+                                div: Optional[jax.Array] = None
                                 ) -> jax.Array:
     """Ring-engine exchange of one scatter-ordered (S, blk[, m]) table.
 
@@ -374,50 +500,91 @@ def ring_exchange_scatter_table(blocks: jax.Array, rs_sc: jax.Array,
     ppermute ring everywhere else. ``ring_ids`` supplies precomputed
     (pos, left, right) logical ids for multi-axis meshes
     (:func:`logical_ring_ids`); defaults to a ring over the whole mesh.
+
+    Wire pipeline (DESIGN.md §13): a quantised ``codec`` routes through
+    the int8-wire kernel variant — ``enc`` is the precomputed
+    ``codec.encode`` pair of this device's (scatter-ordered) send table,
+    decode fused into the in-kernel accumulate, every RS hop re-encoded.
+    ``send`` overrides the contribution source for *linear* codecs (the
+    EF-compensated intent); ``div`` is the (S,) f32 recovery divisor
+    (None = legacy renorm/grad computation).
     """
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu" and pin is None
+    quantized = codec is not None and codec.quantized
     if not use_kernel:
+        dec = codec.decode(*enc) if quantized and send is None else send
         return _ring_schedule_jax(blocks, rs_sc, ag_sc, names=names, n=n,
                                   i=i, k=k, mode=mode, rs_dtype=rs_dtype,
-                                  pin=pin)
+                                  pin=pin, codec=codec, send=dec, div=div)
     shape = blocks.shape
     S = shape[0]
     W = 1
     for d in shape[1:]:
         W *= d
     pad = (-W) % LANE
-    tbl = blocks.reshape(S, W)
-    if pad:
-        tbl = jnp.pad(tbl, ((0, 0), (0, pad)))
+
+    def widen(x, fill=0.0):
+        x = x.reshape(S, -1)
+        return jnp.pad(x, ((0, 0), (0, pad)), constant_values=fill) \
+            if pad else x
+
+    tbl = widen(blocks)
     rs_f = rs_sc.astype(rs_dtype)
     rs_row = rs_f[i][:, None]
     ag_row = (ag_sc[i][:, None] != 0).astype(jnp.float32)
-    counts = jnp.sum(rs_f.astype(jnp.float32), axis=0)[:, None] \
-        .astype(rs_dtype)
+    if div is None:
+        from repro.core.rps import _divisor
+        from repro.core.wire import make_recovery
+        div = _divisor(make_recovery(None), mode, rs_sc, n)
+    cnt = div[:, None].astype(rs_dtype)
     if ring_ids is None:
         ring_ids = logical_ring_ids(names)
     pos, left, right = (r.reshape(1).astype(jnp.int32) for r in ring_ids)
-    out = ring_bucket_fused(tbl, rs_row, ag_row, counts, pos, left, right,
-                            n=n, k=k, mode=mode, rs_dtype=rs_dtype)
+    qt = qs = None
+    levels = 0
+    if quantized:
+        q, sc = enc if enc is not None else codec.encode(blocks, None)
+        qt = widen(q)                      # wire-dtype table, decode fused
+        qs = sc.reshape(S, -1)[:, :1].astype(jnp.float32)
+        levels = codec.levels
+    elif send is not None:
+        # EF-compensated intent on a linear wire: the send table replaces
+        # the raw payload as the contribution source (unit scales, no hop
+        # requant); the AG fallback stays the raw donated ``table``
+        qt = widen(send).astype(rs_dtype)
+        qs = jnp.ones((S, 1), jnp.float32)
+    out = ring_bucket_fused(tbl, rs_row, ag_row, cnt, pos, left, right,
+                            n=n, k=k, mode=mode, rs_dtype=rs_dtype,
+                            qtable=qt, qscale=qs, levels=levels)
     if pad:
         out = out[:, :W]
     return out.reshape(shape)
 
 
 def ring_global_sums(stack: jax.Array, rs_g: jax.Array, own: jax.Array, *,
-                     rs_dtype=jnp.float32) -> jax.Array:
+                     rs_dtype=jnp.float32, codec=None) -> jax.Array:
     """Single-device (global-view) replay of the ring RS arithmetic:
     ``stack`` (G, n, s, d) worker contributions, ``rs_g`` (G, n, s) f32
     masks, ``own`` (s,) block owners. Returns (G, s, d) masked sums
     accumulated **in ring order in the wire dtype** — contributions for
     block j added in order owner+1, …, owner+n−1, owner, each gated and
     cast to ``rs_dtype`` first, exactly like the collective ring engine.
-    Lets the simulator study bf16-wire convergence without a TPU."""
+    Lets the simulator study bf16-wire convergence without a TPU.
+
+    A quantised ``codec`` re-encodes the running partial between hops
+    (per-(g, block) scales over d), replaying the int8-wire transport;
+    ``stack`` should then hold the already-decoded (fake-quant) send
+    values, exactly like the collective path's contribution source."""
     G, n, s, d = stack.shape
     rs_w = rs_g.astype(rs_dtype)
+    quantized = codec is not None and codec.quantized
 
     def hop(acc, t):
+        if quantized:
+            # requant(0) = 0, so the t=1 pass-through is exact and every
+            # later hop decodes what the wire carried (scales per row)
+            acc = codec.decode(*codec.encode(acc, None, lead=1))
         idx = jnp.mod(own + t, n)                          # (s,)
         cols = jnp.arange(s)
         contrib = stack[:, idx, cols, :].astype(rs_dtype) \

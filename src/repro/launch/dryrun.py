@@ -39,7 +39,8 @@ DROP_RATE = 0.1          # the paper's headline tolerance
 # §Perf hillclimb overrides (set from CLI; None = paper-faithful baseline)
 OVERRIDES = {"exchange_dtype": "float32", "exchange_every": 1,
              "capacity_factor": None, "remat_budget": None,
-             "bucket_mb": None, "n_buckets": None, "engine": "xla"}
+             "bucket_mb": None, "n_buckets": None, "engine": "xla",
+             "wire": "f32", "recovery": "renorm"}
 
 
 def pick_microbatch(cfg: ArchConfig, b_local: int, seq: int,
@@ -97,7 +98,9 @@ def build_train_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh,
                        exchange_every=OVERRIDES["exchange_every"],
                        bucket_mb=OVERRIDES["bucket_mb"],
                        n_buckets=OVERRIDES["n_buckets"],
-                       engine=OVERRIDES["engine"])
+                       engine=OVERRIDES["engine"],
+                       wire=OVERRIDES["wire"],
+                       recovery=OVERRIDES["recovery"])
     init_state, train_step, state_shardings = make_train_setup(
         model, cfg, tcfg, mesh, rps_axes=rps_axes, fsdp_axis=fsdp_axis)
 
@@ -120,17 +123,26 @@ def build_train_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh,
     bspec = shlib.batch_spec(batch, worker_axes, data_axes)
     batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), bspec)
 
+    # the ef recovery carries a params-shaped residual (arg 6, after the
+    # always-None ch_state slot of these channel-less dryrun configs)
+    efp = getattr(train_step, "init_ef_state", None) is not None
+    in_sh = (param_sh, opt_sh, batch_sh, None, None) \
+        + ((None, param_sh) if efp else ())
+    out_sh = (param_sh, opt_sh, None) + ((param_sh,) if efp else ())
     step = jax.jit(train_step,
-                   in_shardings=(param_sh, opt_sh, batch_sh, None, None),
-                   out_shardings=(param_sh, opt_sh, None),
+                   in_shardings=in_sh,
+                   out_shardings=out_sh,
                    donate_argnums=train_step.donate_argnums)
     with jax.set_mesh(mesh):      # with_sharding_constraint needs a context
         lowered = step.lower(params_shape, opt_shape, batch,
-                             jnp.int32(0), jax.random.PRNGKey(0))
+                             jnp.int32(0), jax.random.PRNGKey(0),
+                             *((None, params_shape) if efp else ()))
     # static exchange cost straight from the plan (DESIGN.md §11): the RPS
     # round is exactly 2 collectives per bucket, volume known pre-compile
+    # the plan carries its own wire codec (config_wire absorbed the
+    # legacy exchange_dtype knob) — describe() prices the RS leg with it
     info = {"n_rps": n_rps, "microbatch": mb, "aggregator": agg,
-            "exchange_plan": train_step.plan.describe(tcfg.exchange_dtype)
+            "exchange_plan": train_step.plan.describe()
             if train_step.plan is not None else None}
     return lowered, info
 
@@ -300,7 +312,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
               f"{ep['collectives_per_round']} RPS collectives/round, "
               f"{ep['wire_bytes_per_round']/1e6:.1f} MB wire/round "
               f"(pad {ep['pad_frac']*100:.1f}%, "
-              f"model_packets={ep['model_packets']})")
+              f"model_packets={ep['model_packets']}, "
+              f"wire={ep['wire']}/{ep['recovery']}, "
+              f"rs_bytes_ratio={ep['rs_bytes_ratio']:.2f})")
     if verbose:
         print(f"[{arch} × {shape_name} × {mesh_desc}] compile {t_compile:.1f}s"
               f" | hbm/dev {report.hbm_per_device/1e9:.2f} GB"
@@ -346,6 +360,14 @@ def main():
                          "collectives/bucket; ring = fused ring engine "
                          "(1 Pallas dispatch/bucket on TPU); auto = ring "
                          "on TPU")
+    ap.add_argument("--wire", default="f32",
+                    choices=["f32", "bf16", "int8"],
+                    help="RS-leg wire codec (DESIGN.md §13); int8 = 4x "
+                         "RS compression, per-block scales")
+    ap.add_argument("--recovery", default="renorm",
+                    choices=["renorm", "scale", "ef"],
+                    help="loss-recovery policy (DESIGN.md §13); ef adds "
+                         "a params-shaped residual carry to train_step")
     args = ap.parse_args()
     OVERRIDES.update(exchange_dtype=args.exchange_dtype,
                      exchange_every=args.exchange_every,
@@ -353,7 +375,9 @@ def main():
                      remat_budget=args.remat_budget,
                      bucket_mb=args.bucket_mb,
                      n_buckets=args.buckets,
-                     engine=args.engine)
+                     engine=args.engine,
+                     wire=args.wire,
+                     recovery=args.recovery)
 
     archs = ARCH_IDS if (args.sweep or args.arch is None) else [args.arch]
     shapes = list(SHAPES) if (args.sweep or args.shape is None) \

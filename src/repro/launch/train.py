@@ -69,7 +69,23 @@ def main():
     ap.add_argument("--exchange-dtype", default="float32",
                     choices=["float32", "bfloat16"],
                     help="RS wire/accumulation dtype for --engine ring "
-                         "(bf16 halves RS bytes on a real fabric)")
+                         "(bf16 halves RS bytes on a real fabric); "
+                         "absorbed by --wire, which wins when set")
+    ap.add_argument("--wire", default="f32",
+                    choices=["f32", "bf16", "int8"],
+                    help="RS-leg wire codec (DESIGN.md §13): f32 = "
+                         "paper-faithful passthrough (bit-identical "
+                         "default), bf16 = half the RS bytes, int8 = "
+                         "quarter (stochastic rounding, per-block "
+                         "scales)")
+    ap.add_argument("--recovery", default="renorm",
+                    choices=["renorm", "scale", "ef"],
+                    help="loss-recovery policy (DESIGN.md §13): renorm "
+                         "= paper Algorithm 1 (divide by the received "
+                         "count), scale = unbiased 1/(1-p) zero-fill, "
+                         "ef = error-feedback residual on the codec "
+                         "error (extra params-shaped state, donated & "
+                         "checkpointable)")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--warmup", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
@@ -95,7 +111,8 @@ def main():
         warmup=args.warmup, batch_size=args.batch_size, seed=args.seed,
         channel=args.channel, n_servers=args.servers,
         bucket_mb=args.bucket_mb, n_buckets=args.buckets,
-        engine=args.engine, exchange_dtype=args.exchange_dtype)
+        engine=args.engine, exchange_dtype=args.exchange_dtype,
+        wire=args.wire, recovery=args.recovery)
     t0 = time.time()
     hist = run_simulation(loss_fn, model.init, batch_fn, scfg)
     dt = time.time() - t0
@@ -105,7 +122,9 @@ def main():
         ep = hist["exchange_plan"]
         print(f"exchange plan: {ep['n_buckets']} buckets × s={ep['s']} -> "
               f"{ep['collectives_per_round']} collectives/round, "
-              f"model_packets={ep['model_packets']}")
+              f"model_packets={ep['model_packets']}, "
+              f"wire={ep['wire']}/{ep['recovery']} "
+              f"(rs_bytes_ratio={ep['rs_bytes_ratio']:.2f})")
     print(f"n={args.workers} s={args.servers or args.workers} "
           f"p={args.drop_rate} agg={args.aggregator} "
           f"final_loss={hist['final_loss']:.4f} "
@@ -117,7 +136,9 @@ def main():
         print("checkpoint ->", args.checkpoint)
     if args.out:
         hist.pop("params")
-        hist.pop("channel_state")          # jax pytree, not JSON
+        hist.pop("channel_state")          # jax pytrees, not JSON
+        hist.pop("ef_state")
+        hist.pop("state")
         with open(args.out, "w") as f:
             json.dump(hist, f, indent=1)
         print("history ->", args.out)

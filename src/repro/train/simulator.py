@@ -31,6 +31,7 @@ import numpy as np
 from repro import channels as channels_lib
 from repro.core import plan as plan_lib
 from repro.core import rps as rps_lib
+from repro.core import wire as wire_lib
 from repro.optim import make_optimizer
 
 
@@ -71,7 +72,20 @@ class SimulatorConfig:
     exchange_dtype: str = "float32"
     # RS wire/accumulation dtype for engine="ring" (bf16 = half the RS
     # bytes on the real fabric; here it makes the simulator's arithmetic
-    # match that wire).
+    # match that wire). Absorbed by the wire pipeline below: a non-f32
+    # ``wire`` wins; a non-f32 exchange_dtype with wire unset selects
+    # the matching linear codec.
+    wire: str = "f32"
+    # RS-leg codec (DESIGN.md §13): "f32" (bit-identical default),
+    # "bf16" (half the RS bytes), "int8" (quarter — stochastic-rounding
+    # quantisation with per-block scales).
+    recovery: str = "renorm"
+    # loss-recovery policy (DESIGN.md §13): "renorm" = paper Algorithm 1
+    # (divide by the received count), "scale" = unbiased 1/(1−p)
+    # zero-fill (divisor n(1−p) at the channel's effective_p), "ef" =
+    # renorm + an error-feedback residual on the codec error, carried
+    # as an extra params-shaped leaf of step state (donated,
+    # checkpointable).
     donate: bool = True
     # donate params/opt_state/channel state into the jitted step
     # (donate_argnums) so the sweep never double-buffers the model;
@@ -80,33 +94,46 @@ class SimulatorConfig:
 
 
 def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool,
-              masks=None, plan=None):
+              masks=None, plan=None, recovery=None, ef_state=None):
     n = scfg.n_workers
     agg = scfg.aggregator
+    use_ef = ef_state is not None
     if agg == "local":
-        return tree
+        return (tree, ef_state) if use_ef else tree
     if agg.startswith("allreduce"):
-        return jax.tree.map(
+        out = jax.tree.map(
             lambda x: jnp.broadcast_to(jnp.mean(x, 0, keepdims=True),
                                        x.shape), tree)
+        return (out, ef_state) if use_ef else out
     mode = "grad" if is_grad else "model"
     return rps_lib.rps_exchange_global(
         tree, key, scfg.drop_rate, n, mode=mode, masks=masks,
         s=scfg.n_servers, plan=plan, engine=scfg.engine,
-        rs_dtype=jnp.dtype(scfg.exchange_dtype))
+        rs_dtype=jnp.dtype(scfg.exchange_dtype),
+        recovery=recovery, ef_state=ef_state)
+
+
+def resolve_wire(scfg) -> str:
+    """The config's effective wire codec (duck-typed over
+    SimulatorConfig / TrainConfig): :func:`repro.core.wire.config_wire`
+    over the ``wire`` + legacy ``exchange_dtype`` knobs."""
+    return wire_lib.config_wire(scfg.wire, scfg.exchange_dtype)
 
 
 def make_exchange_plan(params: Any, scfg: SimulatorConfig):
     """The :class:`repro.core.plan.ExchangePlan` a config prescribes, built
     from a *per-worker* param tree (no stacked dim): per-leaf legacy when
     the bucket knobs are unset (bit-identical to the seed), fixed-byte /
-    count-balanced coalescing otherwise (DESIGN.md §11)."""
+    count-balanced coalescing otherwise (DESIGN.md §11). The §13 wire
+    pipeline rides on the plan (``wire``/``recovery`` fields)."""
     if not scfg.aggregator.startswith("rps"):
         return None
     return plan_lib.plan_from_config(params, scfg.n_workers, scfg.n_servers,
                                      bucket_mb=scfg.bucket_mb,
                                      n_buckets=scfg.n_buckets,
-                                     engine=scfg.engine)
+                                     engine=scfg.engine,
+                                     wire=resolve_wire(scfg),
+                                     recovery=scfg.recovery)
 
 
 def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
@@ -114,17 +141,27 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
     """The jitted simulator step, factored out so tests and benchmarks can
     inspect its compilation (donation, peak memory) directly.
 
-    Hot-path buffers are donated (``donate_argnums``: params, opt_state
-    and the channel state) unless ``scfg.donate`` is False — a 100M-param
-    sweep otherwise double-buffers the whole model every step.
-    signature: step(params, opt_state, batch, key, lr, ch_state,
-    exchange=True) -> (params, opt_state, loss, consensus, ch_state).
+    Hot-path buffers are donated (``donate_argnums``: params, opt_state,
+    the channel state and — for the ``ef`` recovery — the EF residual)
+    unless ``scfg.donate`` is False — a 100M-param sweep otherwise
+    double-buffers the whole model every step.
+    signature: step(params, opt_state, batch, key, lr, ch_state
+    [, ef_state], exchange=True) -> (params, opt_state, loss, consensus,
+    ch_state[, ef_state]) — the EF slot appears exactly when
+    ``scfg.recovery == "ef"`` on an rps aggregator (the residual is an
+    extra stacked params-shaped leaf of step state, DESIGN.md §13).
     """
     n = scfg.n_workers
     is_grad_mode = scfg.aggregator.endswith("_grad")
     rps_agg = scfg.aggregator.startswith("rps")
+    use_ef = rps_agg and scfg.recovery == "ef"
+    # the scale divisor uses the channel's stationary marginal, not the
+    # raw drop_rate knob (they differ for GE/hetero/trace channels)
+    recovery = wire_lib.make_recovery(
+        scfg.recovery, p=channel.effective_p()) if rps_agg else None
 
-    def step_fn(params, opt_state, batch, key, lr, ch_state, exchange=True):
+    def step_fn(params, opt_state, batch, key, lr, ch_state,
+                ef_state=None, exchange=True):
         def total(ps, bs):
             return jnp.sum(jax.vmap(loss_fn)(ps, bs))
 
@@ -139,33 +176,44 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
         loss, grads = jax.value_and_grad(total)(params, batch)
         if is_grad_mode:
             if exchange:
-                grads = _exchange(grads, key, scfg, is_grad=True,
-                                  masks=masks, plan=plan)
+                out = _exchange(grads, key, scfg, is_grad=True,
+                                masks=masks, plan=plan, recovery=recovery,
+                                ef_state=ef_state if use_ef else None)
+                grads, ef_state = out if use_ef else (out, ef_state)
             params, opt_state = opt.update(grads, opt_state, params, lr)
         else:
             params, opt_state = opt.update(grads, opt_state, params, lr)
             if exchange:
-                params = _exchange(params, key, scfg, is_grad=False,
-                                   masks=masks, plan=plan)
+                out = _exchange(params, key, scfg, is_grad=False,
+                                masks=masks, plan=plan, recovery=recovery,
+                                ef_state=ef_state if use_ef else None)
+                params, ef_state = out if use_ef else (out, ef_state)
         mean_p = jax.tree.map(lambda x: jnp.mean(x, 0, keepdims=True), params)
         consensus = jax.tree.reduce(
             lambda a, x: a + jnp.sum(jnp.square(x.astype(jnp.float32))),
             jax.tree.map(lambda x, m: x - m, params, mean_p), jnp.float32(0))
-        return params, opt_state, loss / n, consensus, ch_state
+        base = (params, opt_state, loss / n, consensus, ch_state)
+        return base + ((ef_state,) if use_ef else ())
 
-    donate = (0, 1, 5) if scfg.donate else ()
+    donate = ((0, 1, 5) + ((6,) if use_ef else ())) if scfg.donate else ()
     return jax.jit(step_fn, static_argnames=("exchange",),
                    donate_argnums=donate)
 
 
 def run_simulation(loss_fn: Callable, init_fn: Callable,
                    batch_fn: Callable, scfg: SimulatorConfig,
-                   eval_fn: Optional[Callable] = None) -> Dict[str, Any]:
+                   eval_fn: Optional[Callable] = None,
+                   state: Optional[Dict[str, Any]] = None,
+                   start_step: int = 0) -> Dict[str, Any]:
     """loss_fn(params, batch) -> scalar; init_fn(key) -> params;
     batch_fn(step) -> stacked batch pytree with leading dim n_workers.
 
     Returns history dict with per-eval mean loss and consensus distance
-    (the Lemma-3 quantity Σ_i ‖x_i − x̄‖²).
+    (the Lemma-3 quantity Σ_i ‖x_i − x̄‖²), plus the full carried state
+    under ``"state"`` (params, opt_state, channel and EF-residual state)
+    — a checkpointable pytree bundle (``checkpoint.ckpt``). Passing it
+    back via ``state=``/``start_step=`` resumes the run bitwise
+    identically (the per-step keys/lr are functions of the step index).
     """
     n = scfg.n_workers
     key = jax.random.PRNGKey(scfg.seed)
@@ -181,8 +229,16 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
     channel = channels_lib.make_channel(scfg.channel, n, scfg.drop_rate,
                                         s=scfg.n_servers)
     rps_agg = scfg.aggregator.startswith("rps")
+    use_ef = rps_agg and scfg.recovery == "ef"
     ch_state = channel.init_state(jax.random.fold_in(key, 0x636831)) \
         if rps_agg else None
+    # EF residual: per-worker, params-shaped, zero at start (DESIGN §13)
+    ef_state = wire_lib.init_ef_state(params) if use_ef else None
+    if state is not None:       # resume from a checkpointed bundle
+        params = state["params"]
+        opt_state = state["opt_state"]
+        ch_state = state.get("ch_state", ch_state)
+        ef_state = state.get("ef_state", ef_state)
     # the exchange layout, computed once — never inside the jitted step
     # (DESIGN.md §11); grads share the params' tree so one plan serves both
     plan = make_exchange_plan(p1, scfg)
@@ -194,13 +250,19 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
                else 0.0,
                "exchange_plan": plan.describe() if plan is not None
                else None}
-    for t in range(scfg.steps):
+    for t in range(start_step, scfg.steps):
         kt = jax.random.fold_in(key, t)
         lr = scfg.lr * min(1.0, (t + 1) / max(scfg.warmup, 1))
         batch = batch_fn(t)
-        params, opt_state, loss, consensus, ch_state = step_fn(
+        outs = step_fn(
             params, opt_state, batch, kt, jnp.float32(lr), ch_state,
+            *((ef_state,) if use_ef else ()),
             exchange=(t % scfg.exchange_every == 0))
+        if use_ef:
+            (params, opt_state, loss, consensus, ch_state,
+             ef_state) = outs
+        else:
+            params, opt_state, loss, consensus, ch_state = outs
         if t % scfg.eval_every == 0 or t == scfg.steps - 1:
             history["step"].append(t)
             history["loss"].append(float(loss))
@@ -213,4 +275,7 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
     # final channel state: lets callers verify channel time advanced once
     # per wall-clock step (exchanged or skipped — DESIGN.md §9)
     history["channel_state"] = ch_state
+    history["ef_state"] = ef_state
+    history["state"] = {"params": params, "opt_state": opt_state,
+                        "ch_state": ch_state, "ef_state": ef_state}
     return history

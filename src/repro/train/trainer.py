@@ -40,6 +40,7 @@ from repro import channels as channels_lib
 from repro.configs.base import ArchConfig
 from repro.core import plan as plan_lib
 from repro.core import rps as rps_lib
+from repro.core import wire as wire_lib
 from repro.launch import sharding as shlib
 from repro.models.registry import Model
 from repro.optim import make_optimizer
@@ -86,6 +87,21 @@ class TrainConfig:
                                            # interpret ppermute ring
                                            # elsewhere); "auto" = ring on
                                            # TPU, xla elsewhere.
+    wire: str = "f32"                      # RS-leg codec (DESIGN.md §13):
+                                           # "f32" bit-identical default,
+                                           # "bf16" (absorbs a bf16
+                                           # exchange_dtype), "int8"
+                                           # stochastic-rounding with
+                                           # per-block scales.
+    recovery: str = "renorm"               # loss recovery (DESIGN.md
+                                           # §13): "renorm" = paper
+                                           # Algorithm 1, "scale" =
+                                           # unbiased 1/(1−p) zero-fill,
+                                           # "ef" = error-feedback
+                                           # residual — train_step then
+                                           # carries a params-shaped
+                                           # residual (see
+                                           # make_train_setup).
 
 
 def _is_model_mode(agg: str) -> bool:
@@ -141,6 +157,14 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
     replicated — every device evolves it identically from the shared key,
     like the masks themselves.
 
+    With ``tcfg.recovery == "ef"`` (DESIGN.md §13) the step additionally
+    carries the error-feedback residual — a params-shaped, params-sharded
+    pytree: ``train_step(params, opt_state, batch, step, key, ch_state,
+    ef_state)`` (``ch_state`` stays ``None`` for channel-less configs)
+    returning ``(…, ef_state)`` last; the zero initial residual comes
+    from ``train_step.init_ef_state(params)``. Both carries are listed in
+    ``train_step.donate_argnums``.
+
     The exchange layout is precomputed here (``train_step.plan``, an
     :class:`repro.core.plan.ExchangePlan`): param specs and local shapes
     are derived once via ``jax.eval_shape`` — nothing shape-related runs
@@ -158,6 +182,11 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
     # keeps the seed 5-arg signature and samples nothing
     rps_agg = tcfg.aggregator.startswith("rps")
     stateful = tcfg.channel is not None and rps_agg
+    use_ef = rps_agg and tcfg.recovery == "ef"
+    # the scale divisor prices the channel's stationary marginal, not the
+    # raw drop_rate knob (they differ for GE/hetero/trace channels)
+    recovery = wire_lib.make_recovery(
+        tcfg.recovery, p=channel.effective_p()) if rps_agg else None
 
     def init_state(key):
         p1 = model.init(key)
@@ -179,11 +208,12 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
             lambda d: None if d is None else d + 1,        # + stacked dim
             shlib.model_dims(params_shape, cfg, stacked=True),
             is_leaf=lambda x: x is None) if bucketing else None
-        plan = plan_lib.plan_from_config(local_shape, n_rps, n_servers,
-                                         bucket_mb=tcfg.bucket_mb,
-                                         n_buckets=tcfg.n_buckets,
-                                         model_dims=mdims,
-                                         engine=tcfg.engine)
+        plan = plan_lib.plan_from_config(
+            local_shape, n_rps, n_servers,
+            bucket_mb=tcfg.bucket_mb, n_buckets=tcfg.n_buckets,
+            model_dims=mdims, engine=tcfg.engine,
+            wire=wire_lib.config_wire(tcfg.wire, tcfg.exchange_dtype),
+            recovery=tcfg.recovery)
 
     # ---- shardings --------------------------------------------------------
     def state_shardings(params_shape):
@@ -191,7 +221,7 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
                                    fsdp_axis=fsdp_axis, stacked=True)
         return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs), pspecs
 
-    def _exchange(tree, key, mode=None, masks=None):
+    def _exchange(tree, key, mode=None, masks=None, ef=None):
         """Drop-masked exchange over the RPS axes (stacked worker dim 0).
 
         ``mode=None`` derives the exchange mode from the aggregator (None
@@ -201,6 +231,8 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
         or per-bucket ``(n_buckets, n, s)`` — replicated into the manual
         region; None keeps the in-body draw the plan prescribes,
         bit-identical to the seed path for the default per-leaf plan.
+        ``ef`` is the EF residual (params-shaped, params-sharded); when
+        given the return is ``(tree, new_ef)``.
 
         Fully-manual shard_map over *all* mesh axes with the param
         PartitionSpecs as in_specs: every leaf arrives as its local shard,
@@ -210,15 +242,20 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
         The body executes the precomputed plan: exactly
         ``2 × plan.n_buckets`` collectives per round."""
         if tcfg.aggregator == "none" or n_rps == 1:
-            return tree
+            return tree if ef is None else (tree, ef)
         if tcfg.aggregator.startswith("allreduce"):
-            return jax.tree.map(lambda x: jnp.broadcast_to(
+            out = jax.tree.map(lambda x: jnp.broadcast_to(
                 jnp.mean(x, axis=0, keepdims=True), x.shape), tree)
+            return out if ef is None else (out, ef)
         if mode is None:
             mode = ("model" if _is_model_mode(tcfg.aggregator)
                     else "grad_renorm")
+        has_masks, has_ef = masks is not None, ef is not None
 
-        def body(t, key, masks):
+        def body(t, key, *rest):
+            it = iter(rest)
+            m = next(it) if has_masks else None
+            e = next(it) if has_ef else None
             ring_ids = None
             if rps_lib.resolve_engine(tcfg.engine) == "ring":
                 # the fused kernel RDMAs by *logical* device id — derive
@@ -230,20 +267,30 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
                     mesh_shape=dict(mesh.shape))
             return rps_lib.rps_exchange_plan(
                 t, key, tcfg.drop_rate, rps_axes, plan=plan, mode=mode,
-                masks=masks, rs_dtype=jnp.dtype(tcfg.exchange_dtype),
-                engine=tcfg.engine, ring_ids=ring_ids)
+                masks=m, rs_dtype=jnp.dtype(tcfg.exchange_dtype),
+                engine=tcfg.engine, ring_ids=ring_ids,
+                recovery=recovery, ef_state=e)
 
-        if masks is None:
-            fn = _shard_map(
-                lambda t, k: body(t, k, None), mesh,
-                (especs, P()), especs, set(mesh.axis_names))
-            return fn(tree, key)
-        fn = _shard_map(body, mesh, (especs, P(), (P(), P())), especs,
+        args = [tree, key]
+        in_specs = [especs, P()]
+        if has_masks:
+            args.append(masks)
+            in_specs.append((P(), P()))
+        if has_ef:
+            args.append(ef)
+            in_specs.append(especs)
+        out_specs = (especs, especs) if has_ef else especs
+        fn = _shard_map(body, mesh, tuple(in_specs), out_specs,
                         set(mesh.axis_names))
-        return fn(tree, key, masks)
+        return fn(*args)
 
     # ---- the step ---------------------------------------------------------
-    def train_step(params, opt_state, batch, step, key, ch_state=None):
+    def train_step(params, opt_state, batch, step, key, ch_state=None,
+                   ef_state=None):
+        if use_ef and ef_state is None:
+            raise ValueError("recovery='ef' carries a residual: pass "
+                             "ef_state (train_step.init_ef_state(params) "
+                             "for the zero start)")
         # XLA leaves while-loop carries (the grad accumulator) replicated
         # without explicit annotations — pin grads to the param shardings
         # (especs precomputed above, not re-derived per trace).
@@ -309,36 +356,59 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
             masks = (rs, ag)
 
         lr = jnp.float32(tcfg.lr)
+        ef = ef_state if use_ef else None
         if _is_model_mode(tcfg.aggregator) or tcfg.aggregator == "none":
             # local step, then model exchange (Algorithm 1)
             new_params, opt_state = opt.update(grads, opt_state, params, lr)
             if tcfg.exchange_every > 1:
-                new_params = jax.lax.cond(
-                    step % tcfg.exchange_every == 0,
-                    lambda t: _exchange(t, key, None, masks),
-                    lambda t: t, new_params)
+                if use_ef:      # skipped steps leave the residual alone
+                    new_params, ef_state = jax.lax.cond(
+                        step % tcfg.exchange_every == 0,
+                        lambda te: _exchange(te[0], key, None, masks,
+                                             te[1]),
+                        lambda te: te, (new_params, ef))
+                else:
+                    new_params = jax.lax.cond(
+                        step % tcfg.exchange_every == 0,
+                        lambda t: _exchange(t, key, None, masks),
+                        lambda t: t, new_params)
+            elif use_ef:
+                new_params, ef_state = _exchange(new_params, key, None,
+                                                 masks, ef)
             else:
                 new_params = _exchange(new_params, key, None, masks)
         else:
             # gradient exchange, then step
-            grads = _exchange(grads, key,
-                              "grad_renorm" if tcfg.aggregator == "rps_grad"
-                              else None, masks)
+            gmode = "grad_renorm" if tcfg.aggregator == "rps_grad" else None
+            if use_ef:
+                grads, ef_state = _exchange(grads, key, gmode, masks, ef)
+            else:
+                grads = _exchange(grads, key, gmode, masks)
             new_params, opt_state = opt.update(grads, opt_state, params, lr)
         mloss = loss / n_rps
         out_metrics = {"loss": mloss,
                        "lr": lr,
                        **{k: jnp.mean(v) for k, v in
                           (metrics or {}).items()}}
+        out = (new_params, opt_state, out_metrics)
         if stateful:
-            return new_params, opt_state, out_metrics, ch_state
-        return new_params, opt_state, out_metrics
+            out = out + (ch_state,)
+        if use_ef:
+            out = out + (ef_state,)
+        return out
 
     train_step.channel = channel
     train_step.init_channel_state = channel.init_state
     train_step.plan = plan
+    train_step.recovery = recovery
+    # zero EF residual, shaped/sharded like the stacked params (§13)
+    train_step.init_ef_state = (
+        lambda params: jax.tree.map(jnp.zeros_like, params)) if use_ef \
+        else None
     # donation hint for jit callers (launch/dryrun.py and the benches):
-    # params + opt_state always, the channel-state carry when present —
-    # without it every step double-buffers the whole sharded model
-    train_step.donate_argnums = (0, 1) + ((5,) if stateful else ())
+    # params + opt_state always, the channel-state / EF-residual carries
+    # when present — without it every step double-buffers the whole
+    # sharded model
+    train_step.donate_argnums = (0, 1) + ((5,) if stateful else ()) \
+        + ((6,) if use_ef else ())
     return init_state, train_step, state_shardings

@@ -70,6 +70,26 @@ def fusion_count(txt: str) -> int:
     return len(re.findall(r"= \S+ fusion(?:\.\d+)?\(", txt))
 
 
+def assert_fused_per_bucket(txt: str, n_buckets: int,
+                            per_bucket: int = 1) -> int:
+    """Assert the fused-dispatch *density* of a lowered ring round:
+    exactly ``per_bucket`` (default 1) ``tpu_custom_call`` per bucket and
+    zero StableHLO collectives — the §12/§13 claim that neither bucketing
+    nor any wire codec (bf16, int8 with its in-kernel decode + hop
+    requantisation) adds a dispatch. Returns the dispatch count."""
+    got = fused_dispatch_count(txt)
+    want = int(n_buckets) * int(per_bucket)
+    if got != want:
+        raise AssertionError(
+            f"fused dispatches: got {got}, want {want} "
+            f"({per_bucket}/bucket × {n_buckets} buckets)")
+    colls = {k: v for k, v in collective_counts(txt).items() if v}
+    if colls:
+        raise AssertionError(
+            f"fused ring round leaked StableHLO collectives: {colls}")
+    return got
+
+
 def summarize(txt: str) -> Dict[str, int]:
     out = dict(collective_counts(txt))
     out["tpu_custom_call"] = fused_dispatch_count(txt)
