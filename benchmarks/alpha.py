@@ -1,8 +1,7 @@
 """Figs 2/3: α₂ and (α₁−α₂) across (n, p) — closed-form bounds (Lemmas 7/8)
 vs Monte-Carlo estimates from sampled W matrices."""
-import time
-
 from repro.core import theory, wmatrix
+from repro.telemetry.timing import wallclock
 
 
 def run(csv_rows):
@@ -12,11 +11,12 @@ def run(csv_rows):
     print("n,p,a1_bound,a1_mc,a2_bound,a2_mc,beta")
     for n in ns:
         for p in ps:
-            t0 = time.time()
-            a1_mc, a2_mc = wmatrix.monte_carlo_alphas(n, p, trials=400,
-                                                      seed=0)
-            a1b, a2b = theory.alpha1_bound(n, p), theory.alpha2_bound(n, p)
-            us = (time.time() - t0) * 1e6
+            with wallclock(f"alpha.n{n}_p{p}") as w:
+                a1_mc, a2_mc = wmatrix.monte_carlo_alphas(n, p, trials=400,
+                                                          seed=0)
+                a1b = theory.alpha1_bound(n, p)
+                a2b = theory.alpha2_bound(n, p)
+            us = w.us
             print(f"{n},{p},{a1b:.5f},{a1_mc:.5f},{a2b:.5f},{a2_mc:.5f},"
                   f"{theory.beta(n, p):.5f}")
             csv_rows.append(("alpha", us,

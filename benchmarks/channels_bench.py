@@ -17,14 +17,13 @@ through the same n=16 teacher-student recipe:
 Also reproduces the Fig-5 contrast on the burstiest channel: naive
 gradient averaging must degrade where model averaging holds.
 """
-import time
-
 import jax
 import jax.numpy as jnp
 
 from repro import channels as channels_lib
 from repro.data.synthetic import TeacherTask, make_worker_streams
 from repro.netsim import sim as netsim
+from repro.telemetry.timing import wallclock
 from repro.train.simulator import SimulatorConfig, run_simulation
 
 P_TARGET = 0.1
@@ -113,13 +112,14 @@ def run(csv_rows, steps=150):
     results = {}
     base = None
     for name, chan in families:
-        t0 = time.time()
-        h = run_simulation(loss_fn, init_fn, batch_fn,
-                           SimulatorConfig(n_workers=N, aggregator="rps_model",
-                                           lr=0.2, warmup=10, steps=steps,
-                                           eval_every=steps - 1,
-                                           channel=chan))
-        us = (time.time() - t0) * 1e6
+        with wallclock(f"channels.{name}") as w:
+            h = run_simulation(loss_fn, init_fn, batch_fn,
+                               SimulatorConfig(n_workers=N,
+                                               aggregator="rps_model",
+                                               lr=0.2, warmup=10, steps=steps,
+                                               eval_every=steps - 1,
+                                               channel=chan))
+        us = w.us
         results[name] = h["final_loss"]
         if base is None:                  # first family run is the control
             base = h["final_loss"]
@@ -131,13 +131,14 @@ def run(csv_rows, steps=150):
             f"{name} diverged at matched p={P_TARGET}"
 
     # Fig-5 contrast on the burstiest channel: grad averaging degrades
-    t0 = time.time()
-    hg = run_simulation(loss_fn, init_fn, batch_fn,
-                        SimulatorConfig(n_workers=N, aggregator="rps_grad",
-                                        lr=0.2, warmup=10, steps=steps,
-                                        eval_every=steps - 1,
-                                        channel=families[2][1]))
-    us = (time.time() - t0) * 1e6
+    with wallclock("channels.ge_burst16_grad") as w:
+        hg = run_simulation(loss_fn, init_fn, batch_fn,
+                            SimulatorConfig(n_workers=N,
+                                            aggregator="rps_grad",
+                                            lr=0.2, warmup=10, steps=steps,
+                                            eval_every=steps - 1,
+                                            channel=families[2][1]))
+    us = w.us
     print(f"ge_burst16_grad,{families[2][1].effective_p():.4f},"
           f"{hg['final_loss']:.4f},{hg['consensus'][-1]:.3e}")
     csv_rows.append(("channels_ge_burst16_grad", us,

@@ -1,8 +1,7 @@
 """Figs 6/7: colocated Web-service speedup / cost reduction when learning
 traffic tolerates drops (flow-level sim of the paper's 16×1 Gbps fabric)."""
-import time
-
 from repro.netsim import NetConfig, cost_reduction_curve, speedup_curve
+from repro.telemetry.timing import wallclock
 
 
 def run(csv_rows):
@@ -11,9 +10,10 @@ def run(csv_rows):
     print("lam,prio,learning_drop,avg_ms,speedup")
     best_overall = 1.0
     for lam in (2000, 5000, 10000):
-        t0 = time.time()
-        pts = speedup_curve(lam, prios=(0.0, 0.25, 0.5, 0.75, 1.0), cfg=cfg)
-        us = (time.time() - t0) * 1e6
+        with wallclock(f"colocation.fig6_lam{lam}") as w:
+            pts = speedup_curve(lam, prios=(0.0, 0.25, 0.5, 0.75, 1.0),
+                                cfg=cfg)
+        us = w.us
         for pt in pts:
             print(f"{lam},{pt['prio']},{pt['learning_drop_frac']:.4f},"
                   f"{pt['avg_completion_ms']:.3f},{pt['speedup']:.3f}")
@@ -27,13 +27,13 @@ def run(csv_rows):
 
     print("# Fig 7 — cost reduction at fixed completion-time target")
     print("target_ms,prio,learning_drop,lam_max,cost_rel")
-    t0 = time.time()
-    for target in (2.0, 5.0):
-        pts = cost_reduction_curve(target, prios=(0.0, 0.5, 1.0),
-                                   cfg=NetConfig(sim_s=0.5))
-        for pt in pts:
-            print(f"{target},{pt['prio']},"
-                  f"{pt['learning_drop_frac']:.4f},{pt['lam_max']:.0f},"
-                  f"{pt['cost_rel']:.3f}")
-    us = (time.time() - t0) * 1e6
+    with wallclock("colocation.fig7") as w:
+        for target in (2.0, 5.0):
+            pts = cost_reduction_curve(target, prios=(0.0, 0.5, 1.0),
+                                       cfg=NetConfig(sim_s=0.5))
+            for pt in pts:
+                print(f"{target},{pt['prio']},"
+                      f"{pt['learning_drop_frac']:.4f},{pt['lam_max']:.0f},"
+                      f"{pt['cost_rel']:.3f}")
+    us = w.us
     csv_rows.append(("colocation_fig7", us, "cost curve"))

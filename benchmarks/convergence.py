@@ -7,8 +7,6 @@ count and recipe (DESIGN.md §8): the full drop-rate sweep on the
 teacher-student classifier (fast), plus a char-LM transformer spot-check at
 the headline p=0.1. Claim validated: p ≤ 0.1 sits on top of the reliable
 baseline, p = 0.2 within a small gap."""
-import time
-
 import jax
 import jax.numpy as jnp
 
@@ -16,6 +14,7 @@ from repro.configs import get_config
 from repro.data.synthetic import (CharLMTask, TeacherTask,
                                   make_worker_streams)
 from repro.models import build_model
+from repro.telemetry.timing import wallclock
 from repro.train.simulator import SimulatorConfig, run_simulation
 
 
@@ -46,13 +45,13 @@ def run(csv_rows, steps=150):
     base = None
     for p in (0.0, 0.01, 0.05, 0.1, 0.2):
         agg = "allreduce_model" if p == 0.0 else "rps_model"
-        t0 = time.time()
-        h = run_simulation(loss_fn, init_fn, batch_fn,
-                           SimulatorConfig(n_workers=16, drop_rate=p,
-                                           aggregator=agg, lr=0.2,
-                                           warmup=10, steps=steps,
-                                           eval_every=steps - 1))
-        us = (time.time() - t0) * 1e6
+        with wallclock(f"convergence.p{p}") as w:
+            h = run_simulation(loss_fn, init_fn, batch_fn,
+                               SimulatorConfig(n_workers=16, drop_rate=p,
+                                               aggregator=agg, lr=0.2,
+                                               warmup=10, steps=steps,
+                                               eval_every=steps - 1))
+        us = w.us
         if p == 0.0:
             base = h["final_loss"]
         print(f"{p},{agg},{h['final_loss']:.4f},{h['consensus'][-1]:.3e}")
@@ -75,13 +74,13 @@ def run(csv_rows, steps=150):
     lm_steps = 40
     res = {}
     for p, agg in ((0.0, "allreduce_model"), (0.1, "rps_model")):
-        t0 = time.time()
-        h = run_simulation(lm_loss, model.init, lm_batch,
-                           SimulatorConfig(n_workers=8, drop_rate=p,
-                                           aggregator=agg, lr=0.5, warmup=5,
-                                           steps=lm_steps,
-                                           eval_every=lm_steps - 1))
-        us = (time.time() - t0) * 1e6
+        with wallclock(f"convergence.lm_p{p}") as w:
+            h = run_simulation(lm_loss, model.init, lm_batch,
+                               SimulatorConfig(n_workers=8, drop_rate=p,
+                                               aggregator=agg, lr=0.5,
+                                               warmup=5, steps=lm_steps,
+                                               eval_every=lm_steps - 1))
+        us = w.us
         res[p] = h["final_loss"]
         print(f"{p},{agg},{h['final_loss']:.4f}")
         csv_rows.append((f"convergence_lm_p{p}", us,

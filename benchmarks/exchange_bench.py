@@ -29,7 +29,6 @@ import os
 import subprocess
 import sys
 import textwrap
-import time
 
 ARCH = "rps-paper-mlp"
 N_WORKERS = 16
@@ -51,20 +50,12 @@ def _charlm_tree(n):
 
 
 def _min_of_batches(f, args, reps, iters):
-    import jax
-    o = f(*args)
-    jax.block_until_ready(o)
-    for _ in range(max(2, iters // 2)):            # extended warmup
-        o = f(*args)
-    jax.block_until_ready(o)
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            o = f(*args)
-        jax.block_until_ready(o)
-        best = min(best, (time.perf_counter() - t0) / iters)
-    return best
+    # the unified repo timer (DESIGN.md §14): same convention as the old
+    # inline loop — compile, extended warmup, best of `reps` synced
+    # batches of `iters` calls, seconds/call
+    from repro.telemetry.timing import time_fn
+    return time_fn(f, *args, reps=reps, iters=iters,
+                   warmup=max(2, iters // 2))
 
 
 def bench_global(reps, iters, engine=None):

@@ -1,11 +1,10 @@
 """Fig 5: why RPS — naive gradient averaging degrades under message drops
 while model averaging does not (same task, same p)."""
-import time
-
 import jax
 import jax.numpy as jnp
 
 from repro.data.synthetic import TeacherTask, make_worker_streams
+from repro.telemetry.timing import wallclock
 from repro.train.simulator import SimulatorConfig, run_simulation
 
 
@@ -31,13 +30,13 @@ def run(csv_rows, steps=150):
     results = {}
     for p in (0.01, 0.1, 0.2):
         for agg in ("rps_model", "rps_grad"):
-            t0 = time.time()
-            h = run_simulation(loss_fn, init_fn, batch_fn,
-                               SimulatorConfig(n_workers=16, drop_rate=p,
-                                               aggregator=agg, lr=0.2,
-                                               warmup=10, steps=steps,
-                                               eval_every=steps - 1))
-            us = (time.time() - t0) * 1e6
+            with wallclock(f"grad_vs_model.p{p}_{agg}") as w:
+                h = run_simulation(loss_fn, init_fn, batch_fn,
+                                   SimulatorConfig(n_workers=16, drop_rate=p,
+                                                   aggregator=agg, lr=0.2,
+                                                   warmup=10, steps=steps,
+                                                   eval_every=steps - 1))
+            us = w.us
             results[(p, agg)] = h["final_loss"]
             print(f"{p},{agg},{h['final_loss']:.4f}")
             csv_rows.append((f"grad_vs_model_p{p}_{agg}", us,

@@ -2,22 +2,18 @@
 on CPU) and the XLA production paths vs the sequential references. On real
 TPU hardware the pallas path is the hot one; here we report CPU us/call for
 the XLA paths and verify the kernels still agree at bench shapes."""
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
+from repro.telemetry.timing import time_fn
 
 
 def _time(fn, *args, reps=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
-    t0 = time.time()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps * 1e6
+    # the unified repo timer (DESIGN.md §14): compile + warmup, best of
+    # `reps` synced batches, µs/call
+    return time_fn(fn, *args, reps=reps, iters=1) * 1e6
 
 
 def run(csv_rows):

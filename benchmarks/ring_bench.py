@@ -66,11 +66,12 @@ def bench_schedule(reps, iters, quick):
     code = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
-        import sys, time, json
+        import sys, json
         sys.path.insert(0, %r); sys.path.insert(0, %r)
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.core import plan as plan_lib, rps
+        from repro.telemetry.timing import time_fn
         from repro.train.trainer import _shard_map
         from tools import check_hlo
 
@@ -103,19 +104,8 @@ def bench_schedule(reps, iters, quick):
                     f = exchange_fn(plan, engine, dt)
                     txt = f.lower(tree, key).as_text()
                     res["hlo"][name] = check_hlo.summarize(txt)
-                    o = f(tree, key); jax.block_until_ready(o)
-                    for _ in range(2):
-                        o = f(tree, key)
-                    jax.block_until_ready(o)
-                    best = float("inf")
-                    for _ in range(reps):
-                        t0 = time.perf_counter()
-                        for _ in range(iters):
-                            o = f(tree, key)
-                        jax.block_until_ready(o)
-                        best = min(best,
-                                   (time.perf_counter() - t0) / iters)
-                    res["ms"][name] = best * 1e3
+                    res["ms"][name] = time_fn(f, tree, key, reps=reps,
+                                              iters=iters, warmup=2) * 1e3
         print("RESULT " + json.dumps(res))
     """) % (N_WORKERS, SRC, ROOT, N_WORKERS, reps, iters, DROP)
     env = dict(os.environ)

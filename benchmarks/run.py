@@ -19,6 +19,14 @@ def main() -> None:
                          "that exchange — exchange/server_sweep/ring — so "
                          "old benches can A/B the ring path without code "
                          "edits; default: each bench's own default")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="install a telemetry registry (DESIGN.md §14): "
+                         "every bench section becomes a Chrome-trace span "
+                         "and every labelled timer lands in one shared "
+                         "timing table")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="write summary.json / trace.json / "
+                         "telemetry.jsonl here (implies --telemetry)")
     args = ap.parse_args()
 
     from benchmarks import (alpha, channels_bench, colocation, convergence,
@@ -37,6 +45,13 @@ def main() -> None:
         "ring": ring_bench.run,           # DESIGN §12 ring vs xla engine
         "wire": wire_bench.run,           # DESIGN §13 codec x recovery
     }
+    reg = None
+    if args.telemetry or args.telemetry_dir:
+        from repro import telemetry as telemetry_lib
+        reg = telemetry_lib.Telemetry(out_dir=args.telemetry_dir)
+        telemetry_lib.set_current(reg)
+
+    from contextlib import nullcontext
     engine_aware = {"exchange", "server_sweep", "ring"}
     names = list(all_benches) if not args.only else args.only.split(",")
     csv_rows = []
@@ -46,7 +61,9 @@ def main() -> None:
         try:
             kw = {"engine": args.engine} \
                 if name in engine_aware and args.engine else {}
-            all_benches[name](csv_rows, **kw)
+            with (reg.span(f"bench.{name}") if reg is not None
+                  else nullcontext()):
+                all_benches[name](csv_rows, **kw)
         except Exception as e:
             traceback.print_exc()
             failed.append(name)
@@ -54,6 +71,15 @@ def main() -> None:
     print("name,us_per_call,derived")
     for row in csv_rows:
         print(f"{row[0]},{row[1]:.1f},{row[2]}")
+    if reg is not None:
+        # the CSV rows double as per-step records so the JSONL/report
+        # cover the bench run too
+        for k, (rname, us, derived) in enumerate(csv_rows):
+            reg.record_step(k, name=rname, us_per_call=float(us),
+                            derived=str(derived))
+        reg.finalize(print_summary=True)
+        if args.telemetry_dir:
+            print("telemetry ->", args.telemetry_dir)
     if failed:
         print("FAILED:", failed)
         sys.exit(1)

@@ -31,7 +31,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +38,7 @@ import jax.numpy as jnp
 from repro.channels import BernoulliChannel
 from repro.core import theory
 from repro.data.synthetic import TeacherTask, make_worker_streams
+from repro.telemetry.timing import wallclock
 from repro.train.simulator import SimulatorConfig, run_simulation
 
 P_PACKET = 0.1          # per-packet drop rate (the paper's headline 10%)
@@ -91,10 +91,10 @@ def sweep(steps: int = 150, seeds: int = 2, engine: str = None):
     for s in SWEEP:
         packets = theory.packets_per_block(s, MODEL_PACKETS)
         p_block = theory.block_drop_rate(P_PACKET, packets)
-        t0 = time.time()
-        loss = final_loss(dict(
-            aggregator="rps_model", n_servers=s, drop_rate=p_block,
-            channel=BernoulliChannel(N, p_block, s=s)))
+        with wallclock(f"server_sweep.s{s}") as w:
+            loss = final_loss(dict(
+                aggregator="rps_model", n_servers=s, drop_rate=p_block,
+                channel=BernoulliChannel(N, p_block, s=s)))
         rows.append({
             "s": s,
             "packets_per_block": packets,
@@ -103,7 +103,7 @@ def sweep(steps: int = 150, seeds: int = 2, engine: str = None):
             "gap": max(loss - base, 0.0),
             "alpha2_bound": theory.alpha2_bound(
                 N, P_PACKET, s=s, model_packets=MODEL_PACKETS),
-            "us": (time.time() - t0) * 1e6,
+            "us": w.us,
         })
     return {"n": N, "p_packet": P_PACKET, "model_packets": MODEL_PACKETS,
             "steps": steps, "seeds": seeds, "baseline_loss": base,

@@ -1,10 +1,9 @@
 """Theorem 1 / Corollary 2 trends: linear speedup in n and the diminishing
 influence of p as n grows — measured on the simulator, compared against the
 theory module's predicted rates."""
-import time
-
 from repro.core import theory
 from repro.data.synthetic import TeacherTask, make_worker_streams
+from repro.telemetry.timing import wallclock
 from repro.train.simulator import SimulatorConfig, run_simulation
 
 import jax
@@ -37,13 +36,13 @@ def run(csv_rows, steps=120):
     losses = {}
     for n in (4, 8, 16, 32):
         batch_fn = make_worker_streams(task, n, 32)
-        t0 = time.time()
-        h = run_simulation(loss_fn, init_fn, batch_fn,
-                           SimulatorConfig(n_workers=n, drop_rate=0.2,
-                                           aggregator="rps_model", lr=0.2,
-                                           steps=steps,
-                                           eval_every=steps - 1))
-        us = (time.time() - t0) * 1e6
+        with wallclock(f"speedup.n{n}") as w:
+            h = run_simulation(loss_fn, init_fn, batch_fn,
+                               SimulatorConfig(n_workers=n, drop_rate=0.2,
+                                               aggregator="rps_model", lr=0.2,
+                                               steps=steps,
+                                               eval_every=steps - 1))
+        us = w.us
         pred = theory.corollary2_rate(n, 0.2, steps)
         losses[n] = h["final_loss"]
         print(f"{n},{h['final_loss']:.4f},{h['consensus'][-1] / n:.3e},"

@@ -116,6 +116,16 @@ class Channel:
     def effective_p(self) -> float:
         raise NotImplementedError
 
+    def expected_link_p(self) -> "np.ndarray":
+        """Per-sender ``(n,)`` expected drop probability over the
+        non-owned packets each worker offers per step — the target the
+        telemetry drift monitor (``telemetry/estimator.py``) compares the
+        live per-link estimates against. Channels with a uniform marginal
+        inherit the broadcast scalar; per-link channels (heterogeneous)
+        override with their actual row marginals."""
+        import numpy as np
+        return np.full(self.n, self.effective_p())
+
     def _dims(self) -> str:
         return f"n={self.n}" + (f", s={self.s}" if self.s != self.n else "")
 

@@ -75,6 +75,20 @@ class HeterogeneousChannel(Channel):
         off = ~np.eye(self.n, dtype=bool)
         return float(pm[off].mean()) if self.n > 1 else 0.0
 
+    def expected_link_p(self) -> np.ndarray:
+        """Per-sender RS-leg expectation: mean of ``P[i, owner(j)]`` over
+        the non-owned block columns j — what the telemetry estimator for
+        sender i converges to (the AG leg matches when P is symmetric,
+        e.g. every :meth:`pods` fabric)."""
+        pm = np.asarray(self.p_matrix, np.float64)
+        own = np.asarray(self._owners)
+        cols = pm[:, own]                                   # (n, s)
+        non_own = own[None, :] != np.arange(self.n)[:, None]
+        cnt = non_own.sum(axis=1)
+        return np.where(cnt > 0,
+                        (cols * non_own).sum(axis=1) / np.maximum(cnt, 1),
+                        0.0)
+
     def __repr__(self) -> str:
         return (f"HeterogeneousChannel({self._dims()}, "
                 f"eff_p={self.effective_p():.4f})")

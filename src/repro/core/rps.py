@@ -272,6 +272,7 @@ def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
     linear codecs, the ``codec.encode`` pair for quantised ones); the
     AG-drop fallback always stays the *raw* local ``blocks``.
     """
+    from repro.telemetry import taps
     codec = wire_lib.resolve_codec(wire, rs_dtype)
     rec = wire_lib.make_recovery(recovery)
     if rec.needs_state and send is None:
@@ -304,6 +305,20 @@ def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
     rs_sc, ag_sc = _masks_to_scatter(rs, ag, S, order)
     div = _divisor(rec, mode, rs_sc, n)          # (S,) f32, known locally
 
+    if taps.active() is not None:
+        # per-call (= per-bucket on the plan path) telemetry, computed on
+        # the UNPADDED masks so the dummy always-delivered columns never
+        # bias the counts; owner entries excluded (not wire events).
+        # Sits before the engine branch, so both lowerings are covered.
+        from repro.telemetry import counters as _ctr
+        taps.emit("rs_link_delivered", _ctr.link_delivered(rs))
+        taps.emit("ag_link_delivered", _ctr.link_delivered(ag))
+        taps.emit("divisor", _divisor(rec, mode, rs, n))
+        taps.annotate("exchange", {
+            "n": n, "s": int(s), "mode": mode,
+            "engine": resolve_engine(engine),
+            "codec": codec.name, "recovery": rec.kind})
+
     # ---- wire representation of this device's contribution -------------
     if codec.quantized:
         if send is None:
@@ -323,14 +338,15 @@ def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
         # ring" on pin is None (a pin marks a partial-manual region the
         # Pallas dispatch cannot serve) — the normalised identity above
         # would make the fused TPU path unreachable
-        out = rps_ring.ring_exchange_scatter_table(
-            blocks, rs_sc, ag_sc, names=names, n=n, i=i, k=k, mode=mode,
-            rs_dtype=acc_dtype, pin=raw_pin, ring_ids=ring_ids,
-            codec=codec, enc=enc,
-            send=None if send_arr is blocks else send_arr, div=div)
-        if inv is not None:
-            out = out[inv]                        # back to block order
-        return pin(out[:s])
+        with jax.named_scope("rps.ring"):
+            out = rps_ring.ring_exchange_scatter_table(
+                blocks, rs_sc, ag_sc, names=names, n=n, i=i, k=k,
+                mode=mode, rs_dtype=acc_dtype, pin=raw_pin,
+                ring_ids=ring_ids, codec=codec, enc=enc,
+                send=None if send_arr is blocks else send_arr, div=div)
+            if inv is not None:
+                out = out[inv]                    # back to block order
+            return pin(out[:s])
     rs_f = rs_sc.astype(acc_dtype)
 
     # ---- Reduce-Scatter with send-side drops --------------------------
@@ -342,27 +358,31 @@ def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
     # quantised payload on the actual hops).
     # (f32 also works around an XLA-CPU AllReducePromotion crash on
     # sub-32-bit reduce-scatter under partial-manual shard_map.)
-    masked = pin(send_arr.astype(acc_dtype) * rs_f[i][wide])
-    sums = masked
-    for a in names:     # scatter over the flattened axes, major to minor
-        sums = pin(lax.psum_scatter(sums, a, scatter_dimension=0,
-                                    tiled=True))
-    sums = pin(sums.reshape((k,) + blocks.shape[1:]))
-    my_div = lax.dynamic_slice_in_dim(div, i * k, k).astype(acc_dtype)
-    tilde = sums / my_div[wide]
+    with jax.named_scope("rps.reduce_scatter"):
+        masked = pin(send_arr.astype(acc_dtype) * rs_f[i][wide])
+        sums = masked
+        for a in names:  # scatter over the flattened axes, major to minor
+            sums = pin(lax.psum_scatter(sums, a, scatter_dimension=0,
+                                        tiled=True))
+        sums = pin(sums.reshape((k,) + blocks.shape[1:]))
+    with jax.named_scope("rps.recovery"):
+        my_div = lax.dynamic_slice_in_dim(div, i * k, k).astype(acc_dtype)
+        tilde = sums / my_div[wide]
 
     # ---- All-Gather with receive-side drops ------------------------------
-    gathered = pin(tilde.astype(blocks.dtype))        # AG moves model dtype
-    for a in reversed(names):
-        gathered = pin(lax.all_gather(gathered, a, axis=0, tiled=True))
-    recv = ag_sc[i][wide]
-    if mode == "model" or mode == "grad_renorm":
-        out = jnp.where(recv, gathered, blocks)       # keep local block
-    else:                                             # "grad": no update
-        out = jnp.where(recv, gathered, jnp.zeros_like(blocks))
-    if inv is not None:
-        out = out[inv]                                # back to block order
-    return pin(out[:s])
+    with jax.named_scope("rps.all_gather"):
+        gathered = pin(tilde.astype(blocks.dtype))    # AG moves model dtype
+        for a in reversed(names):
+            gathered = pin(lax.all_gather(gathered, a, axis=0, tiled=True))
+    with jax.named_scope("rps.decode"):
+        recv = ag_sc[i][wide]
+        if mode == "model" or mode == "grad_renorm":
+            out = jnp.where(recv, gathered, blocks)   # keep local block
+        else:                                         # "grad": no update
+            out = jnp.where(recv, gathered, jnp.zeros_like(blocks))
+        if inv is not None:
+            out = out[inv]                            # back to block order
+        return pin(out[:s])
 
 
 def _bucket_masks(rs: jax.Array, ag: jax.Array, b: int):
@@ -530,6 +550,11 @@ def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
         raise ValueError("recovery='ef' needs ef_state= (the carried "
                          "residual; wire.init_ef_state(tree) to start)")
     rs, ag = _resolve_masks(key, n, p, plan, masks)
+    from repro.telemetry import taps
+    if taps.active() is not None:
+        taps.annotate("plan", {
+            "n_buckets": plan.n_buckets, "s": plan.s,
+            "rs_leg_bytes": int(plan.rs_leg_bytes(codec))})
     leaves = plan.check_leaves(tree)
     ef_leaves = plan.check_leaves(ef_state) if use_ef else None
     outs = []
@@ -569,6 +594,9 @@ def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
             gate = rs_b[i][(slice(None),) + (None,) * (tbl.ndim - 1)]
             new_ef.append(jnp.where(
                 gate != 0, (intent - delivered).astype(tbl.dtype), e_tbl))
+            if taps.active() is not None:
+                taps.emit("ef_resid_sq",
+                          jnp.sum(jnp.square(e_tbl.astype(jnp.float32))))
         outs.append(_exchange_table(tbl, rs_b, ag_b, names=names, n=n,
                                     i=i, mode=mode, rs_dtype=rs_dtype,
                                     pin=pin, engine=engine,
@@ -758,6 +786,25 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
         raise ValueError("recovery='ef' needs ef_state= (the stacked "
                          "residual; wire.init_ef_state(tree) to start)")
     rs, ag = _resolve_masks(key, n, p, plan, masks)
+    from repro.telemetry import taps
+    if taps.active() is not None:
+        # step-level counters: whole-draw per-link bundle (summed over
+        # the bucket dim for per-bucket masks) + the per-bucket × per-link
+        # RS matrix when the draw has one; same convention as the
+        # per-call taps in _exchange_table (owners excluded)
+        from repro.telemetry import counters as _ctr
+        for k_, v in _ctr.mask_step_stats(rs, ag).items():
+            taps.emit(k_, v)
+        if rs.ndim == 3:
+            own_ = ~owner_mask(n, plan.s)
+            taps.emit("rs_bucket_link_delivered",
+                      jnp.sum(rs & own_, axis=-1, dtype=jnp.int32))
+        taps.annotate("plan", {
+            "n_buckets": plan.n_buckets, "s": plan.s,
+            "rs_leg_bytes": int(plan.rs_leg_bytes(codec))})
+        taps.annotate("exchange", {
+            "n": n, "s": plan.s, "mode": mode, "engine": engine,
+            "codec": codec.name, "recovery": rec.kind})
     s = plan.s
     renorm = mode in ("model", "grad_renorm")
     if mode not in ("model", "grad", "grad_renorm"):
@@ -825,9 +872,14 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
             for pos, j in enumerate(idxs):
                 ef_outs[j] = resid[pos].astype(stack.dtype) \
                     .reshape(n, s, blk, m)
+            if taps.active() is not None:
+                taps.emit("ef_resid_sq",
+                          jnp.sum(jnp.square(ef_stack.astype(jnp.float32))))
         else:
             send = to_wire(stack, k_g)
         div_g = _divisor(rec, mode, rs_g, n)                 # (G, s) f32
+        if taps.active() is not None:
+            taps.emit("divisor", div_g)
         if engine == "ring":                  # wire-dtype ring-order sums
             # the replay accumulates in the codec's accumulation dtype
             # (the wire itself for linear codecs — resolving wire= and

@@ -106,40 +106,44 @@ def _ring_schedule_jax(blocks: jax.Array, rs_sc: jax.Array, ag_sc: jax.Array,
         return b * m[wide]
 
     # ---- RS phase: n−1 hops of masked partial sums (wire dtype) ----------
-    acc = pin(contrib(jnp.mod(i - 1, n)))
-    for t in range(n - 1):
-        if quantized:
-            # the hop carries the wire payload + per-row scales; the
-            # receiver decodes before accumulating (matching the kernel)
-            q, sc = codec.encode(acc, None, lead=0)
-            q = pin(lax.ppermute(q, axis, perm))
-            sc = pin(lax.ppermute(sc, axis, perm))
-            acc = codec.decode(q, sc)
-        else:
-            acc = pin(lax.ppermute(acc, axis, perm))
-        acc = pin(acc + contrib(jnp.mod(i - 2 - t, n)))
+    with jax.named_scope("ring.rs_hops"):
+        acc = pin(contrib(jnp.mod(i - 1, n)))
+        for t in range(n - 1):
+            if quantized:
+                # the hop carries the wire payload + per-row scales; the
+                # receiver decodes before accumulating (matching the kernel)
+                q, sc = codec.encode(acc, None, lead=0)
+                q = pin(lax.ppermute(q, axis, perm))
+                sc = pin(lax.ppermute(sc, axis, perm))
+                acc = codec.decode(q, sc)
+            else:
+                acc = pin(lax.ppermute(acc, axis, perm))
+            acc = pin(acc + contrib(jnp.mod(i - 2 - t, n)))
 
     # ---- turnaround: owner applies the recovery divisor ------------------
-    if div is None:
-        from repro.core.rps import _divisor
-        from repro.core.wire import make_recovery
-        div = _divisor(make_recovery(None), mode, rs_sc, n)
-    my_div = lax.dynamic_slice_in_dim(div, i * k, k).astype(rs_dtype)
-    tilde = acc / my_div[wide]
+    with jax.named_scope("ring.recovery"):
+        if div is None:
+            from repro.core.rps import _divisor
+            from repro.core.wire import make_recovery
+            div = _divisor(make_recovery(None), mode, rs_sc, n)
+        my_div = lax.dynamic_slice_in_dim(div, i * k, k).astype(rs_dtype)
+        tilde = acc / my_div[wide]
 
     # ---- AG phase: n−1 hops broadcasting the averaged chunks -------------
-    cur = pin(tilde.astype(blocks.dtype))                  # AG moves payload
-    gathered = lax.dynamic_update_slice_in_dim(
-        jnp.zeros_like(blocks), cur, i * k, 0)
-    for t in range(n - 1):
-        cur = pin(lax.ppermute(cur, axis, perm))
+    with jax.named_scope("ring.ag_hops"):
+        cur = pin(tilde.astype(blocks.dtype))              # AG moves payload
         gathered = lax.dynamic_update_slice_in_dim(
-            gathered, cur, jnp.mod(i - 1 - t, n) * k, 0)
+            jnp.zeros_like(blocks), cur, i * k, 0)
+        for t in range(n - 1):
+            cur = pin(lax.ppermute(cur, axis, perm))
+            gathered = lax.dynamic_update_slice_in_dim(
+                gathered, cur, jnp.mod(i - 1 - t, n) * k, 0)
 
-    recv = ag_sc[i][wide]
-    if mode == "model" or mode == "grad_renorm":
-        return pin(jnp.where(recv, gathered, blocks))      # keep local block
-    return pin(jnp.where(recv, gathered, jnp.zeros_like(blocks)))
+    with jax.named_scope("ring.decode"):
+        recv = ag_sc[i][wide]
+        if mode == "model" or mode == "grad_renorm":
+            return pin(jnp.where(recv, gathered, blocks))  # keep local block
+        return pin(jnp.where(recv, gathered, jnp.zeros_like(blocks)))
 
 
 # ---------------------------------------------------------------------------

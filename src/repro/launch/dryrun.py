@@ -262,9 +262,19 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     mesh_desc = "2x16x16" if multi_pod else "16x16"
     build = builder_for(shape)
 
+    from repro.telemetry import get_current
+    reg = get_current()            # spans when a --telemetry registry is on
+
+    def span(name):
+        from contextlib import nullcontext
+        return reg.span(name, arch=arch, shape=shape_name,
+                        mesh=mesh_desc) if reg is not None else nullcontext()
+
     t0 = time.time()
-    lowered, info = build(cfg, shape, mesh)
-    compiled = lowered.compile()
+    with span("dryrun.lower"):
+        lowered, info = build(cfg, shape, mesh)
+    with span("dryrun.compile"):
+        compiled = lowered.compile()
     t_compile = time.time() - t0
     full = measure(compiled)
     ma = compiled.memory_analysis()
@@ -368,6 +378,13 @@ def main():
                     choices=["renorm", "scale", "ef"],
                     help="loss-recovery policy (DESIGN.md §13); ef adds "
                          "a params-shaped residual carry to train_step")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="record lower/compile phase spans per (arch × "
+                         "shape × mesh) into a Chrome trace (DESIGN.md "
+                         "§14)")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="write summary.json / trace.json here (implies "
+                         "--telemetry)")
     args = ap.parse_args()
     OVERRIDES.update(exchange_dtype=args.exchange_dtype,
                      exchange_every=args.exchange_every,
@@ -378,6 +395,12 @@ def main():
                      engine=args.engine,
                      wire=args.wire,
                      recovery=args.recovery)
+
+    reg = None
+    if args.telemetry or args.telemetry_dir:
+        from repro import telemetry as telemetry_lib
+        reg = telemetry_lib.Telemetry(out_dir=args.telemetry_dir)
+        telemetry_lib.set_current(reg)
 
     archs = ARCH_IDS if (args.sweep or args.arch is None) else [args.arch]
     shapes = list(SHAPES) if (args.sweep or args.shape is None) \
@@ -402,6 +425,10 @@ def main():
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1, default=str)
         print("wrote", args.out)
+    if reg is not None:
+        reg.finalize(print_summary=True)
+        if args.telemetry_dir:
+            print("telemetry ->", args.telemetry_dir)
     n_ok = sum(r.get("status") == "ok" for r in results)
     n_skip = sum("skipped" in str(r.get("status")) for r in results)
     print(f"== {n_ok} ok, {n_skip} skipped, "

@@ -91,6 +91,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="exchange telemetry (DESIGN.md §14): per-step "
+                         "structured records (per-link delivery, drop "
+                         "rates, norms), a live per-link effective-p "
+                         "estimate vs the theory bounds, and Chrome-trace "
+                         "spans; bit-identical to a telemetry-off run")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="write telemetry.jsonl / summary.json / "
+                         "trace.json here (implies --telemetry); render "
+                         "with tools/render_experiments.py --telemetry DIR")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -113,8 +123,13 @@ def main():
         bucket_mb=args.bucket_mb, n_buckets=args.buckets,
         engine=args.engine, exchange_dtype=args.exchange_dtype,
         wire=args.wire, recovery=args.recovery)
+    reg = None
+    if args.telemetry or args.telemetry_dir:
+        from repro.telemetry import Telemetry
+        reg = Telemetry(out_dir=args.telemetry_dir)
     t0 = time.time()
-    hist = run_simulation(loss_fn, model.init, batch_fn, scfg)
+    hist = run_simulation(loss_fn, model.init, batch_fn, scfg,
+                          telemetry=reg)
     dt = time.time() - t0
     print(f"channel={hist['channel']} "
           f"eff_p={hist['channel_effective_p']:.4f}")
@@ -134,6 +149,10 @@ def main():
         mean_params = jax.tree.map(lambda x: jnp.mean(x, 0), hist["params"])
         save_pytree(args.checkpoint, mean_params)
         print("checkpoint ->", args.checkpoint)
+    if reg is not None:
+        reg.finalize(print_summary=True)
+        if args.telemetry_dir:
+            print("telemetry ->", args.telemetry_dir)
     if args.out:
         hist.pop("params")
         hist.pop("channel_state")          # jax pytrees, not JSON

@@ -1,0 +1,99 @@
+"""Delivery counters and norms derived from RPS drop masks.
+
+All mask math runs on the UNPADDED ``(n, s)`` (or per-bucket
+``(n_buckets, n, s)``) masks of the channel contract
+(``channels/base.py``) and **excludes the forced owner entries** — a
+worker "delivering" its own block is not a wire event, and counting it
+would bias every observed drop rate toward zero by ``1/s`` per link.
+
+"Per link" here is per *sender* row i of the mask: for RS the directed
+links i → owner(j) over the non-owned block columns j, for AG the links
+owner(j) → i. These are jnp-pure so they can run inside a jitted step
+(tapped out via ``taps.emit``) or on host arrays after the fact — both
+paths produce identical counts.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rps as rps_lib
+
+
+def link_delivered(mask: jax.Array) -> jax.Array:
+    """Per-sender delivered packet count, owner entries excluded: ``(n,)``
+    i32 from an ``(n, s)`` mask, summed over the bucket dim for per-bucket
+    ``(n_buckets, n, s)`` masks (one count per link per step)."""
+    n, s = mask.shape[-2], mask.shape[-1]
+    non_own = ~rps_lib.owner_mask(n, s)
+    counts = jnp.sum(mask & non_own, axis=-1, dtype=jnp.int32)
+    if mask.ndim == 3:
+        counts = jnp.sum(counts, axis=0)
+    return counts
+
+
+def _np_owner_mask(n: int, s: int) -> np.ndarray:
+    """Numpy twin of ``rps.owner_mask`` — usable for *static* layout math
+    inside a jit trace, where the jnp version would stage to a tracer."""
+    own = np.zeros((n, s), bool)
+    own[np.arange(s) % n, np.arange(s)] = True
+    return own
+
+
+def link_offered(n: int, s: Optional[int] = None,
+                 n_buckets: Optional[int] = None) -> np.ndarray:
+    """Per-sender offered (non-owned) packet count per step: ``(n,)`` i64
+    numpy — static, a property of the layout, not of any draw."""
+    s = n if s is None else int(s)
+    offered = s - _np_owner_mask(n, s).sum(axis=1)
+    if n_buckets is not None:
+        offered = offered * int(n_buckets)
+    return offered.astype(np.int64)
+
+
+def divisor_stats(div: jax.Array) -> Dict[str, jax.Array]:
+    """min/mean/max of the renorm divisor table (any shape) — the live
+    view of how thin the received averages ran this round."""
+    d = div.astype(jnp.float32)
+    return {"min": jnp.min(d), "mean": jnp.mean(d), "max": jnp.max(d)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    """l2 norm over every leaf of a pytree (f32 accumulate)."""
+    leaves = [x for x in jax.tree.leaves(tree) if x is not None]
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def consensus_distance(stacked: jax.Array) -> jax.Array:
+    """Mean squared distance to the worker mean of one stacked ``(n, …)``
+    leaf — summed over leaves by the caller. The paper's consensus
+    quantity the α bounds govern."""
+    x = stacked.astype(jnp.float32)
+    mean = jnp.mean(x, axis=0, keepdims=True)
+    return jnp.mean(jnp.sum(jnp.square(x - mean),
+                            axis=tuple(range(1, x.ndim))))
+
+
+def mask_step_stats(rs: jax.Array, ag: jax.Array) -> Dict[str, jax.Array]:
+    """The standard per-step counter bundle from one (rs, ag) draw —
+    what the exchange paths tap and the trainer computes at step level."""
+    rs_d = link_delivered(rs)
+    ag_d = link_delivered(ag)
+    n, s = rs.shape[-2], rs.shape[-1]
+    nb = rs.shape[0] if rs.ndim == 3 else None
+    offered = jnp.asarray(link_offered(n, s, nb))
+    tot = jnp.maximum(jnp.sum(offered), 1)
+    return {
+        "rs_link_delivered": rs_d,
+        "ag_link_delivered": ag_d,
+        "link_offered": offered,
+        "rs_drop_rate": 1.0 - jnp.sum(rs_d) / tot,
+        "ag_drop_rate": 1.0 - jnp.sum(ag_d) / tot,
+    }

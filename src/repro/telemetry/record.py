@@ -1,0 +1,68 @@
+"""Structured per-step records and the run-history container.
+
+``run_simulation`` used to return an ad-hoc dict of stacked arrays
+(loss / consensus / divergence per step). :class:`RunHistory` keeps that
+exact mapping interface — every existing consumer (tests, benches,
+launch/train.py's JSON dump) still indexes ``hist["loss"]`` — and adds
+``.records``: the telemetry subsystem's list of JSON-ready per-step
+dicts, plus the run-level ``.summary`` written by the registry.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+def to_jsonable(x: Any) -> Any:
+    """Recursively convert a step-stat pytree (jax/numpy arrays, scalars,
+    dicts, tuples) into plain JSON types. 0-d arrays become numbers,
+    1-d+ arrays become nested lists."""
+    if x is None or isinstance(x, (bool, int, float, str)):
+        return x
+    if isinstance(x, dict):
+        return {str(k): to_jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [to_jsonable(v) for v in x]
+    if hasattr(x, "dtype"):                     # jax / numpy array
+        arr = np.asarray(x)
+        if arr.dtype.kind in "fc":
+            arr = arr.astype(np.float64)
+        elif arr.dtype.kind in "iub":
+            arr = arr.astype(np.int64)
+        if arr.ndim == 0:
+            v = arr.item()
+            # NaN/Inf are not JSON: stringify so the sink never throws
+            if isinstance(v, float) and not np.isfinite(v):
+                return str(v)
+            return v
+        return np.where(np.isfinite(arr), arr, 0.0).tolist() \
+            if arr.dtype.kind == "f" and not np.isfinite(arr).all() \
+            else arr.tolist()
+    if isinstance(x, (np.floating, np.integer, np.bool_)):
+        return x.item()
+    return str(x)
+
+
+def make_step_record(step: int, stats: Optional[Dict[str, Any]] = None,
+                     **extra: Any) -> Dict[str, Any]:
+    """One JSON-ready step record: the tapped stat bundle flattened
+    beside any caller extras (loss, lr, norms…)."""
+    rec: Dict[str, Any] = {"step": int(step)}
+    for src in (stats or {}), extra:
+        for k, v in src.items():
+            rec[k] = to_jsonable(v)
+    return rec
+
+
+class RunHistory(dict):
+    """The simulator's history mapping plus telemetry attachments.
+
+    Behaves exactly like the legacy dict of stacked per-step arrays;
+    ``records`` is the per-step telemetry record list (empty when
+    telemetry was off) and ``summary`` the registry's run summary."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.records: List[Dict[str, Any]] = []
+        self.summary: Dict[str, Any] = {}

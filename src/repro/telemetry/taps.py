@@ -1,0 +1,98 @@
+"""Trace-time tap context: on-device counters out of a jitted step.
+
+The counter-lifecycle problem (DESIGN.md §14): ``_exchange_table`` runs
+*inside* ``jax.jit`` with donated buffers, and the f32+renorm default is
+contractually bit-identical with telemetry on or off. We therefore never
+mutate state or add host callbacks from inside the trace. Instead:
+
+  * a step builder installs a :class:`TapCollector` around tracing its
+    step body (``with tap_collector() as tap:``),
+  * instrumented code calls :func:`emit` with *traced* arrays (pure
+    functions of existing values — no new ops on the main dataflow) and
+    :func:`annotate` with static Python metadata,
+  * the builder returns ``tap.tree()`` as an **extra jit output**. The
+    taps become ordinary additional outputs of the compiled function:
+    donation of the inputs is untouched and the original outputs'
+    HLO is unchanged, so bitwise parity holds by construction.
+
+With no collector installed (the default), :func:`emit` is a no-op and
+the instrumented code traces to exactly what it traced before. Collectors
+nest; emissions go to the innermost one. Note emissions cannot cross a
+``shard_map`` or ``lax.cond`` trace boundary — code under those installs
+no taps (the trainer derives its stats at step level instead).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Dict, List, Optional
+
+_local = threading.local()
+
+
+def _stack() -> List["TapCollector"]:
+    if not hasattr(_local, "stack"):
+        _local.stack = []
+    return _local.stack
+
+
+class TapCollector:
+    """Accumulates tapped traced arrays + static metadata during one trace.
+
+    ``taps`` maps name -> traced array (or list of them when the same name
+    is emitted repeatedly, e.g. once per bucket); ``meta`` maps name ->
+    static Python value captured at trace time.
+    """
+
+    def __init__(self) -> None:
+        self.taps: Dict[str, Any] = {}
+        self.meta: Dict[str, Any] = {}
+
+    def add(self, name: str, value: Any) -> None:
+        if name in self.taps:
+            cur = self.taps[name]
+            if isinstance(cur, list):
+                cur.append(value)
+            else:
+                self.taps[name] = [cur, value]
+        else:
+            self.taps[name] = value
+
+    def tree(self) -> Dict[str, Any]:
+        """The tap pytree to return as an extra output of the jitted fn."""
+        return dict(self.taps)
+
+
+@contextmanager
+def tap_collector():
+    """Install a collector for the duration of tracing a step body."""
+    col = TapCollector()
+    _stack().append(col)
+    try:
+        yield col
+    finally:
+        _stack().pop()
+
+
+def active() -> Optional[TapCollector]:
+    st = _stack()
+    return st[-1] if st else None
+
+
+def emit(name: str, value: Any) -> None:
+    """Tap a traced array under ``name``; no-op without a collector.
+
+    ``value`` must be a pure function of existing traced values — it is
+    routed out as an extra jit output, never fed back into the main
+    computation.
+    """
+    col = active()
+    if col is not None:
+        col.add(name, value)
+
+
+def annotate(name: str, value: Any) -> None:
+    """Record static (non-traced) metadata, e.g. wire bytes from the plan."""
+    col = active()
+    if col is not None:
+        col.meta[name] = value

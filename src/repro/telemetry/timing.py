@@ -1,0 +1,94 @@
+"""One bench timer for the whole repo (DESIGN.md §14).
+
+Every ``benchmarks/*_bench.py`` used to hand-roll the same
+``block_until_ready`` + wall-clock boilerplate with subtly different
+conventions (average vs best-of, sync inside vs outside the loop). Both
+idioms live here so all ``BENCH_*.json`` artifacts report timings the same
+way:
+
+  :func:`time_fn`    compile + warm up, then best-of-``reps`` batches of
+                     ``iters`` calls with ONE device sync per batch —
+                     the steady-state per-call latency (seconds).
+  :func:`wallclock`  a context manager for one-shot end-to-end sections
+                     (a whole simulation run, a curve sweep).
+
+Both report into the active :class:`repro.telemetry.Telemetry` registry
+(when one is installed via ``set_current`` — e.g. ``benchmarks/run.py
+--telemetry``): each labelled measurement lands as a Chrome-trace span and
+a row of the registry's timing table, so one run report covers every bench.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Any, Optional
+
+
+def _sync(x: Any) -> None:
+    import jax
+    jax.block_until_ready(x)
+
+
+def time_fn(fn, *args, reps: int = 5, iters: int = 1,
+            warmup: Optional[int] = None, label: Optional[str] = None,
+            **kwargs) -> float:
+    """Steady-state seconds per call of ``fn(*args, **kwargs)``.
+
+    One compile call (synced), ``warmup`` extra calls (default
+    ``max(1, iters // 2)``, synced once), then ``reps`` batches of
+    ``iters`` back-to-back calls with a single ``block_until_ready`` per
+    batch; returns the best batch's per-call time — the convention every
+    bench artifact uses. ``label`` reports the measurement into the
+    active telemetry registry (no-op without one).
+    """
+    out = fn(*args, **kwargs)
+    _sync(out)                                   # compile + first run
+    for _ in range(max(1, iters // 2) if warmup is None else warmup):
+        out = fn(*args, **kwargs)
+    _sync(out)
+    best = float("inf")
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        for _ in range(max(1, iters)):
+            out = fn(*args, **kwargs)
+        _sync(out)
+        best = min(best, (time.perf_counter() - t0) / max(1, iters))
+    if label is not None:
+        _report(label, best)
+    return best
+
+
+class _Clock:
+    """Result object of :func:`wallclock`: ``.s`` seconds, ``.us``/``.ms``
+    for the CSV conventions the benches print."""
+    s: float = 0.0
+
+    @property
+    def us(self) -> float:
+        return self.s * 1e6
+
+    @property
+    def ms(self) -> float:
+        return self.s * 1e3
+
+
+@contextmanager
+def wallclock(label: Optional[str] = None):
+    """``with wallclock("convergence_p0.1") as w: ...; w.us`` — one-shot
+    wall-clock of a section, reported into the active telemetry registry
+    (as a span + timing row) when ``label`` is given."""
+    w = _Clock()
+    t0 = time.perf_counter()
+    try:
+        yield w
+    finally:
+        w.s = time.perf_counter() - t0
+        if label is not None:
+            _report(label, w.s)
+
+
+def _report(label: str, seconds: float) -> None:
+    from repro import telemetry as _t
+    reg = _t.get_current()
+    if reg is not None:
+        reg.note_timing(label, seconds)

@@ -29,10 +29,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import channels as channels_lib
+from repro import telemetry as telemetry_lib
 from repro.core import plan as plan_lib
 from repro.core import rps as rps_lib
 from repro.core import wire as wire_lib
 from repro.optim import make_optimizer
+from repro.telemetry import counters as counters_lib
+from repro.telemetry import taps as taps_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +94,13 @@ class SimulatorConfig:
     # (donate_argnums) so the sweep never double-buffers the model;
     # False keeps the seed's copying behaviour (the A/B for
     # benchmarks/ring_bench.py's peak-memory delta).
+    telemetry: bool = False
+    # exchange telemetry (DESIGN.md §14): the jitted step additionally
+    # returns the tapped counter bundle (per-link delivery counts,
+    # divisors, grad/param norms) and run_simulation records structured
+    # per-step records + the live per-link drop-rate estimate. The
+    # primary outputs are bit-identical either way — the taps are extra
+    # pure outputs; False (default) adds nothing to the traced graph.
 
 
 def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool,
@@ -137,7 +147,7 @@ def make_exchange_plan(params: Any, scfg: SimulatorConfig):
 
 
 def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
-                  plan, opt):
+                  plan, opt, telemetry: Optional[bool] = None):
     """The jitted simulator step, factored out so tests and benchmarks can
     inspect its compilation (donation, peak memory) directly.
 
@@ -147,33 +157,46 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
     double-buffers the whole model every step.
     signature: step(params, opt_state, batch, key, lr, ch_state
     [, ef_state], exchange=True) -> (params, opt_state, loss, consensus,
-    ch_state[, ef_state]) — the EF slot appears exactly when
+    ch_state[, ef_state][, stats]) — the EF slot appears exactly when
     ``scfg.recovery == "ef"`` on an rps aggregator (the residual is an
     extra stacked params-shaped leaf of step state, DESIGN.md §13).
+
+    ``telemetry`` (default ``scfg.telemetry``) appends the tapped stats
+    dict (DESIGN.md §14): a trace-time collector installed around the
+    step body routes the exchange taps (per-link delivery counts,
+    divisors, EF residual) plus grad/param norms out as ONE extra pure
+    output. The primary outputs trace to the identical graph either way
+    — nothing is inserted into their dataflow and donation is untouched
+    — so the f32+renorm default stays bit-identical (pinned in
+    tests/test_telemetry.py).
     """
     n = scfg.n_workers
     is_grad_mode = scfg.aggregator.endswith("_grad")
     rps_agg = scfg.aggregator.startswith("rps")
     use_ef = rps_agg and scfg.recovery == "ef"
+    telemetry = scfg.telemetry if telemetry is None else telemetry
     # the scale divisor uses the channel's stationary marginal, not the
     # raw drop_rate knob (they differ for GE/hetero/trace channels)
     recovery = wire_lib.make_recovery(
         scfg.recovery, p=channel.effective_p()) if rps_agg else None
 
-    def step_fn(params, opt_state, batch, key, lr, ch_state,
-                ef_state=None, exchange=True):
+    def body(tap, params, opt_state, batch, key, lr, ch_state, ef_state,
+             exchange):
         def total(ps, bs):
             return jnp.sum(jax.vmap(loss_fn)(ps, bs))
 
         masks = None
         if rps_agg:     # channel time advances every step, exchange or not
-            if plan.per_bucket_masks:   # packetised: one draw per bucket
-                rs, ag, ch_state_new = channel.sample_packets(
-                    key, ch_state, plan.n_buckets)
-            else:
-                rs, ag, ch_state_new = channel.sample(key, ch_state)
-            masks, ch_state = (rs, ag), ch_state_new
+            with jax.named_scope("rps.masks"):
+                if plan.per_bucket_masks:  # packetised: a draw per bucket
+                    rs, ag, ch_state_new = channel.sample_packets(
+                        key, ch_state, plan.n_buckets)
+                else:
+                    rs, ag, ch_state_new = channel.sample(key, ch_state)
+                masks, ch_state = (rs, ag), ch_state_new
         loss, grads = jax.value_and_grad(total)(params, batch)
+        if tap is not None:
+            taps_lib.emit("grad_norm", counters_lib.global_norm(grads))
         if is_grad_mode:
             if exchange:
                 out = _exchange(grads, key, scfg, is_grad=True,
@@ -192,8 +215,23 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
         consensus = jax.tree.reduce(
             lambda a, x: a + jnp.sum(jnp.square(x.astype(jnp.float32))),
             jax.tree.map(lambda x, m: x - m, params, mean_p), jnp.float32(0))
+        if tap is not None:
+            taps_lib.emit("param_norm", counters_lib.global_norm(params))
         base = (params, opt_state, loss / n, consensus, ch_state)
         return base + ((ef_state,) if use_ef else ())
+
+    if telemetry:
+        def step_fn(params, opt_state, batch, key, lr, ch_state,
+                    ef_state=None, exchange=True):
+            with taps_lib.tap_collector() as tap:
+                base = body(tap, params, opt_state, batch, key, lr,
+                            ch_state, ef_state, exchange)
+            return base + (tap.tree(),)
+    else:
+        def step_fn(params, opt_state, batch, key, lr, ch_state,
+                    ef_state=None, exchange=True):
+            return body(None, params, opt_state, batch, key, lr,
+                        ch_state, ef_state, exchange)
 
     donate = ((0, 1, 5) + ((6,) if use_ef else ())) if scfg.donate else ()
     return jax.jit(step_fn, static_argnames=("exchange",),
@@ -204,7 +242,8 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
                    batch_fn: Callable, scfg: SimulatorConfig,
                    eval_fn: Optional[Callable] = None,
                    state: Optional[Dict[str, Any]] = None,
-                   start_step: int = 0) -> Dict[str, Any]:
+                   start_step: int = 0,
+                   telemetry=None) -> Dict[str, Any]:
     """loss_fn(params, batch) -> scalar; init_fn(key) -> params;
     batch_fn(step) -> stacked batch pytree with leading dim n_workers.
 
@@ -214,6 +253,17 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
     — a checkpointable pytree bundle (``checkpoint.ckpt``). Passing it
     back via ``state=``/``start_step=`` resumes the run bitwise
     identically (the per-step keys/lr are functions of the step index).
+
+    Telemetry (DESIGN.md §14): ``telemetry`` takes a
+    :class:`repro.telemetry.Telemetry` registry to report into (the
+    launch CLIs pass theirs); ``scfg.telemetry`` alone builds a private
+    in-memory one. Either way the returned history is a
+    :class:`repro.telemetry.RunHistory` — the legacy mapping, plus
+    ``.records`` (structured per-step records) and ``.summary``
+    (per-link observed-vs-expected drop rates with the α bounds). The
+    per-step stat bundle stays on device during the loop and is drained
+    **after** it, so the async-dispatch pipeline (and the <5% overhead
+    budget) survives telemetry.
     """
     n = scfg.n_workers
     key = jax.random.PRNGKey(scfg.seed)
@@ -239,17 +289,32 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
         opt_state = state["opt_state"]
         ch_state = state.get("ch_state", ch_state)
         ef_state = state.get("ef_state", ef_state)
+    reg = telemetry
+    use_tel = scfg.telemetry or reg is not None
+    if use_tel and reg is None:
+        reg = telemetry_lib.Telemetry()
     # the exchange layout, computed once — never inside the jitted step
     # (DESIGN.md §11); grads share the params' tree so one plan serves both
-    plan = make_exchange_plan(p1, scfg)
-    step_fn = make_sim_step(loss_fn, scfg, channel, plan, opt)
+    if use_tel:
+        with reg.span("plan_build"):
+            plan = make_exchange_plan(p1, scfg)
+        reg.bind(plan=plan, n=n,
+                 p=channel.effective_p() if rps_agg else None,
+                 channel=channel if rps_agg else None,
+                 aggregator=scfg.aggregator)
+    else:
+        plan = make_exchange_plan(p1, scfg)
+    step_fn = make_sim_step(loss_fn, scfg, channel, plan, opt,
+                            telemetry=use_tel)
 
-    history = {"step": [], "loss": [], "consensus": [], "eval": [],
-               "channel": repr(channel),
-               "channel_effective_p": channel.effective_p() if rps_agg
-               else 0.0,
-               "exchange_plan": plan.describe() if plan is not None
-               else None}
+    history = telemetry_lib.RunHistory(
+        {"step": [], "loss": [], "consensus": [], "eval": [],
+         "channel": repr(channel),
+         "channel_effective_p": channel.effective_p() if rps_agg
+         else 0.0,
+         "exchange_plan": plan.describe() if plan is not None
+         else None})
+    pending = []        # (t, lr, loss, consensus, stats) — drained post-loop
     for t in range(start_step, scfg.steps):
         kt = jax.random.fold_in(key, t)
         lr = scfg.lr * min(1.0, (t + 1) / max(scfg.warmup, 1))
@@ -258,11 +323,16 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
             params, opt_state, batch, kt, jnp.float32(lr), ch_state,
             *((ef_state,) if use_ef else ()),
             exchange=(t % scfg.exchange_every == 0))
+        if use_tel:
+            stats = outs[-1]
+            outs = outs[:-1]
         if use_ef:
             (params, opt_state, loss, consensus, ch_state,
              ef_state) = outs
         else:
             params, opt_state, loss, consensus, ch_state = outs
+        if use_tel:
+            pending.append((t, lr, loss, consensus, stats))
         if t % scfg.eval_every == 0 or t == scfg.steps - 1:
             history["step"].append(t)
             history["loss"].append(float(loss))
@@ -270,6 +340,13 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
             if eval_fn is not None:
                 mean_params = jax.tree.map(lambda x: jnp.mean(x, 0), params)
                 history["eval"].append(float(eval_fn(mean_params)))
+    if use_tel:
+        with reg.span("record_drain", steps=len(pending)):
+            for t, lr, loss, consensus, stats in pending:
+                reg.record_step(t, stats, loss=loss, consensus=consensus,
+                                lr=lr)
+        history.records = list(reg.memory.records)
+        history.summary = reg.summary()
     history["final_loss"] = history["loss"][-1]
     history["params"] = params
     # final channel state: lets callers verify channel time advanced once

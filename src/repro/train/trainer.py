@@ -102,6 +102,17 @@ class TrainConfig:
                                            # carries a params-shaped
                                            # residual (see
                                            # make_train_setup).
+    telemetry: bool = False                # exchange telemetry (DESIGN.md
+                                           # §14): metrics gain a
+                                           # "telemetry" sub-dict (per-link
+                                           # delivery counts, drop rates,
+                                           # grad norm), computed at STEP
+                                           # level from the same mask draw
+                                           # the exchange consumes — taps
+                                           # cannot cross the shard_map /
+                                           # lax.cond trace boundaries the
+                                           # exchange runs under. Primary
+                                           # outputs stay bit-identical.
 
 
 def _is_model_mode(agg: str) -> bool:
@@ -355,6 +366,34 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
                 rs, ag, ch_state = channel.sample(key, ch_state)
             masks = (rs, ag)
 
+        tel_stats = None
+        if tcfg.telemetry and rps_agg and n_rps > 1:
+            # step-level counters (DESIGN.md §14): the exchange itself runs
+            # under shard_map (and lax.cond for exchange_every > 1), whose
+            # trace boundaries taps cannot cross — so derive the stats here
+            # from the SAME mask draw the exchange consumes: the channel's
+            # step-level draw when stateful, else the identical
+            # deterministic sample_masks(key, …) replay of the in-body
+            # default (both are pure functions of the shared step key).
+            from repro.telemetry import counters as counters_lib
+            if masks is not None:
+                rs_t, ag_t = masks
+            else:
+                rs_t, ag_t = rps_lib.sample_masks(
+                    key, n_rps, tcfg.drop_rate, plan.s,
+                    n_buckets=plan.n_buckets if plan.per_bucket_masks
+                    else None)
+            tel_stats = counters_lib.mask_step_stats(rs_t, ag_t)
+            tel_stats["grad_norm"] = counters_lib.global_norm(grads)
+            if tcfg.exchange_every > 1:
+                # skipped rounds consume no masks: zero delivered AND
+                # offered so the estimator skips them (offered == 0)
+                live = jnp.asarray(step % tcfg.exchange_every == 0,
+                                   jnp.int32)
+                for k in ("rs_link_delivered", "ag_link_delivered",
+                          "link_offered"):
+                    tel_stats[k] = tel_stats[k] * live
+
         lr = jnp.float32(tcfg.lr)
         ef = ef_state if use_ef else None
         if _is_model_mode(tcfg.aggregator) or tcfg.aggregator == "none":
@@ -390,6 +429,8 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
                        "lr": lr,
                        **{k: jnp.mean(v) for k, v in
                           (metrics or {}).items()}}
+        if tel_stats is not None:
+            out_metrics["telemetry"] = tel_stats
         out = (new_params, opt_state, out_metrics)
         if stateful:
             out = out + (ch_state,)

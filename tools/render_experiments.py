@@ -1,5 +1,23 @@
-"""Render results/dryrun_*.json into the EXPERIMENTS.md roofline tables."""
+"""Render experiment artifacts for humans.
+
+Two modes:
+
+  # EXPERIMENTS.md roofline tables from results/dryrun_*.json (legacy)
+  python tools/render_experiments.py results/dryrun_baseline.json
+
+  # standalone HTML report from a --telemetry-dir run (DESIGN.md §14)
+  python tools/render_experiments.py --telemetry DIR [--html out.html]
+
+The telemetry report shows the run context (plan, channel, α bounds),
+the per-link observed-vs-expected drop-rate table with the drift
+verdict, loss / drop-rate sparklines over the recorded steps, and the
+unified bench-timing table — all from summary.json + telemetry.jsonl,
+no dependencies beyond the stdlib.
+"""
+import argparse
+import html
 import json
+import os
 import sys
 
 ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
@@ -26,7 +44,7 @@ def rows(results, mesh):
     return out
 
 
-def main(path):
+def main_dryrun(path):
     with open(path) as f:
         results = json.load(f)
     hdr = ("| arch | shape | t_comp ms | t_mem ms | t_coll ms | bottleneck "
@@ -42,5 +60,181 @@ def main(path):
           f"of {len(results)}")
 
 
+# ---------------------------------------------------------------------------
+# telemetry HTML report
+# ---------------------------------------------------------------------------
+
+_CSS = """
+body { font: 14px/1.5 system-ui, sans-serif; margin: 2em auto;
+       max-width: 62em; color: #1b1f24; }
+h1 { font-size: 1.4em; } h2 { font-size: 1.1em; margin-top: 1.6em; }
+table { border-collapse: collapse; margin: .6em 0; }
+th, td { border: 1px solid #d0d7de; padding: .25em .6em;
+         text-align: right; font-variant-numeric: tabular-nums; }
+th { background: #f6f8fa; }
+td.l, th.l { text-align: left; }
+.ok { color: #1a7f37; } .bad { color: #cf222e; font-weight: 600; }
+.meta { color: #57606a; }
+svg { background: #f6f8fa; border: 1px solid #d0d7de; }
+"""
+
+
+def _sparkline(vals, width=480, height=64, color="#0969da"):
+    """Inline SVG polyline of a numeric series (min-max scaled)."""
+    vals = [float(v) for v in vals
+            if v is not None and v == v]            # drop None/NaN
+    if len(vals) < 2:
+        return "<p class=meta>not enough points</p>"
+    lo, hi = min(vals), max(vals)
+    span = (hi - lo) or 1.0
+    pad = 4
+    pts = " ".join(
+        f"{pad + i * (width - 2 * pad) / (len(vals) - 1):.1f},"
+        f"{height - pad - (v - lo) * (height - 2 * pad) / span:.1f}"
+        for i, v in enumerate(vals))
+    return (f'<svg width="{width}" height="{height}" '
+            f'viewBox="0 0 {width} {height}">'
+            f'<polyline fill="none" stroke="{color}" stroke-width="1.5" '
+            f'points="{pts}"/></svg>'
+            f'<div class=meta>first={vals[0]:.4g} last={vals[-1]:.4g} '
+            f'min={lo:.4g} max={hi:.4g} ({len(vals)} points)</div>')
+
+
+def _link_table(link):
+    """Per-link observed-vs-expected table from a drift() dict."""
+    obs, exp = link["observed_p"], link["expected_p"]
+    se, tol = link["stderr"], link["tolerance"]
+    drifted = link["drifted"]
+    pkts = link["packets"]
+    out = ["<table><tr><th class=l>link</th><th>observed p</th>"
+           "<th>expected p</th><th>stderr</th><th>tolerance</th>"
+           "<th>packets</th><th class=l>verdict</th></tr>"]
+    for i in range(len(obs)):
+        cls = "bad" if drifted[i] else "ok"
+        word = "DRIFT" if drifted[i] else "ok"
+        out.append(
+            f"<tr><td class=l>{i}</td><td>{obs[i]:.4f}</td>"
+            f"<td>{exp[i]:.4f}</td><td>{se[i]:.4f}</td>"
+            f"<td>{tol[i]:.4f}</td><td>{pkts[i]:.0f}</td>"
+            f"<td class='l {cls}'>{word}</td></tr>")
+    out.append("</table>")
+    return "".join(out)
+
+
+def render_telemetry_html(tel_dir):
+    """Build the HTML report string from a --telemetry-dir directory."""
+    with open(os.path.join(tel_dir, "summary.json")) as f:
+        summ = json.load(f)
+    records = []
+    jsonl = os.path.join(tel_dir, "telemetry.jsonl")
+    if os.path.exists(jsonl):
+        with open(jsonl) as f:
+            records = [json.loads(line) for line in f if line.strip()]
+
+    meta = summ.get("meta", {})
+    parts = ["<!doctype html><meta charset=utf-8>",
+             "<title>exchange telemetry report</title>",
+             f"<style>{_CSS}</style>",
+             "<h1>Exchange telemetry report</h1>"]
+
+    # run context
+    parts.append("<h2>Run context</h2><table>")
+    for k in ("n", "p", "channel", "aggregator"):
+        if k in meta:
+            parts.append(f"<tr><th class=l>{k}</th><td class=l>"
+                         f"{html.escape(str(meta[k]))}</td></tr>")
+    plan = meta.get("plan")
+    if plan:
+        parts.append(
+            f"<tr><th class=l>plan</th><td class=l>"
+            f"{plan.get('n_buckets')} buckets × s={plan.get('s')}, "
+            f"wire={plan.get('wire')}/{plan.get('recovery')}, "
+            f"payload={plan.get('payload_bytes', 0):,} B</td></tr>")
+    ab = meta.get("alpha_bounds")
+    if ab:
+        parts.append(
+            f"<tr><th class=l>α bounds (theory)</th><td class=l>"
+            f"α₁={ab['alpha1']:.4f}, α₂={ab['alpha2']:.4f}</td></tr>")
+    parts.append(f"<tr><th class=l>steps recorded</th>"
+                 f"<td class=l>{summ.get('steps', 0)}</td></tr></table>")
+
+    # per-link drift
+    link = summ.get("link_p")
+    if link:
+        for leg, title in (("rs", "Reduce-scatter leg"),
+                           ("ag", "All-gather leg")):
+            d = link.get(leg)
+            if not d:
+                continue
+            verdict = ("<span class=bad>DRIFT DETECTED</span>"
+                       if d["any_drift"] else
+                       "<span class=ok>within tolerance</span>")
+            parts.append(
+                f"<h2>Per-link delivery — {title}</h2>"
+                f"<p>Observed effective drop rate per link vs the "
+                f"configured channel: {verdict} "
+                f"(max |dev| = {d['max_abs_dev']:.4f}).</p>")
+            parts.append(_link_table(d))
+    else:
+        parts.append("<h2>Per-link delivery</h2><p class=meta>no link "
+                     "counters in this run (non-RPS aggregator or no "
+                     "exchange).</p>")
+
+    # step series
+    if records:
+        parts.append("<h2>Step series</h2>")
+        for key, label in (("loss", "loss"),
+                           ("rs_drop_rate", "realized RS drop rate"),
+                           ("grad_norm", "gradient norm"),
+                           ("consensus", "consensus distance")):
+            vals = [r.get(key) for r in records if r.get(key) is not None]
+            if vals:
+                parts.append(f"<h3>{label}</h3>{_sparkline(vals)}")
+
+    # timings
+    tim = summ.get("timings_s")
+    if tim:
+        parts.append("<h2>Timings</h2><table><tr><th class=l>label</th>"
+                     "<th>best ms</th><th>mean ms</th><th>n</th></tr>")
+        for k in sorted(tim):
+            v = tim[k]
+            parts.append(f"<tr><td class=l>{html.escape(k)}</td>"
+                         f"<td>{v['best']*1e3:.3f}</td>"
+                         f"<td>{v['mean']*1e3:.3f}</td>"
+                         f"<td>{v['n']}</td></tr>")
+        parts.append("</table>")
+
+    parts.append("<p class=meta>Generated by "
+                 "tools/render_experiments.py --telemetry; trace.json in "
+                 "the same directory loads in Perfetto / "
+                 "chrome://tracing.</p>")
+    return "\n".join(parts)
+
+
+def main_telemetry(tel_dir, html_out=None):
+    doc = render_telemetry_html(tel_dir)
+    out = html_out or os.path.join(tel_dir, "report.html")
+    with open(out, "w") as f:
+        f.write(doc)
+    print("report ->", out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?", default=None,
+                    help="dryrun results JSON (legacy roofline mode)")
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="render an HTML report from a --telemetry-dir "
+                         "directory (summary.json + telemetry.jsonl)")
+    ap.add_argument("--html", default=None,
+                    help="output path for the telemetry report "
+                         "(default: DIR/report.html)")
+    args = ap.parse_args(argv)
+    if args.telemetry:
+        main_telemetry(args.telemetry, args.html)
+    else:
+        main_dryrun(args.path or "results/dryrun_baseline.json")
+
+
 if __name__ == "__main__":
-    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline.json")
+    main()
