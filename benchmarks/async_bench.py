@@ -1,0 +1,212 @@
+"""Async overlap engine benchmark (DESIGN.md §15).
+
+Sections (all committed to ``BENCH_async.json``):
+
+  1. **Roofline overlap** (analytic, v5e HW constants from
+     ``repro.roofline.analysis.HW``): buckets ship in reverse-layer order
+     at their ``ExchangePlan.ready_ms`` readiness times while the backward
+     pass is still running; the link serialises dispatches
+     (``start_b = max(ready_b, prev_finish)``). Exposed comm is whatever
+     finishes after the backward does; ``overlap_frac = 1 − exposed /
+     total_comm``. Swept over the comm/compute ratio r — in the
+     compute-bound regime (r ≤ 0.9, where overlap is *possible*) the
+     reverse-order schedule must hide **≥ 80%** of exchange time
+     (``overlap_frac_min``; the sync barrier hides 0% by construction at
+     every r).
+
+  2. **Straggler time-to-loss** (simulator, deadline channel): a
+     straggler-heavy scenario family (straggler_frac × mult). Sync pays
+     ``compute_ms + deadline_ms`` per iteration (backward, then the
+     barriered exchange window); async overlaps the exchange with the
+     backward pass — ``max(compute_ms, deadline_ms)`` per iteration — but
+     each bucket faces a *reduced* slack, so it drops/writes-off more
+     packets and needs more steps to a given loss. The bench converts
+     both loss curves to modelled wall-clock and reports time-to-target
+     per scenario: async must win (``async_speedup_min > 1``) across the
+     family.
+
+Run:  PYTHONPATH=src python -m benchmarks.async_bench [--quick] \
+          [--out BENCH_async.json]
+"""
+import argparse
+import json
+
+N_WORKERS = 8
+COMPUTE_MS = 8.0
+DEADLINE_MS = 10.0
+
+
+def _overlap_schedule(ready_ms, comm_ms, compute_ms):
+    """Wall-clock of the reverse-order async dispatch on one serial link:
+    bucket b's exchange starts at max(its readiness, the previous
+    dispatch's finish). Returns (exposed_ms, total_comm_ms)."""
+    t = 0.0
+    for r, c in zip(ready_ms, comm_ms):
+        t = max(r, t) + c
+    exposed = max(0.0, t - compute_ms)
+    return exposed, float(sum(comm_ms))
+
+
+def bench_roofline(quick):
+    """Analytic overlap sweep on a real ExchangePlan + v5e HW constants."""
+    import jax.numpy as jnp
+    from repro.core import plan as plan_lib
+    from repro.roofline.analysis import HW
+
+    hw = HW()
+    n, n_buckets = 16, 8
+    # a transformer-ish stack of equal layers; one bucket per layer pair
+    tree = {f"layer{i}": jnp.zeros((1024, 512), jnp.float32)
+            for i in range(16)}
+    plan = plan_lib.make_plan(tree, n, n_buckets=n_buckets,
+                              schedule="async", compute_ms=COMPUTE_MS)
+    ready = list(plan.ready_ms)
+    order = plan.ship_order
+    # RS+AG moves ~2·(n−1)/n of the bucket bytes over the slowest link
+    bbytes = [plan.buckets[b].free * plan.buckets[b].m * 4 for b in order]
+    wire_factor = 2.0 * (n - 1) / n
+    base_comm = [wire_factor * bb / hw.link_bw * 1e3 for bb in bbytes]
+    base_total = sum(base_comm)
+
+    ratios = (0.25, 0.5, 0.75, 0.9, 1.1, 1.5) if not quick \
+        else (0.5, 0.9, 1.5)
+    out = {"n": n, "n_buckets": n_buckets, "compute_ms": COMPUTE_MS,
+           "link_bw_GBps": hw.link_bw / 1e9, "sweep": {}}
+    compute_bound = []
+    for r in ratios:
+        scale = r * COMPUTE_MS / base_total     # total comm = r × compute
+        comm = [c * scale for c in base_comm]
+        ready_o = [ready[b] for b in order]
+        exposed, total = _overlap_schedule(ready_o, comm, COMPUTE_MS)
+        overlap = 1.0 - exposed / total
+        # sync barrier: every byte ships after the backward — 0% hidden
+        out["sweep"][f"r{r}"] = {
+            "comm_over_compute": r,
+            "overlap_frac": float(overlap),
+            "exposed_ms": float(exposed),
+            "sync_exposed_ms": float(total),
+            "step_ms_async": COMPUTE_MS + exposed,
+            "step_ms_sync": COMPUTE_MS + total,
+        }
+        if r <= 0.9:
+            compute_bound.append(overlap)
+        print(f"  roofline r={r}: overlap={overlap:.3f} "
+              f"(exposed {exposed:.2f}ms of {total:.2f}ms comm)")
+    out["overlap_frac_min"] = float(min(compute_bound))
+    return out
+
+
+def _task(n, seed=0):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(n, 16, 6)), jnp.float32)
+    w_true = jnp.asarray(rng.normal(size=(6, 4)), jnp.float32)
+    ys = xs @ w_true
+
+    def init_fn(key):
+        return {"w": jax.random.normal(key, (6, 4)) * 0.1}
+
+    def loss_fn(p, b):
+        x, y = b
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    return loss_fn, init_fn, lambda t: (xs, ys)
+
+
+def _curve(schedule, chan, steps, seed=0):
+    from repro.train.simulator import SimulatorConfig, run_simulation
+    loss_fn, init_fn, batch_fn = _task(N_WORKERS, seed)
+    h = run_simulation(loss_fn, init_fn, batch_fn, SimulatorConfig(
+        n_workers=N_WORKERS, aggregator="rps_model", steps=steps, lr=0.2,
+        warmup=5, eval_every=1, n_buckets=4, seed=seed, channel=chan,
+        schedule=schedule, compute_ms=COMPUTE_MS if schedule == "async"
+        else None))
+    return h
+
+
+def _time_to(losses, target, step_ms):
+    for t, l in enumerate(losses):
+        if l <= target:
+            return (t + 1) * step_ms
+    return float("inf")
+
+
+def bench_time_to_loss(quick):
+    """Straggler-heavy family: async (overlapped, tighter slack, more
+    write-offs) vs sync (barriered, full deadline) on modelled
+    wall-clock to a common target loss."""
+    steps = 120 if quick else 300
+    family = ((0.2, 4.0), (0.3, 8.0)) if quick \
+        else ((0.2, 4.0), (0.3, 4.0), (0.3, 8.0), (0.4, 8.0))
+    step_ms_sync = COMPUTE_MS + DEADLINE_MS
+    step_ms_async = max(COMPUTE_MS, DEADLINE_MS)
+    out = {"step_ms_sync": step_ms_sync, "step_ms_async": step_ms_async,
+           "scenarios": {}}
+    speedups = []
+    for frac, mult in family:
+        chan = (f"deadline:deadline_ms={DEADLINE_MS},base_ms=1,"
+                f"jitter_ms=3,straggler_frac={frac},straggler_mult={mult}")
+        hs = _curve("sync", chan, steps)
+        ha = _curve("async", chan, steps)
+        # a target both schedules reach, just above the worse final loss
+        target = max(min(hs["loss"]), min(ha["loss"])) * 1.02
+        ts = _time_to(hs["loss"], target, step_ms_sync)
+        ta = _time_to(ha["loss"], target, step_ms_async)
+        sp = ts / ta
+        speedups.append(sp)
+        out["scenarios"][f"frac{frac}_mult{mult}"] = {
+            "straggler_frac": frac, "straggler_mult": mult,
+            "target_loss": float(target),
+            "sync_ms": float(ts), "async_ms": float(ta),
+            "async_speedup": float(sp),
+            "async_staleness_mean": float(
+                sum(ha["staleness"]) / max(len(ha["staleness"]), 1)),
+            "final_loss_sync": float(hs["final_loss"]),
+            "final_loss_async": float(ha["final_loss"])}
+        print(f"  straggler frac={frac} mult={mult}: "
+              f"sync {ts:.0f}ms vs async {ta:.0f}ms "
+              f"-> speedup {sp:.2f}x")
+    out["async_speedup_min"] = float(min(speedups))
+    return out
+
+
+def run(csv_rows, quick=False, out=None):
+    res = {"n_workers": N_WORKERS, "compute_ms": COMPUTE_MS,
+           "deadline_ms": DEADLINE_MS}
+    print(" roofline overlap (reverse-order dispatch vs sync barrier)")
+    res["roofline"] = bench_roofline(quick)
+    print(" straggler time-to-loss family (sync vs async)")
+    res["time_to_loss"] = bench_time_to_loss(quick)
+    res["overlap_frac_min"] = res["roofline"]["overlap_frac_min"]
+    res["async_speedup_min"] = res["time_to_loss"]["async_speedup_min"]
+    csv_rows.append(("async_overlap_frac_min", 0.0,
+                     f"{res['overlap_frac_min']:.2f}"))
+    csv_rows.append(("async_speedup_min", 0.0,
+                     f"{res['async_speedup_min']:.2f}"))
+    if out:                 # write before asserting: a failing run still
+        with open(out, "w") as f:           # ships its data to the CI
+            json.dump(res, f, indent=1)     # artifact
+        print("wrote", out)
+    print(f" overlap_frac_min={res['overlap_frac_min']:.2f} (>=0.8 OK), "
+          f"async_speedup_min={res['async_speedup_min']:.2f}x (>1 OK)")
+    assert res["overlap_frac_min"] >= 0.8, \
+        f"compute-bound overlap {res['overlap_frac_min']:.2f} < 0.8"
+    assert res["async_speedup_min"] > 1.0, \
+        "async must beat sync on time-to-loss, got " \
+        f"{res['async_speedup_min']:.2f}x"
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizing (fewer steps/scenarios)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run([], quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,9 +29,10 @@ def main() -> None:
                          "telemetry.jsonl here (implies --telemetry)")
     args = ap.parse_args()
 
-    from benchmarks import (alpha, channels_bench, colocation, convergence,
-                            exchange_bench, grad_vs_model, kernels_bench,
-                            ring_bench, server_sweep, speedup, wire_bench)
+    from benchmarks import (alpha, async_bench, channels_bench,
+                            colocation, convergence, exchange_bench,
+                            grad_vs_model, kernels_bench, ring_bench,
+                            server_sweep, speedup, wire_bench)
     all_benches = {
         "alpha": alpha.run,               # Figs 2/3
         "convergence": convergence.run,   # Fig 4
@@ -44,6 +45,7 @@ def main() -> None:
         "exchange": exchange_bench.run,   # DESIGN §11 bucketed vs per-leaf
         "ring": ring_bench.run,           # DESIGN §12 ring vs xla engine
         "wire": wire_bench.run,           # DESIGN §13 codec x recovery
+        "async": async_bench.run,         # DESIGN §15 overlap engine
     }
     reg = None
     if args.telemetry or args.telemetry_dir:

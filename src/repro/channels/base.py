@@ -112,6 +112,24 @@ class Channel:
         return (jnp.broadcast_to(rs, shape), jnp.broadcast_to(ag, shape),
                 state)
 
+    def sample_async(self, key: jax.Array, state: Any, slack_ms
+                     ) -> Tuple[jax.Array, jax.Array, dict, Any]:
+        """Per-bucket masks under the async overlap engine (DESIGN.md §15)
+        plus a lateness axis: ``(rs, ag, late, state)`` where ``late`` is
+        ``{"rs": bool (n_buckets, n, s), "ag": ...}`` marking packets that
+        would have met the sync deadline but missed their bucket's reduced
+        slack. Channels without a latency model have no notion of
+        lateness: the base implementation delegates to
+        :meth:`sample_packets` (identical masks, identical state advance —
+        the async/sync bit-identity fallback the trace-pair probes pin)
+        and reports zero lateness. :class:`~repro.channels.deadline.
+        DeadlineChannel` overrides this with real per-bucket slack
+        arbitration."""
+        nb = int(jnp.asarray(slack_ms).shape[0])
+        rs, ag, state = self.sample_packets(key, state, nb)
+        zero = jnp.zeros(rs.shape, bool)
+        return rs, ag, {"rs": zero, "ag": zero}, state
+
     # -- theory hook ------------------------------------------------------
     def effective_p(self) -> float:
         raise NotImplementedError
@@ -121,10 +139,25 @@ class Channel:
         non-owned packets each worker offers per step — the target the
         telemetry drift monitor (``telemetry/estimator.py``) compares the
         live per-link estimates against. Channels with a uniform marginal
-        inherit the broadcast scalar; per-link channels (heterogeneous)
-        override with their actual row marginals."""
+        inherit the broadcast scalar; per-link channels (heterogeneous,
+        trace) override with their actual row marginals.
+
+        This is the **RS-leg** expectation: row i averages the drop
+        probability of links i → owner(j) over non-owned blocks j. For
+        asymmetric link matrices the AG leg (owner(j) → i) differs —
+        see :meth:`expected_link_p_ag`."""
         import numpy as np
         return np.full(self.n, self.effective_p())
+
+    def expected_link_p_ag(self) -> "np.ndarray":
+        """Per-receiver ``(n,)`` expected drop probability for the
+        **AG leg** (links owner(j) → i). Defaults to the RS-leg
+        expectation — exact for every symmetric channel family; channels
+        with directionally asymmetric link matrices (trace replay with
+        distinct up/down loss) override it. The drift monitor
+        (``telemetry/registry.py``) compares each leg's estimator against
+        its own leg's expectation."""
+        return self.expected_link_p()
 
     def _dims(self) -> str:
         return f"n={self.n}" + (f", s={self.s}" if self.s != self.n else "")

@@ -13,11 +13,29 @@ coins per link:
 
 Drops are therefore *column/row-correlated*: when worker i straggles, its
 whole RS row (and AG column — it owns block i's broadcast) degrades at
-once, a structure no i.i.d. Bernoulli channel reproduces. The closed-form
+once, a structure no i.i.d. Bernoulli channel reproduces (pinned by the
+row/column property test in tests/test_channels.py). The closed-form
 marginal (exponential tail) keeps ``effective_p`` analytic:
 
     P(drop | base) = exp(−(deadline − base)/jitter)   for deadline > base
     effective_p    = q·P(mult·base) + (1 − q)·P(base)
+
+The marginal is *uniform across links* — straggling is i.i.d. per worker
+and jitter i.i.d. per packet, so every off-owner link shares the same
+stationary drop probability and the base-class ``expected_link_p``
+broadcast is exact for the telemetry drift monitor (the per-link
+correlation is within-iteration structure, invisible to the per-link
+mean; regression-tested in tests/test_telemetry.py).
+
+Async deadline arbitration (DESIGN.md §15): under the async overlap
+engine a bucket that becomes ready ``r`` ms into the backward pass has
+only ``slack = deadline − r`` ms of budget left, so its packets face a
+*tighter* effective deadline. :meth:`DeadlineChannel.sample_async` draws
+per-bucket masks at those slacks and additionally reports which packets
+were **late** — they would have met the full iteration deadline but
+missed the bucket's reduced slack; :meth:`effective_p_at` gives the
+closed-form marginal at any slack, feeding the staleness term of the
+theory bounds (``core.theory.async_alpha_bounds``).
 """
 from __future__ import annotations
 
@@ -26,6 +44,7 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.channels.base import Channel, force_diag
 
@@ -44,10 +63,20 @@ class DeadlineChannel(Channel):
                  straggler_frac: float = 0.1, straggler_mult: float = 4.0,
                  s: Optional[int] = None):
         super().__init__(n, s)
-        if deadline_ms <= 0 or jitter_ms <= 0 or base_ms < 0:
-            raise ValueError("latencies must be positive")
+        if deadline_ms <= 0 or jitter_ms <= 0:
+            raise ValueError(
+                f"deadline_ms={deadline_ms} and jitter_ms={jitter_ms} "
+                f"must be > 0")
+        if base_ms < 0:
+            raise ValueError(f"base_ms={base_ms} must be >= 0 "
+                             f"(0 = pure-jitter latency is allowed)")
         if not 0.0 <= straggler_frac <= 1.0:
             raise ValueError(f"straggler_frac={straggler_frac} not in [0,1]")
+        if straggler_mult < 1.0:
+            raise ValueError(
+                f"straggler_mult={straggler_mult} must be >= 1: a "
+                f"straggler is slower than the base latency by definition "
+                f"(mult < 1 would silently make stragglers faster)")
         self.deadline_ms = float(deadline_ms)
         self.base_ms = float(base_ms)
         self.jitter_ms = float(jitter_ms)
@@ -72,11 +101,73 @@ class DeadlineChannel(Channel):
         return rs, ag, state
 
     def effective_p(self) -> float:
+        return float(self.effective_p_at(self.deadline_ms))
+
+    def effective_p_at(self, deadline_ms) -> "np.ndarray":
+        """Closed-form drop marginal at an arbitrary deadline (vectorised).
+
+        Under the async engine each bucket sees a *reduced* slack budget
+        ``deadline − ready``; this evaluates the same exponential-tail
+        mixture as :meth:`effective_p` at any array of deadlines, so the
+        theory layer can price per-bucket staleness analytically.
+        A non-positive slack means the bucket ships with no budget left:
+        every off-owner packet drops (marginal 1.0).
+        """
+        d = np.asarray(deadline_ms, np.float64)
+        jit = max(self.jitter_ms, 1e-12)
+
+        def tail(base: float) -> np.ndarray:
+            return np.where(d > base, np.exp(-np.maximum(d - base, 0.0) / jit),
+                            1.0)
+
         q = self.straggler_frac
-        return (q * _tail(self.base_ms * self.straggler_mult,
-                          self.deadline_ms, self.jitter_ms)
-                + (1.0 - q) * _tail(self.base_ms, self.deadline_ms,
-                                    self.jitter_ms))
+        return (q * tail(self.base_ms * self.straggler_mult)
+                + (1.0 - q) * tail(self.base_ms))
+
+    def sample_async(self, key: jax.Array, state: Any, slack_ms
+                     ) -> Tuple[jax.Array, jax.Array, dict, Any]:
+        """Per-bucket deadline arbitration for the async overlap engine.
+
+        ``slack_ms`` is a static ``(n_buckets,)`` vector of per-bucket
+        budgets (iteration deadline minus bucket readiness time,
+        ``ExchangePlan.slack_ms``). One straggle draw covers the whole
+        iteration — worker slowness is iteration-correlated, exactly as
+        in :meth:`sample` — while jitter is drawn i.i.d. per bucket and
+        packet. A packet is *delivered* iff its latency fits the
+        bucket's slack, and *late* iff it missed the slack but would
+        have met the full iteration deadline — i.e. the packets the
+        sync barrier would have waited for and async writes off as
+        dropped-with-recovery. Owner entries are forced delivered and
+        never late (local shards don't cross the wire).
+
+        Returns ``(rs, ag, late, state)`` with ``rs``/``ag`` of shape
+        ``(n_buckets, n, s)`` and ``late`` a dict with ``"rs"``/``"ag"``
+        boolean masks of the same shape.
+        """
+        slack = jnp.asarray(slack_ms, jnp.float32)
+        nb = int(slack.shape[0])
+        n = self.n
+        k_s, k_rs, k_ag = jax.random.split(key, 3)
+        straggle = jax.random.bernoulli(k_s, self.straggler_frac, (n,))
+        base = jnp.where(straggle, self.base_ms * self.straggler_mult,
+                         self.base_ms)
+        lat_rs = base[None, :, None] + \
+            jax.random.exponential(k_rs, (nb, n, n)) * self.jitter_ms
+        lat_ag = base[None, None, :] + \
+            jax.random.exponential(k_ag, (nb, n, n)) * self.jitter_ms
+        sl = slack[:, None, None]
+        rs_ok = self.link_cols(lat_rs <= sl)
+        ag_ok = self.link_cols(lat_ag <= sl)
+        # late = would have met the sync deadline, missed the async slack
+        rs_late = self.link_cols((lat_rs > sl)
+                                 & (lat_rs <= self.deadline_ms))
+        ag_late = self.link_cols((lat_ag > sl)
+                                 & (lat_ag <= self.deadline_ms))
+        rs, ag = force_diag(rs_ok, ag_ok)
+        non_own = ~force_diag(jnp.zeros_like(rs_late),
+                              jnp.zeros_like(ag_late))[0]
+        late = {"rs": rs_late & non_own, "ag": ag_late & non_own}
+        return rs, ag, late, state
 
     def __repr__(self) -> str:
         return (f"DeadlineChannel({self._dims()}, "

@@ -80,7 +80,15 @@ class HeterogeneousChannel(Channel):
         the non-owned block columns j — what the telemetry estimator for
         sender i converges to (the AG leg matches when P is symmetric,
         e.g. every :meth:`pods` fabric)."""
-        pm = np.asarray(self.p_matrix, np.float64)
+        return self._row_expectation(np.asarray(self.p_matrix, np.float64))
+
+    def expected_link_p_ag(self) -> np.ndarray:
+        """Per-receiver AG-leg expectation — the AG draw uses ``P.T``,
+        so row i averages column i of P over non-owned blocks. Equal to
+        the RS leg iff P is symmetric."""
+        return self._row_expectation(np.asarray(self.p_matrix, np.float64).T)
+
+    def _row_expectation(self, pm: np.ndarray) -> np.ndarray:
         own = np.asarray(self._owners)
         cols = pm[:, own]                                   # (n, s)
         non_own = own[None, :] != np.arange(self.n)[:, None]

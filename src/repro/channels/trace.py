@@ -93,6 +93,36 @@ class TraceChannel(Channel):
         off = ~np.eye(self.n, dtype=bool)
         return float(pm[:, off].mean())
 
+    def _leg_expectation(self, pm: np.ndarray) -> np.ndarray:
+        """Owner-excluded per-row mean of a time-averaged ``(n, n)`` link
+        drop matrix, gathered through the owner map exactly like
+        :meth:`~repro.channels.base.Channel.link_cols` — the same
+        packets ``telemetry.counters.link_delivered`` counts."""
+        own = np.asarray(self._owners)
+        cols = pm[:, own]                                    # (n, s)
+        non_own = own[None, :] != np.arange(self.n)[:, None]
+        cnt = non_own.sum(axis=1)
+        return np.where(cnt > 0,
+                        (cols * non_own).sum(axis=1) / np.maximum(cnt, 1),
+                        0.0)
+
+    def expected_link_p(self) -> np.ndarray:
+        """Per-sender RS-leg drop expectation, time-averaged over the
+        trace. The base-class broadcast of the global scalar
+        ``effective_p()`` false-flags drift on heterogeneous traces —
+        a worker behind a congested uplink legitimately runs hotter
+        than the fleet mean; compare each row against its own marginal."""
+        return self._leg_expectation(
+            np.asarray(self.p_trace, np.float64).mean(axis=0))
+
+    def expected_link_p_ag(self) -> np.ndarray:
+        """Per-receiver AG-leg expectation: the AG draw uses the
+        transposed link matrix (broadcast owner(j) → i), so row i
+        averages column i of the trace — distinct from the RS leg
+        whenever up/down loss is asymmetric."""
+        return self._leg_expectation(
+            np.asarray(self.p_trace, np.float64).mean(axis=0).T)
+
     def __repr__(self) -> str:
         return (f"TraceChannel({self._dims()}, periods={self.n_periods}, "
                 f"eff_p={self.effective_p():.4f})")

@@ -88,6 +88,17 @@ class ExchangePlan:
     # loss-recovery policy (DESIGN.md §13): "renorm" = paper Algorithm 1,
     # "scale" = unbiased 1/(1−p) zero-fill, "ef" = error-feedback
     # residual carried in trainer/simulator state.
+    schedule: str = "sync"
+    # round scheduling (DESIGN.md §15): "sync" = all buckets ship at the
+    # iteration barrier (the seed semantics, bit-identical default);
+    # "async" = buckets ship in reverse-layer order as their gradients
+    # become ready during the backward pass, each against its own reduced
+    # deadline slack — late packets are dropped-with-recovery, never
+    # waited for.
+    ready_ms: Optional[Tuple[float, ...]] = None
+    # per-bucket readiness times (ms into the backward pass) from the
+    # backward-pass cost model (:func:`bucket_ready_ms`); set iff
+    # schedule == "async".
 
     # ---- derived ---------------------------------------------------------
     @property
@@ -110,6 +121,29 @@ class ExchangePlan:
 
     def payload_elems(self) -> int:
         return sum(self.s * b.blk * b.m for b in self.buckets)
+
+    @property
+    def ship_order(self) -> Tuple[int, ...]:
+        """Bucket dispatch order. Sync ships in plan order at the
+        iteration barrier; async ships in **reverse bucket order** — the
+        pytree is layer-ordered and the backward pass produces the last
+        layer's gradients first, so reversed plan order is ascending
+        readiness time (:func:`bucket_ready_ms`)."""
+        if self.schedule == "async":
+            return tuple(range(self.n_buckets - 1, -1, -1))
+        return tuple(range(self.n_buckets))
+
+    def slack_ms(self, deadline_ms: float) -> np.ndarray:
+        """Per-bucket deadline budget under the async schedule:
+        ``max(deadline − ready, 0)`` for each bucket (``(n_buckets,)``,
+        plan order). A bucket whose gradients arrive after the iteration
+        deadline has zero slack — every off-owner packet it offers is
+        late by construction and recovery absorbs the whole bucket."""
+        if self.ready_ms is None:
+            raise ValueError("slack_ms needs an async plan with ready_ms "
+                             "(build with schedule='async')")
+        return np.maximum(float(deadline_ms)
+                          - np.asarray(self.ready_ms, np.float64), 0.0)
 
     def rs_leg_bytes(self, wire=None) -> int:
         """Bytes one device moves on the RS leg per round: every bucket's
@@ -148,6 +182,9 @@ class ExchangePlan:
                 "engine": self.engine,
                 "wire": wire,
                 "recovery": self.recovery,
+                "schedule": self.schedule,
+                **({"ready_ms": [float(r) for r in self.ready_ms]}
+                   if self.ready_ms is not None else {}),
                 "per_bucket_masks": self.per_bucket_masks,
                 "model_packets": self.model_packets,
                 "payload_bytes": int(sum(
@@ -278,6 +315,23 @@ def _flatten_model_dims(model_dims: Any, n_leaves: int) -> list:
     return md
 
 
+def bucket_ready_ms(buckets: Sequence[Bucket],
+                    compute_ms: float) -> Tuple[float, ...]:
+    """Per-bucket gradient readiness times from the backward-pass cost
+    model (DESIGN.md §15). The pytree is layer-ordered and backward
+    visits layers last → first, so bucket ``b``'s gradients are complete
+    once the backward has covered buckets ``b..B−1``; cost is modelled as
+    proportional to payload size (dense layers: backward FLOPs and bytes
+    both scale with the parameter count). ``ready[B−1]`` is earliest,
+    ``ready[0] == compute_ms`` (the first layer's grads close the pass).
+    """
+    if compute_ms <= 0:
+        raise ValueError(f"compute_ms={compute_ms} must be > 0")
+    sizes = np.array([b.free * b.m for b in buckets], np.float64)
+    rev_cum = np.cumsum(sizes[::-1])[::-1]          # Σ sizes[b:]
+    return tuple(float(compute_ms) * rev_cum / rev_cum[0])
+
+
 def _canon_pipeline(wire, recovery):
     """Validated (wire, recovery) plan fields from any spelling."""
     wire = wire_lib.canon_wire_name("f32" if wire is None else wire)
@@ -295,7 +349,8 @@ def make_plan(tree: Any, n: int, s: Optional[int] = None, *,
               model_dims: Any = None,
               per_bucket_masks: Optional[bool] = None,
               engine: str = "xla", wire: str = "f32",
-              recovery: str = "renorm") -> ExchangePlan:
+              recovery: str = "renorm", schedule: str = "sync",
+              compute_ms: Optional[float] = None) -> ExchangePlan:
     """Build an :class:`ExchangePlan` for ``tree`` (arrays or
     ShapeDtypeStructs — only shapes/dtypes are read).
 
@@ -318,6 +373,12 @@ def make_plan(tree: Any, n: int, s: Optional[int] = None, *,
     RS-leg codec ("f32" bit-identical default / "bf16" / "int8") and the
     loss-recovery policy ("renorm" paper default / "scale" / "ef") every
     executor of this plan applies.
+
+    ``schedule`` picks the round scheduling (DESIGN.md §15): "sync" (the
+    seed iteration-barrier semantics, bit-identical default) or "async"
+    (buckets ship in reverse-layer order as gradients become ready;
+    requires ``compute_ms`` — the modelled backward-pass duration the
+    per-bucket readiness times are derived from).
     """
     if n < 1:
         raise ValueError(f"need n >= 1 workers, got {n}")
@@ -380,11 +441,24 @@ def make_plan(tree: Any, n: int, s: Optional[int] = None, *,
     if per_bucket_masks is None:
         per_bucket_masks = bucket_bytes is not None or n_buckets is not None
     wire, recovery = _canon_pipeline(wire, recovery)
+    schedule = "sync" if schedule is None else str(schedule)
+    if schedule not in ("sync", "async"):
+        raise ValueError(f"schedule={schedule!r}, want 'sync' or 'async'")
+    ready: Optional[Tuple[float, ...]] = None
+    if schedule == "async":
+        if compute_ms is None:
+            raise ValueError("schedule='async' needs compute_ms (the "
+                             "modelled backward-pass duration readiness "
+                             "times are derived from)")
+        ready = bucket_ready_ms(buckets, float(compute_ms))
+    elif compute_ms is not None:
+        raise ValueError("compute_ms only applies to schedule='async'")
     return ExchangePlan(n=int(n), s=s, buckets=tuple(buckets),
                         n_leaves=len(leaves),
                         per_bucket_masks=bool(per_bucket_masks),
                         treedef=treedef, engine=str(engine),
-                        wire=wire, recovery=recovery)
+                        wire=wire, recovery=recovery,
+                        schedule=schedule, ready_ms=ready)
 
 
 def plan_from_config(tree: Any, n: int, s: Optional[int] = None, *,
@@ -392,21 +466,25 @@ def plan_from_config(tree: Any, n: int, s: Optional[int] = None, *,
                      n_buckets: Optional[int] = None,
                      model_dims: Any = None,
                      engine: str = "xla", wire: str = "f32",
-                     recovery: str = "renorm") -> ExchangePlan:
+                     recovery: str = "renorm", schedule: str = "sync",
+                     compute_ms: Optional[float] = None) -> ExchangePlan:
     """The config-knob → plan policy shared by the trainer and the
     simulator: ``bucket_mb`` MiB fixed-byte coalescing / ``n_buckets``
     size-balanced groups (packetised, per-bucket masks), both unset → the
     per-leaf legacy plan, bit-identical to the seed lowering. ``engine``
     threads the §12 lowering knob, ``wire``/``recovery`` the §13 wire
-    pipeline into the plan."""
+    pipeline, ``schedule``/``compute_ms`` the §15 async overlap mode
+    into the plan."""
     if bucket_mb is not None or n_buckets is not None:
         return make_plan(tree, n, s,
                          bucket_bytes=(bucket_mb * 2 ** 20
                                        if bucket_mb is not None else None),
                          n_buckets=n_buckets, model_dims=model_dims,
-                         engine=engine, wire=wire, recovery=recovery)
+                         engine=engine, wire=wire, recovery=recovery,
+                         schedule=schedule, compute_ms=compute_ms)
     return per_leaf_plan(tree, n, s, engine=engine, wire=wire,
-                         recovery=recovery)
+                         recovery=recovery, schedule=schedule,
+                         compute_ms=compute_ms)
 
 
 def single_bucket_plan(tree: Any, n: int, s: Optional[int] = None, *,
@@ -421,7 +499,8 @@ def single_bucket_plan(tree: Any, n: int, s: Optional[int] = None, *,
 
 def per_leaf_plan(tree: Any, n: int, s: Optional[int] = None, *,
                   engine: str = "xla", wire: str = "f32",
-                  recovery: str = "renorm") -> ExchangePlan:
+                  recovery: str = "renorm", schedule: str = "sync",
+                  compute_ms: Optional[float] = None) -> ExchangePlan:
     """The legacy trainer/simulator layout: one bucket per leaf (each leaf
     fully flattened — no model-dim special-casing, exactly the seed's
     per-leaf ``rps_exchange_flat`` tree-map), one shared mask draw."""
@@ -435,7 +514,18 @@ def per_leaf_plan(tree: Any, n: int, s: Optional[int] = None, *,
     buckets = tuple(_flat_bucket([i], shapes, dtypes, sizes, s)
                     for i in range(len(leaves)))
     wire, recovery = _canon_pipeline(wire, recovery)
+    schedule = "sync" if schedule is None else str(schedule)
+    if schedule not in ("sync", "async"):
+        raise ValueError(f"schedule={schedule!r}, want 'sync' or 'async'")
+    ready: Optional[Tuple[float, ...]] = None
+    if schedule == "async":
+        if compute_ms is None:
+            raise ValueError("schedule='async' needs compute_ms")
+        ready = bucket_ready_ms(buckets, float(compute_ms))
+    elif compute_ms is not None:
+        raise ValueError("compute_ms only applies to schedule='async'")
     return ExchangePlan(n=int(n), s=s, buckets=buckets,
                         n_leaves=len(leaves), per_bucket_masks=False,
                         treedef=treedef, engine=str(engine),
-                        wire=wire, recovery=recovery)
+                        wire=wire, recovery=recovery,
+                        schedule=schedule, ready_ms=ready)

@@ -242,7 +242,8 @@ def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
                     pin: Optional[Callable] = None,
                     engine: str = "xla", ring_ids=None,
                     wire=None, recovery=None, key=None,
-                    send=None) -> jax.Array:
+                    send=None, late=None,
+                    comm_slot: int = 0) -> jax.Array:
     """One drop-masked RS+AG round on an ``(s, blk[, m])`` block table
     inside a shard_map region over ``names`` (the RPS axes).
 
@@ -271,6 +272,17 @@ def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
     residual-compensated, already-encoded intent (a plain array for
     linear codecs, the ``codec.encode`` pair for quantised ones); the
     AG-drop fallback always stays the *raw* local ``blocks``.
+
+    Async staleness axis (DESIGN.md §15): ``late`` is an optional
+    ``(rs_late, ag_late)`` pair of this call's ``(n, s)`` lateness masks
+    from the channel's deadline arbitration — packets already *excluded*
+    from ``rs``/``ag`` (a late packet is a dropped packet as far as the
+    round's arithmetic goes); it only feeds the lateness tap counters.
+    ``comm_slot`` names the dispatch slot an async schedule assigned this
+    call: the ring engine derives its barrier/DMA ``collective_id`` from
+    it, so consecutive buckets in alternating slots can be in flight at
+    once (double-buffered against the backward dot-generals). Slot 0 is
+    the sync default and keeps today's collective_id — bit-identical.
     """
     from repro.telemetry import taps
     codec = wire_lib.resolve_codec(wire, rs_dtype)
@@ -314,6 +326,9 @@ def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
         taps.emit("rs_link_delivered", _ctr.link_delivered(rs))
         taps.emit("ag_link_delivered", _ctr.link_delivered(ag))
         taps.emit("divisor", _divisor(rec, mode, rs, n))
+        if late is not None:
+            taps.emit("rs_link_late", _ctr.link_late(late[0]))
+            taps.emit("ag_link_late", _ctr.link_late(late[1]))
         taps.annotate("exchange", {
             "n": n, "s": int(s), "mode": mode,
             "engine": resolve_engine(engine),
@@ -343,7 +358,8 @@ def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
                 blocks, rs_sc, ag_sc, names=names, n=n, i=i, k=k,
                 mode=mode, rs_dtype=acc_dtype, pin=raw_pin,
                 ring_ids=ring_ids, codec=codec, enc=enc,
-                send=None if send_arr is blocks else send_arr, div=div)
+                send=None if send_arr is blocks else send_arr, div=div,
+                comm_slot=comm_slot)
             if inv is not None:
                 out = out[inv]                    # back to block order
             return pin(out[:s])
@@ -504,7 +520,7 @@ def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
                       pin: Optional[Callable] = None,
                       engine: Optional[str] = None,
                       ring_ids=None, wire=None, recovery=None,
-                      ef_state: Any = None) -> Any:
+                      ef_state: Any = None, late=None) -> Any:
     """Bucketed collective exchange of a (worker-local) pytree inside a
     shard_map region: exactly ``2 × plan.n_buckets`` collectives per round
     on the "xla" engine (one psum_scatter + one all_gather per bucket),
@@ -534,6 +550,18 @@ def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
     initial one) and then returns ``(exchanged_tree, new_ef_state)``
     instead of the bare tree — the caller carries the residual across
     rounds (trainer/simulator state, donated alongside params).
+
+    Async schedule (DESIGN.md §15): a ``schedule="async"`` plan
+    dispatches buckets in ``plan.ship_order`` — reverse bucket order,
+    the order the backward pass makes gradients ready — and alternates
+    the ring engine's dispatch slot (``comm_slot`` → distinct
+    ``collective_id``s) so consecutive bucket rounds double-buffer
+    against the backward dot-generals on TPU. ``late`` optionally
+    carries the channel's ``{"rs", "ag"}`` per-bucket lateness masks
+    (``(n_buckets, n, s)``) for the tap counters; the masks in
+    ``masks`` are already deadline-arbitrated, so lateness never
+    changes the arithmetic. Sync plans keep today's plan-order loop and
+    slot 0 — bit-identical.
     """
     names = _axis_tuple(axis_name)
     n = axis_size(axis_name)
@@ -557,13 +585,17 @@ def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
             "rs_leg_bytes": int(plan.rs_leg_bytes(codec))})
     leaves = plan.check_leaves(tree)
     ef_leaves = plan.check_leaves(ef_state) if use_ef else None
-    outs = []
-    new_ef = []
-    tbl = plan.gather_bucket(leaves, 0)
-    for b in range(plan.n_buckets):
-        nxt = plan.gather_bucket(leaves, b + 1) \
-            if b + 1 < plan.n_buckets else None   # prefetch next bucket
+    is_async = plan.schedule == "async"
+    order = plan.ship_order
+    outs: list = [None] * plan.n_buckets
+    new_ef: list = [None] * plan.n_buckets
+    tbl = plan.gather_bucket(leaves, order[0])
+    for pos, b in enumerate(order):
+        nxt = plan.gather_bucket(leaves, order[pos + 1]) \
+            if pos + 1 < plan.n_buckets else None  # prefetch next bucket
         rs_b, ag_b = _bucket_masks(rs, ag, b)
+        late_b = (late["rs"][b], late["ag"][b]) if late is not None \
+            else None
         # per-bucket AND per-device encode keys (see rps_exchange_flat:
         # correlated dither across workers would defeat the averaging)
         k_b = jax.random.fold_in(jax.random.fold_in(
@@ -592,16 +624,18 @@ def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
                 delivered = codec.fake_quant(intent)
                 send = delivered
             gate = rs_b[i][(slice(None),) + (None,) * (tbl.ndim - 1)]
-            new_ef.append(jnp.where(
-                gate != 0, (intent - delivered).astype(tbl.dtype), e_tbl))
+            new_ef[b] = jnp.where(
+                gate != 0, (intent - delivered).astype(tbl.dtype), e_tbl)
             if taps.active() is not None:
                 taps.emit("ef_resid_sq",
                           jnp.sum(jnp.square(e_tbl.astype(jnp.float32))))
-        outs.append(_exchange_table(tbl, rs_b, ag_b, names=names, n=n,
-                                    i=i, mode=mode, rs_dtype=rs_dtype,
-                                    pin=pin, engine=engine,
-                                    ring_ids=ring_ids, wire=codec,
-                                    recovery=rec, key=k_b, send=send))
+        outs[b] = _exchange_table(tbl, rs_b, ag_b, names=names, n=n,
+                                  i=i, mode=mode, rs_dtype=rs_dtype,
+                                  pin=pin, engine=engine,
+                                  ring_ids=ring_ids, wire=codec,
+                                  recovery=rec, key=k_b, send=send,
+                                  late=late_b,
+                                  comm_slot=(pos % 2) if is_async else 0)
         tbl = nxt
     if use_ef:
         return plan.scatter(outs), plan.scatter(new_ef)
@@ -716,7 +750,7 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
                         plan: Optional[plan_lib.ExchangePlan] = None,
                         engine: str = "xla",
                         rs_dtype=jnp.float32, wire=None, recovery=None,
-                        ef_state: Any = None) -> Any:
+                        ef_state: Any = None, late=None) -> Any:
     """Global-view exchange on *stacked* worker trees (leading dim n).
 
     Mathematically identical to the collective path (same masks, same block
@@ -795,6 +829,12 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
         from repro.telemetry import counters as _ctr
         for k_, v in _ctr.mask_step_stats(rs, ag).items():
             taps.emit(k_, v)
+        if late is not None:
+            # async lateness bundle (DESIGN §15): the masks are already
+            # deadline-arbitrated; this only counts what arrived late
+            for k_, v in _ctr.staleness_stats(late["rs"],
+                                              late["ag"]).items():
+                taps.emit(k_, v)
         if rs.ndim == 3:
             own_ = ~owner_mask(n, plan.s)
             taps.emit("rs_bucket_link_delivered",

@@ -233,6 +233,59 @@ def corollary2_rate_plan(plan, n: int, p: float, T: int, **kw) -> float:
     return corollary2_rate(n, p, T, s=s, model_packets=mp, **kw)
 
 
+# ---- async staleness term (DESIGN.md §15) ----------------------------------
+
+def async_bucket_drop_rates(plan, channel) -> np.ndarray:
+    """Per-bucket effective drop marginals under the async schedule:
+    bucket b ships at ``ready_ms[b]`` against the channel's iteration
+    deadline, so its packets face the *reduced* slack
+    ``plan.slack_ms(deadline)`` — evaluated through the channel's
+    closed-form ``effective_p_at``. Channels without a latency model
+    (no ``effective_p_at``/``deadline_ms``) see no deadline tightening:
+    every bucket keeps the stationary marginal (the async fallback path
+    is mask-identical to sync)."""
+    eff_at = getattr(channel, "effective_p_at", None)
+    deadline = getattr(channel, "deadline_ms", None)
+    nb = plan.n_buckets
+    if eff_at is None or deadline is None or plan.ready_ms is None:
+        return np.full(nb, effective_p(channel))
+    return np.asarray(eff_at(plan.slack_ms(float(deadline))), np.float64)
+
+
+def staleness_alpha2_extra(p_async: float, p_sync: float, n: int) -> float:
+    """Variance surcharge of async lateness on top of the Lemma-8 α₂.
+
+    A late packet is *recovered* content: its mass re-enters the average
+    through renorm/EF one round later instead of now, so the async round
+    behaves like a sync round at the inflated marginal ``p_async`` plus
+    an extra consensus-variance term from the lateness mass
+    ``q = p_async − p_sync`` — the packets present under sync but
+    written off under async. The term mirrors the bounds' O(p(1−p)/n)
+    shape: ``q(1−q)/n``, the second moment of the Bernoulli lateness
+    indicator averaged over n workers. This is a conservative
+    matched-rate proxy (lateness is *correlated* across a straggler's
+    row, which the marginal cannot see); the drift monitor measures the
+    gap live."""
+    q = float(np.clip(p_async - p_sync, 0.0, 1.0))
+    return q * (1.0 - q) / max(n, 1)
+
+
+def async_alpha_bounds(plan, n: int, channel):
+    """(α₁, α₂) bounds for an async-scheduled plan over a deadline
+    channel: the Lemma-7/8 bounds evaluated at the mean per-bucket
+    async marginal (each bucket's reduced slack inflates its drop rate,
+    :func:`async_bucket_drop_rates`), with the plan's wire variance and
+    the staleness surcharge (:func:`staleness_alpha2_extra`) folded
+    into α₂. For a sync plan (or a channel with no latency model) this
+    reduces exactly to :func:`alpha_bounds_plan` at the stationary
+    marginal."""
+    p_sync = effective_p(channel)
+    p_async = float(np.mean(async_bucket_drop_rates(plan, channel)))
+    a1, a2 = alpha_bounds_plan(plan, n, p_async)
+    extra = staleness_alpha2_extra(p_async, p_sync, n)
+    return a1, float(min(a2 + extra, 1.0))
+
+
 # ---- channel extensions (DESIGN.md §9) ------------------------------------
 
 def effective_p(channel_or_p) -> float:

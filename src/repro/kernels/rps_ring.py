@@ -494,8 +494,8 @@ def ring_exchange_scatter_table(blocks: jax.Array, rs_sc: jax.Array,
                                 codec=None,
                                 enc=None,
                                 send: Optional[jax.Array] = None,
-                                div: Optional[jax.Array] = None
-                                ) -> jax.Array:
+                                div: Optional[jax.Array] = None,
+                                comm_slot: int = 0) -> jax.Array:
     """Ring-engine exchange of one scatter-ordered (S, blk[, m]) table.
 
     ``use_kernel=None`` picks the fused Pallas dispatch on TPU (fully-
@@ -512,6 +512,16 @@ def ring_exchange_scatter_table(blocks: jax.Array, rs_sc: jax.Array,
     ``send`` overrides the contribution source for *linear* codecs (the
     EF-compensated intent); ``div`` is the (S,) f32 recovery divisor
     (None = legacy renorm/grad computation).
+
+    Async double-buffering (DESIGN.md §15): ``comm_slot`` (0 or 1)
+    selects which barrier/DMA semaphore family this dispatch uses —
+    ``collective_id = 7 + slot``. A sync plan keeps every bucket on
+    slot 0 (today's id, bit-identical schedule); an async plan
+    alternates slots across its reverse-order bucket dispatches, so two
+    consecutive ring rounds own disjoint semaphores and the scheduler
+    is free to keep one in flight while the next bucket's backward
+    dot-generals (and its own dispatch) are issued — the RDMA hops of
+    round ``b`` overlap the compute that makes bucket ``b+1`` ready.
     """
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu" and pin is None
@@ -558,9 +568,12 @@ def ring_exchange_scatter_table(blocks: jax.Array, rs_sc: jax.Array,
         # requant); the AG fallback stays the raw donated ``table``
         qt = widen(send).astype(rs_dtype)
         qs = jnp.ones((S, 1), jnp.float32)
+    if comm_slot not in (0, 1):
+        raise ValueError(f"comm_slot={comm_slot}, want 0 or 1")
     out = ring_bucket_fused(tbl, rs_row, ag_row, cnt, pos, left, right,
                             n=n, k=k, mode=mode, rs_dtype=rs_dtype,
-                            qtable=qt, qscale=qs, levels=levels)
+                            qtable=qt, qscale=qs, levels=levels,
+                            collective_id=7 + comm_slot)
     if pad:
         out = out[:, :W]
     return out.reshape(shape)

@@ -86,6 +86,20 @@ def main():
                          "ef = error-feedback residual on the codec "
                          "error (extra params-shaped state, donated & "
                          "checkpointable)")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="async overlap engine (DESIGN.md §15): buckets "
+                         "ship in reverse-layer order as gradients become "
+                         "ready; against a deadline channel each bucket "
+                         "faces its reduced slack (deadline - readiness) "
+                         "and late packets are written off as dropped-"
+                         "with-recovery (staleness axis in the history/"
+                         "telemetry). Default: sync barrier, bit-"
+                         "identical to the seed")
+    ap.add_argument("--compute-ms", type=float, default=None,
+                    help="async backward-pass cost model: modelled "
+                         "backward duration the per-bucket readiness "
+                         "times derive from; default 0.8 x the channel "
+                         "deadline when it has one, else 1.0")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--warmup", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
@@ -122,7 +136,9 @@ def main():
         channel=args.channel, n_servers=args.servers,
         bucket_mb=args.bucket_mb, n_buckets=args.buckets,
         engine=args.engine, exchange_dtype=args.exchange_dtype,
-        wire=args.wire, recovery=args.recovery)
+        wire=args.wire, recovery=args.recovery,
+        schedule="async" if args.async_ else "sync",
+        compute_ms=args.compute_ms)
     reg = None
     if args.telemetry or args.telemetry_dir:
         from repro.telemetry import Telemetry
@@ -145,6 +161,10 @@ def main():
           f"final_loss={hist['final_loss']:.4f} "
           f"(entropy floor {task.entropy_floor():.4f}) "
           f"consensus={hist['consensus'][-1]:.3e} [{dt:.1f}s]")
+    if hist.get("staleness"):
+        print(f"async staleness: mean late_frac="
+              f"{float(np.mean(hist['staleness'])):.3f} "
+              f"(max {float(np.max(hist['staleness'])):.3f})")
     if args.checkpoint:
         mean_params = jax.tree.map(lambda x: jnp.mean(x, 0), hist["params"])
         save_pytree(args.checkpoint, mean_params)

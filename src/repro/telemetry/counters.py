@@ -97,3 +97,32 @@ def mask_step_stats(rs: jax.Array, ag: jax.Array) -> Dict[str, jax.Array]:
         "rs_drop_rate": 1.0 - jnp.sum(rs_d) / tot,
         "ag_drop_rate": 1.0 - jnp.sum(ag_d) / tot,
     }
+
+
+def link_late(late_mask: jax.Array) -> jax.Array:
+    """Per-sender LATE packet count, owner entries excluded — same row
+    convention as :func:`link_delivered`, applied to an async lateness
+    mask (packets that met the sync deadline but missed their bucket's
+    reduced slack, DESIGN.md §15)."""
+    return link_delivered(late_mask)
+
+
+def staleness_stats(late_rs: jax.Array,
+                    late_ag: jax.Array) -> Dict[str, jax.Array]:
+    """Lateness counter bundle from one async draw's lateness masks:
+    per-sender late counts for both legs plus ``late_frac`` — the
+    fraction of offered (non-owner) packets this step that arrived late
+    and were written off as dropped-with-recovery. ``late_frac`` is the
+    staleness observable the simulator history records and the theory's
+    staleness term prices."""
+    rs_l = link_late(late_rs)
+    ag_l = link_late(late_ag)
+    n, s = late_rs.shape[-2], late_rs.shape[-1]
+    nb = late_rs.shape[0] if late_rs.ndim == 3 else None
+    offered = jnp.asarray(link_offered(n, s, nb))
+    tot = jnp.maximum(2 * jnp.sum(offered), 1)
+    return {
+        "rs_link_late": rs_l,
+        "ag_link_late": ag_l,
+        "late_frac": (jnp.sum(rs_l) + jnp.sum(ag_l)) / tot,
+    }

@@ -77,6 +77,7 @@ class Telemetry:
         self.rs_est: Optional[LinkRateEstimator] = None
         self.ag_est: Optional[LinkRateEstimator] = None
         self._expected_p: Optional[np.ndarray] = None
+        self._expected_p_ag: Optional[np.ndarray] = None
         self._finalized = False
 
     # -- context binding --------------------------------------------------
@@ -93,14 +94,38 @@ class Telemetry:
                 p = channel.effective_p()
             self._expected_p = np.asarray(channel.expected_link_p(),
                                           np.float64)
+            # asymmetric channels (e.g. trace replay) expect a different
+            # marginal on the AG leg; compare each estimator to its own leg
+            self._expected_p_ag = np.asarray(channel.expected_link_p_ag(),
+                                             np.float64)
             self.meta["channel"] = repr(channel)
         elif p is not None and n is not None:
             self._expected_p = np.full(n, float(p))
+            self._expected_p_ag = self._expected_p
+        async_plan = plan is not None and \
+            getattr(plan, "schedule", "sync") == "async"
+        if async_plan and channel is not None and \
+                getattr(channel, "deadline_ms", None) is not None:
+            # async lateness writes packets off on top of the channel's
+            # drops, so the estimators see the *inflated* marginal — the
+            # mean per-bucket rate at each bucket's reduced slack, uniform
+            # across links (the deadline jitter is per-link i.i.d.).
+            # Comparing against the sync stationary p would false-flag
+            # drift on every async run (DESIGN.md §15).
+            from repro.core import theory
+            self.meta["p_sync"] = float(p)
+            p = float(np.mean(theory.async_bucket_drop_rates(plan,
+                                                             channel)))
+            self._expected_p = np.full(n, p)
+            self._expected_p_ag = self._expected_p
         if plan is not None:
             self.meta["plan"] = to_jsonable(plan.describe())
             if n is not None and p is not None:
                 from repro.core import theory
-                a1, a2 = theory.alpha_bounds_plan(plan, n, float(p))
+                if async_plan and channel is not None:
+                    a1, a2 = theory.async_alpha_bounds(plan, n, channel)
+                else:
+                    a1, a2 = theory.alpha_bounds_plan(plan, n, float(p))
                 self.meta["alpha_bounds"] = {"alpha1": float(a1),
                                              "alpha2": float(a2)}
         if n is not None:
@@ -148,8 +173,9 @@ class Telemetry:
             return None
         rep = {"rs": self.rs_est.drift(self._expected_p, z=z, slack=slack)}
         if self.ag_est is not None and self.ag_est.steps:
-            rep["ag"] = self.ag_est.drift(self._expected_p, z=z,
-                                          slack=slack)
+            exp_ag = self._expected_p_ag if self._expected_p_ag is not None \
+                else self._expected_p
+            rep["ag"] = self.ag_est.drift(exp_ag, z=z, slack=slack)
         return rep
 
     def summary(self) -> Dict[str, Any]:

@@ -89,6 +89,21 @@ class SimulatorConfig:
     # renorm + an error-feedback residual on the codec error, carried
     # as an extra params-shaped leaf of step state (donated,
     # checkpointable).
+    schedule: str = "sync"
+    # round scheduling (DESIGN.md §15): "sync" = every bucket ships at
+    # the iteration barrier (the seed semantics, bit-identical default);
+    # "async" = buckets ship in reverse-layer order as their gradients
+    # become ready — against a deadline channel each bucket faces its
+    # *reduced* slack (deadline − readiness) and packets that would have
+    # made the sync deadline but miss the slack are LATE: written off as
+    # dropped-with-recovery, counted on the history's staleness axis.
+    # Channels without a latency model fall back to sync-identical masks
+    # (zero lateness).
+    compute_ms: Optional[float] = None
+    # async backward-pass cost model: the modelled backward duration the
+    # per-bucket readiness times are derived from. None (with
+    # schedule="async") defaults to 0.8 × the channel's deadline_ms when
+    # it has one, else 1.0.
     donate: bool = True
     # donate params/opt_state/channel state into the jitted step
     # (donate_argnums) so the sweep never double-buffers the model;
@@ -104,7 +119,8 @@ class SimulatorConfig:
 
 
 def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool,
-              masks=None, plan=None, recovery=None, ef_state=None):
+              masks=None, plan=None, recovery=None, ef_state=None,
+              late=None):
     n = scfg.n_workers
     agg = scfg.aggregator
     use_ef = ef_state is not None
@@ -120,7 +136,7 @@ def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool,
         tree, key, scfg.drop_rate, n, mode=mode, masks=masks,
         s=scfg.n_servers, plan=plan, engine=scfg.engine,
         rs_dtype=jnp.dtype(scfg.exchange_dtype),
-        recovery=recovery, ef_state=ef_state)
+        recovery=recovery, ef_state=ef_state, late=late)
 
 
 def resolve_wire(scfg) -> str:
@@ -130,12 +146,28 @@ def resolve_wire(scfg) -> str:
     return wire_lib.config_wire(scfg.wire, scfg.exchange_dtype)
 
 
-def make_exchange_plan(params: Any, scfg: SimulatorConfig):
+def resolve_compute_ms(scfg, channel=None) -> Optional[float]:
+    """The async cost model's backward-pass duration (duck-typed over
+    SimulatorConfig / TrainConfig): the explicit ``compute_ms`` knob, or
+    — under ``schedule="async"`` with it unset — 0.8 × the channel's
+    iteration deadline (most of the budget spent computing, the regime
+    async exists for), else 1.0. ``None`` for sync configs."""
+    if getattr(scfg, "schedule", "sync") != "async":
+        return None
+    if scfg.compute_ms is not None:
+        return float(scfg.compute_ms)
+    deadline = getattr(channel, "deadline_ms", None)
+    return 0.8 * float(deadline) if deadline is not None else 1.0
+
+
+def make_exchange_plan(params: Any, scfg: SimulatorConfig, channel=None):
     """The :class:`repro.core.plan.ExchangePlan` a config prescribes, built
     from a *per-worker* param tree (no stacked dim): per-leaf legacy when
     the bucket knobs are unset (bit-identical to the seed), fixed-byte /
     count-balanced coalescing otherwise (DESIGN.md §11). The §13 wire
-    pipeline rides on the plan (``wire``/``recovery`` fields)."""
+    pipeline rides on the plan (``wire``/``recovery`` fields), as does
+    the §15 schedule (``channel`` sizes the async cost model's default
+    ``compute_ms`` against the channel deadline)."""
     if not scfg.aggregator.startswith("rps"):
         return None
     return plan_lib.plan_from_config(params, scfg.n_workers, scfg.n_servers,
@@ -143,7 +175,11 @@ def make_exchange_plan(params: Any, scfg: SimulatorConfig):
                                      n_buckets=scfg.n_buckets,
                                      engine=scfg.engine,
                                      wire=resolve_wire(scfg),
-                                     recovery=scfg.recovery)
+                                     recovery=scfg.recovery,
+                                     schedule=getattr(scfg, "schedule",
+                                                      "sync"),
+                                     compute_ms=resolve_compute_ms(
+                                         scfg, channel))
 
 
 def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
@@ -157,9 +193,11 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
     double-buffers the whole model every step.
     signature: step(params, opt_state, batch, key, lr, ch_state
     [, ef_state], exchange=True) -> (params, opt_state, loss, consensus,
-    ch_state[, ef_state][, stats]) — the EF slot appears exactly when
-    ``scfg.recovery == "ef"`` on an rps aggregator (the residual is an
-    extra stacked params-shaped leaf of step state, DESIGN.md §13).
+    ch_state[, ef_state][, staleness][, stats]) — the EF slot appears
+    exactly when ``scfg.recovery == "ef"`` on an rps aggregator (the
+    residual is an extra stacked params-shaped leaf of step state,
+    DESIGN.md §13); the ``staleness`` scalar (this round's late-packet
+    fraction, §15) exactly when ``scfg.schedule == "async"``.
 
     ``telemetry`` (default ``scfg.telemetry``) appends the tapped stats
     dict (DESIGN.md §14): a trace-time collector installed around the
@@ -174,11 +212,20 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
     is_grad_mode = scfg.aggregator.endswith("_grad")
     rps_agg = scfg.aggregator.startswith("rps")
     use_ef = rps_agg and scfg.recovery == "ef"
+    async_mode = rps_agg and scfg.schedule == "async"
     telemetry = scfg.telemetry if telemetry is None else telemetry
     # the scale divisor uses the channel's stationary marginal, not the
     # raw drop_rate knob (they differ for GE/hetero/trace channels)
     recovery = wire_lib.make_recovery(
         scfg.recovery, p=channel.effective_p()) if rps_agg else None
+    slack = None
+    if async_mode:
+        # static per-bucket deadline budget from the plan's readiness
+        # times; channels without a latency model ignore the values
+        # (their sample_async is the sync-identical fallback)
+        deadline = getattr(channel, "deadline_ms", None)
+        slack = plan.slack_ms(float(deadline)) if deadline is not None \
+            else np.zeros(plan.n_buckets, np.float64)
 
     def body(tap, params, opt_state, batch, key, lr, ch_state, ef_state,
              exchange):
@@ -186,22 +233,35 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
             return jnp.sum(jax.vmap(loss_fn)(ps, bs))
 
         masks = None
+        late = None
+        staleness = jnp.float32(0)
         if rps_agg:     # channel time advances every step, exchange or not
             with jax.named_scope("rps.masks"):
-                if plan.per_bucket_masks:  # packetised: a draw per bucket
+                if async_mode:  # per-bucket slack arbitration (§15)
+                    rs, ag, late, ch_state_new = channel.sample_async(
+                        key, ch_state, slack)
+                elif plan.per_bucket_masks:  # packetised: draw per bucket
                     rs, ag, ch_state_new = channel.sample_packets(
                         key, ch_state, plan.n_buckets)
                 else:
                     rs, ag, ch_state_new = channel.sample(key, ch_state)
                 masks, ch_state = (rs, ag), ch_state_new
+        if async_mode and exchange:
+            # the step's staleness observable: the fraction of offered
+            # packets written off as late this round (0 on skipped steps
+            # — no exchange consumes the draw)
+            staleness = counters_lib.staleness_stats(
+                late["rs"], late["ag"])["late_frac"].astype(jnp.float32)
         loss, grads = jax.value_and_grad(total)(params, batch)
         if tap is not None:
             taps_lib.emit("grad_norm", counters_lib.global_norm(grads))
+        late_x = late if exchange else None
         if is_grad_mode:
             if exchange:
                 out = _exchange(grads, key, scfg, is_grad=True,
                                 masks=masks, plan=plan, recovery=recovery,
-                                ef_state=ef_state if use_ef else None)
+                                ef_state=ef_state if use_ef else None,
+                                late=late_x)
                 grads, ef_state = out if use_ef else (out, ef_state)
             params, opt_state = opt.update(grads, opt_state, params, lr)
         else:
@@ -209,7 +269,8 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
             if exchange:
                 out = _exchange(params, key, scfg, is_grad=False,
                                 masks=masks, plan=plan, recovery=recovery,
-                                ef_state=ef_state if use_ef else None)
+                                ef_state=ef_state if use_ef else None,
+                                late=late_x)
                 params, ef_state = out if use_ef else (out, ef_state)
         mean_p = jax.tree.map(lambda x: jnp.mean(x, 0, keepdims=True), params)
         consensus = jax.tree.reduce(
@@ -218,7 +279,8 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
         if tap is not None:
             taps_lib.emit("param_norm", counters_lib.global_norm(params))
         base = (params, opt_state, loss / n, consensus, ch_state)
-        return base + ((ef_state,) if use_ef else ())
+        return base + ((ef_state,) if use_ef else ()) \
+            + ((staleness,) if async_mode else ())
 
     if telemetry:
         def step_fn(params, opt_state, batch, key, lr, ch_state,
@@ -295,26 +357,30 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
         reg = telemetry_lib.Telemetry()
     # the exchange layout, computed once — never inside the jitted step
     # (DESIGN.md §11); grads share the params' tree so one plan serves both
+    async_mode = rps_agg and scfg.schedule == "async"
     if use_tel:
         with reg.span("plan_build"):
-            plan = make_exchange_plan(p1, scfg)
+            plan = make_exchange_plan(p1, scfg, channel)
         reg.bind(plan=plan, n=n,
                  p=channel.effective_p() if rps_agg else None,
                  channel=channel if rps_agg else None,
                  aggregator=scfg.aggregator)
     else:
-        plan = make_exchange_plan(p1, scfg)
+        plan = make_exchange_plan(p1, scfg, channel)
     step_fn = make_sim_step(loss_fn, scfg, channel, plan, opt,
                             telemetry=use_tel)
 
     history = telemetry_lib.RunHistory(
         {"step": [], "loss": [], "consensus": [], "eval": [],
+         "staleness": [],
+         # the §15 staleness axis: per-eval-step late-packet fraction
+         # (always present; stays empty for sync schedules)
          "channel": repr(channel),
          "channel_effective_p": channel.effective_p() if rps_agg
          else 0.0,
          "exchange_plan": plan.describe() if plan is not None
          else None})
-    pending = []        # (t, lr, loss, consensus, stats) — drained post-loop
+    pending = []        # (t, lr, loss, consensus, late, stats) — post-loop
     for t in range(start_step, scfg.steps):
         kt = jax.random.fold_in(key, t)
         lr = scfg.lr * min(1.0, (t + 1) / max(scfg.warmup, 1))
@@ -326,25 +392,38 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
         if use_tel:
             stats = outs[-1]
             outs = outs[:-1]
+        staleness = None
+        if async_mode:
+            staleness = outs[-1]
+            outs = outs[:-1]
         if use_ef:
             (params, opt_state, loss, consensus, ch_state,
              ef_state) = outs
         else:
             params, opt_state, loss, consensus, ch_state = outs
         if use_tel:
-            pending.append((t, lr, loss, consensus, stats))
+            pending.append((t, lr, loss, consensus, staleness, stats))
         if t % scfg.eval_every == 0 or t == scfg.steps - 1:
             history["step"].append(t)
             history["loss"].append(float(loss))
             history["consensus"].append(float(consensus))
+            if async_mode:
+                history["staleness"].append(float(staleness))
             if eval_fn is not None:
                 mean_params = jax.tree.map(lambda x: jnp.mean(x, 0), params)
                 history["eval"].append(float(eval_fn(mean_params)))
     if use_tel:
         with reg.span("record_drain", steps=len(pending)):
-            for t, lr, loss, consensus, stats in pending:
+            for t, lr, loss, consensus, staleness, stats in pending:
+                extra = {} if staleness is None \
+                    else {"staleness": float(staleness)}
                 reg.record_step(t, stats, loss=loss, consensus=consensus,
-                                lr=lr)
+                                lr=lr, **extra)
+                if staleness is not None:
+                    # lateness counter track in the Chrome trace (§15);
+                    # the schema gate covers these events
+                    reg.trace.counter("lateness",
+                                      {"late_frac": float(staleness)})
         history.records = list(reg.memory.records)
         history.summary = reg.summary()
     history["final_loss"] = history["loss"][-1]

@@ -102,6 +102,27 @@ class TrainConfig:
                                            # carries a params-shaped
                                            # residual (see
                                            # make_train_setup).
+    schedule: str = "sync"                 # round scheduling (DESIGN.md
+                                           # §15): "sync" = every bucket
+                                           # ships at the iteration
+                                           # barrier (seed semantics,
+                                           # bit-identical default);
+                                           # "async" = buckets ship in
+                                           # reverse-layer order against
+                                           # per-bucket slack budgets —
+                                           # the plan dispatches in
+                                           # ship_order with alternating
+                                           # ring comm slots, and late
+                                           # packets are written off as
+                                           # dropped-with-recovery
+                                           # (counted in the telemetry).
+    compute_ms: Optional[float] = None     # async backward cost model:
+                                           # modelled backward duration
+                                           # the per-bucket readiness
+                                           # times derive from; None
+                                           # (with schedule="async") =
+                                           # 0.8 × the channel deadline
+                                           # when it has one, else 1.0.
     telemetry: bool = False                # exchange telemetry (DESIGN.md
                                            # §14): metrics gain a
                                            # "telemetry" sub-dict (per-link
@@ -194,6 +215,7 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
     rps_agg = tcfg.aggregator.startswith("rps")
     stateful = tcfg.channel is not None and rps_agg
     use_ef = rps_agg and tcfg.recovery == "ef"
+    async_mode = rps_agg and tcfg.schedule == "async"
     # the scale divisor prices the channel's stationary marginal, not the
     # raw drop_rate knob (they differ for GE/hetero/trace channels)
     recovery = wire_lib.make_recovery(
@@ -219,12 +241,21 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
             lambda d: None if d is None else d + 1,        # + stacked dim
             shlib.model_dims(params_shape, cfg, stacked=True),
             is_leaf=lambda x: x is None) if bucketing else None
+        from repro.train.simulator import resolve_compute_ms
         plan = plan_lib.plan_from_config(
             local_shape, n_rps, n_servers,
             bucket_mb=tcfg.bucket_mb, n_buckets=tcfg.n_buckets,
             model_dims=mdims, engine=tcfg.engine,
             wire=wire_lib.config_wire(tcfg.wire, tcfg.exchange_dtype),
-            recovery=tcfg.recovery)
+            recovery=tcfg.recovery, schedule=tcfg.schedule,
+            compute_ms=resolve_compute_ms(tcfg, channel))
+    slack = None
+    if async_mode and plan is not None:
+        # static per-bucket budgets (DESIGN.md §15); channels without a
+        # latency model ignore the values (sync-identical fallback)
+        deadline = getattr(channel, "deadline_ms", None)
+        slack = plan.slack_ms(float(deadline)) if deadline is not None \
+            else np.zeros(plan.n_buckets, np.float64)
 
     # ---- shardings --------------------------------------------------------
     def state_shardings(params_shape):
@@ -355,11 +386,18 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
             grads = _pin(grads)
 
         masks = None
-        if stateful:
+        late = None
+        if stateful or async_mode:
             # channel time advances every step, exchanged or not (a trace
             # cursor / burst state tracks wall-clock iterations); a
-            # packetised plan draws one mask entry per bucket column
-            if plan is not None and plan.per_bucket_masks:
+            # packetised plan draws one mask entry per bucket column.
+            # Async draws at step level even for the default Bernoulli
+            # channel (slack arbitration needs the channel object); a
+            # channel-less config keeps ch_state = None un-carried.
+            if async_mode:
+                rs, ag, late, ch_state = channel.sample_async(
+                    key, ch_state, slack)
+            elif plan is not None and plan.per_bucket_masks:
                 rs, ag, ch_state = channel.sample_packets(
                     key, ch_state, plan.n_buckets)
             else:
@@ -385,14 +423,22 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
                     else None)
             tel_stats = counters_lib.mask_step_stats(rs_t, ag_t)
             tel_stats["grad_norm"] = counters_lib.global_norm(grads)
+            if late is not None:
+                # §15 lateness bundle from the same deadline arbitration
+                # the exchange consumed
+                tel_stats.update(counters_lib.staleness_stats(
+                    late["rs"], late["ag"]))
             if tcfg.exchange_every > 1:
                 # skipped rounds consume no masks: zero delivered AND
-                # offered so the estimator skips them (offered == 0)
+                # offered so the estimator skips them (offered == 0);
+                # lateness likewise — nothing was shipped
                 live = jnp.asarray(step % tcfg.exchange_every == 0,
                                    jnp.int32)
                 for k in ("rs_link_delivered", "ag_link_delivered",
-                          "link_offered"):
-                    tel_stats[k] = tel_stats[k] * live
+                          "link_offered", "rs_link_late", "ag_link_late",
+                          "late_frac"):
+                    if k in tel_stats:
+                        tel_stats[k] = tel_stats[k] * live
 
         lr = jnp.float32(tcfg.lr)
         ef = ef_state if use_ef else None

@@ -317,3 +317,145 @@ def test_convergence_ge_and_trace_vs_grad():
     h_grad = _converge(ge, "rps_grad")
     assert h_grad["final_loss"] > h_model["final_loss"] * 1.05, \
         "naive gradient averaging should degrade on the bursty channel"
+
+
+# ---- DESIGN §15: deadline validation + async slack arbitration ------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+
+def test_deadline_validation_messages():
+    """Each knob rejects with an accurate message: the old validator
+    claimed 'latencies must be positive' while rejecting base_ms < 0
+    (0 is a legal pure-jitter latency) and never checked
+    straggler_mult at all."""
+    with pytest.raises(ValueError, match="deadline_ms.*must be > 0"):
+        ch.DeadlineChannel(4, deadline_ms=0.0)
+    with pytest.raises(ValueError, match="jitter_ms.*must be > 0"):
+        ch.DeadlineChannel(4, jitter_ms=-1.0)
+    with pytest.raises(ValueError, match="base_ms.*must be >= 0"):
+        ch.DeadlineChannel(4, base_ms=-0.5)
+    # base_ms == 0 is pure-jitter latency — explicitly allowed
+    c0 = ch.DeadlineChannel(4, base_ms=0.0)
+    assert 0.0 < c0.effective_p() < 1.0
+    with pytest.raises(ValueError, match="straggler_frac.*not in"):
+        ch.DeadlineChannel(4, straggler_frac=1.5)
+    with pytest.raises(ValueError, match="straggler_mult.*must be >= 1"):
+        ch.DeadlineChannel(4, straggler_mult=0.5)
+    # mult == 1 (degenerate: stragglers indistinguishable) is legal
+    ch.DeadlineChannel(4, straggler_mult=1.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500), n=st.sampled_from([4, 8]),
+       two_blocks=st.booleans())
+def test_deadline_row_column_correlation(seed, n, two_blocks):
+    """The straggler structure is all-or-nothing per worker: when worker
+    i straggles, its whole RS row AND its owned AG columns drop at once
+    (one iteration-level straggle draw drives both legs); a non-straggler
+    delivers everything. Near-deterministic regime: straggler latency
+    far above the deadline, jitter negligible."""
+    s = 2 * n if two_blocks else None
+    c = ch.DeadlineChannel(n, deadline_ms=10.0, base_ms=1.0,
+                           jitter_ms=1e-3, straggler_frac=0.4,
+                           straggler_mult=100.0, s=s)
+    key = jax.random.PRNGKey(seed)
+    rs_m, ag_m, _ = c.sample(key, None)
+    rs_m, ag_m = np.asarray(rs_m), np.asarray(ag_m)
+    owners = np.asarray(c._owners)
+    non_own = owners[None, :] != np.arange(n)[:, None]     # (n, s)
+    for i in range(n):
+        row = rs_m[i][non_own[i]]                # RS: i -> owner(j)
+        col = ag_m[:, owners == i][non_own[:, owners == i]]
+        # AG: owner(j) == i broadcasts to every receiver != i
+        assert row.all() or not row.any(), \
+            "RS drops must be all-or-nothing per sender"
+        assert col.all() or not col.any(), \
+            "AG drops must be all-or-nothing per owning sender"
+        assert row.all() == col.all(), \
+            "one straggle draw must couple the RS row and owned AG column"
+
+
+def test_deadline_effective_p_at_closed_form():
+    """effective_p_at is the vectorised exponential-tail mixture:
+    matches effective_p at the full deadline, hits 1.0 at slack <= base,
+    decreases monotonically in slack, and tracks the Monte-Carlo
+    per-bucket marginal of sample_async."""
+    c = ch.DeadlineChannel(8, deadline_ms=10.0, base_ms=2.0,
+                           jitter_ms=3.0, straggler_frac=0.25,
+                           straggler_mult=4.0)
+    assert c.effective_p() == pytest.approx(
+        float(c.effective_p_at(c.deadline_ms)))
+    slacks = np.array([0.0, 1.0, 2.0, 4.0, 7.0, 10.0])
+    ps = np.asarray(c.effective_p_at(slacks), np.float64)
+    assert ps.shape == slacks.shape
+    assert ps[0] == 1.0 and ps[1] == 1.0          # slack <= base: all drop
+    assert (np.diff(ps) <= 1e-12).all(), "drop marginal must fall as slack grows"
+    # Monte-Carlo: per-bucket delivered fraction ~ 1 - effective_p_at(slack)
+    slack = jnp.asarray([3.0, 6.0, 10.0])
+    deliv = np.zeros(3)
+    T = 300
+    for t in range(T):
+        rs_m, _, _, _ = c.sample_async(jax.random.fold_in(KEY, t), None,
+                                       slack)
+        off = ~np.eye(8, dtype=bool)
+        deliv += np.asarray(rs_m)[:, off].mean(axis=1)
+    want = 1.0 - np.asarray(c.effective_p_at(np.asarray(slack)))
+    np.testing.assert_allclose(deliv / T, want, atol=0.03)
+
+
+def test_deadline_sample_async_semantics():
+    """Late = would have met the sync deadline, missed the bucket slack:
+    disjoint from delivered, empty at full slack, monotone in slack under
+    the shared draw, owner entries delivered and never late."""
+    n, nb = 8, 3
+    c = ch.DeadlineChannel(n, deadline_ms=10.0, base_ms=1.0, jitter_ms=3.0,
+                           straggler_frac=0.3, straggler_mult=4.0)
+    key = KEY
+    tight = jnp.asarray([2.0, 5.0, 8.0])
+    rs1, ag1, late1, _ = c.sample_async(key, None, tight)
+    assert rs1.shape == (nb, n, n) and late1["rs"].shape == (nb, n, n)
+    eye = np.eye(n, dtype=bool)
+    for m, lm in ((rs1, late1["rs"]), (ag1, late1["ag"])):
+        m, lm = np.asarray(m), np.asarray(lm)
+        assert m[:, eye].all(), "owner entries always delivered"
+        assert not lm[:, eye].any(), "owner entries never late"
+        assert not (m & lm).any(), "late and delivered are disjoint"
+    # same key, full slack: the shared latency draw makes delivery a
+    # superset of the tight-slack delivery, and nothing is late
+    full = jnp.full((nb,), c.deadline_ms)
+    rs2, ag2, late2, _ = c.sample_async(key, None, full)
+    assert not np.asarray(late2["rs"]).any()
+    assert not np.asarray(late2["ag"]).any()
+    assert (np.asarray(rs1) <= np.asarray(rs2)).all()
+    assert (np.asarray(ag1) <= np.asarray(ag2)).all()
+    # everything tight-slack wrote off as late IS delivered at full slack
+    assert (np.asarray(late1["rs"]) <= np.asarray(rs2)).all()
+    assert (np.asarray(late1["ag"]) <= np.asarray(ag2)).all()
+
+
+@pytest.mark.parametrize("spec", [
+    "bernoulli:p=0.2",
+    "ge:p_bad=0.5,burst=4,p_gb=0.05",
+    "hetero:n_pods=4,p_intra=0.02,p_cross=0.3",
+])
+def test_sample_async_fallback_is_sync_identical(spec):
+    """Channels without a latency model run async with the *same* masks
+    and state advance as sample_packets, zero lateness — the async/sync
+    mask-identity fallback the trace-pair probes rely on."""
+    c = ch.make_channel(spec, 8)
+    state = c.init_state(KEY)
+    slack = jnp.zeros(3)
+    rs_a, ag_a, late, st_a = c.sample_async(KEY, state, slack)
+    rs_p, ag_p, st_p = c.sample_packets(KEY, c.init_state(KEY), 3)
+    np.testing.assert_array_equal(np.asarray(rs_a), np.asarray(rs_p))
+    np.testing.assert_array_equal(np.asarray(ag_a), np.asarray(ag_p))
+    assert not np.asarray(late["rs"]).any()
+    assert not np.asarray(late["ag"]).any()
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(st_a) or [0]),
+        np.asarray(jax.tree.leaves(st_p) or [0]))

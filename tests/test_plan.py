@@ -657,3 +657,119 @@ def test_channel_sample_packets_ge_state_advances_once():
     _, _, s_b = c.sample_packets(KEY, s0, 7)
     np.testing.assert_array_equal(np.asarray(s_a["bad"]),
                                   np.asarray(s_b["bad"]))
+
+
+# ---- DESIGN §15: async schedule — plan fields + skip semantics ------------
+
+def test_async_plan_fields_and_validation():
+    """ready_ms is the reverse-cumulative backward cost model, ship_order
+    reverses under async, slack clips at zero; the schedule/compute_ms
+    knobs validate strictly (async needs the cost model, sync rejects
+    it — a silently ignored compute_ms would mask a config typo)."""
+    tree = _tree()
+    p = plan_lib.make_plan(tree, 4, n_buckets=3, schedule="async",
+                           compute_ms=8.0)
+    assert p.schedule == "async"
+    assert p.ship_order == (2, 1, 0)
+    ready = np.asarray(p.ready_ms)
+    assert ready.shape == (3,)
+    # reverse-cumulative: last bucket earliest, bucket 0 closes the pass
+    assert (np.diff(ready) < 0).all() and ready[0] == pytest.approx(8.0)
+    sizes = np.array([b.free * b.m for b in p.buckets], np.float64)
+    want = 8.0 * np.cumsum(sizes[::-1])[::-1] / sizes.sum()
+    np.testing.assert_allclose(ready, want)
+    slack = p.slack_ms(10.0)
+    np.testing.assert_allclose(slack, np.maximum(10.0 - ready, 0.0))
+    assert (p.slack_ms(1.0) == 0.0).all()          # clipped, never negative
+    d = p.describe()
+    assert d["schedule"] == "async" and len(d["ready_ms"]) == 3
+
+    sync = plan_lib.make_plan(tree, 4, n_buckets=3)
+    assert sync.schedule == "sync" and sync.ready_ms is None
+    assert sync.ship_order == (0, 1, 2)
+    with pytest.raises(ValueError, match="ready_ms"):
+        sync.slack_ms(10.0)
+    with pytest.raises(ValueError, match="needs compute_ms"):
+        plan_lib.make_plan(tree, 4, n_buckets=3, schedule="async")
+    with pytest.raises(ValueError, match="only applies"):
+        plan_lib.make_plan(tree, 4, n_buckets=3, compute_ms=5.0)
+    with pytest.raises(ValueError, match="schedule"):
+        plan_lib.make_plan(tree, 4, n_buckets=3, schedule="overlap")
+    with pytest.raises(ValueError, match="must be > 0"):
+        plan_lib.bucket_ready_ms(p.buckets, 0.0)
+    # per-leaf legacy path carries the same knobs
+    pl = plan_lib.per_leaf_plan(tree, 4, schedule="async", compute_ms=2.0)
+    assert pl.schedule == "async" and len(pl.ready_ms) == pl.n_buckets
+
+
+def test_async_exchange_matches_sync_for_non_latency_channels():
+    """Mask-identity fallback, end to end: on a bucketed plan a channel
+    without a latency model draws the SAME per-bucket masks under async
+    (sample_async -> sample_packets) as under sync, and the reverse
+    ship_order exchanges independent buckets — so the async simulator
+    run is bit-identical to sync, staleness identically zero."""
+    from repro.train.simulator import SimulatorConfig, run_simulation
+    init_fn, loss_fn, batch_fn = _lin_task(4)
+    base = dict(n_workers=4, drop_rate=0.3, lr=0.1, eval_every=1,
+                aggregator="rps_model", n_buckets=2, steps=4,
+                channel="ge:p_bad=0.5,burst=4,p_gb=0.05")
+    hs = run_simulation(loss_fn, init_fn, batch_fn,
+                        SimulatorConfig(**base))
+    ha = run_simulation(loss_fn, init_fn, batch_fn,
+                        SimulatorConfig(**base, schedule="async",
+                                        compute_ms=5.0))
+    np.testing.assert_array_equal(np.asarray(hs["params"]["w"]),
+                                  np.asarray(ha["params"]["w"]))
+    assert ha["staleness"] == [0.0] * len(ha["step"])
+    assert hs["staleness"] == []
+
+
+def test_simulator_async_skipped_steps_trace_pair():
+    """Satellite of the PR-3 probes: the async path keeps the skip
+    discipline — with exchange_every=2 the period-1 masks are never
+    consumed (trace-pair bit-identity), staleness reads 0 on skipped
+    steps, and the channel cursor still ticks every step."""
+    from repro.train.simulator import SimulatorConfig, run_simulation
+    init_fn, loss_fn, batch_fn = _lin_task(4)
+    base = dict(n_workers=4, drop_rate=0.4, lr=0.1, eval_every=1,
+                aggregator="rps_model", n_buckets=2, schedule="async",
+                compute_ms=5.0)
+    cha, chb = _trace_pair(4)
+    runs = [run_simulation(loss_fn, init_fn, batch_fn,
+                           SimulatorConfig(steps=2, exchange_every=2,
+                                           channel=c, **base))
+            for c in (cha, chb)]
+    np.testing.assert_array_equal(np.asarray(runs[0]["params"]["w"]),
+                                  np.asarray(runs[1]["params"]["w"]))
+    # control: consuming the period-1 masks diverges the pair
+    cha, chb = _trace_pair(4)
+    ex = [run_simulation(loss_fn, init_fn, batch_fn,
+                         SimulatorConfig(steps=2, exchange_every=1,
+                                         channel=c, **base))
+          for c in (cha, chb)]
+    assert not np.array_equal(np.asarray(ex[0]["params"]["w"]),
+                              np.asarray(ex[1]["params"]["w"]))
+    # the cursor ticks on every wall-clock step, skipped or not
+    cha, _ = _trace_pair(4)
+    h = run_simulation(loss_fn, init_fn, batch_fn,
+                       SimulatorConfig(steps=4, exchange_every=3,
+                                       channel=cha, **base))
+    assert int(h["channel_state"]["t"]) == 4
+
+
+def test_simulator_async_staleness_zero_on_skipped_steps():
+    """A skipped step ships nothing: its staleness observable must be 0
+    even on a deadline channel whose exchanged steps run hot."""
+    from repro.train.simulator import SimulatorConfig, run_simulation
+    init_fn, loss_fn, batch_fn = _lin_task(4)
+    h = run_simulation(loss_fn, init_fn, batch_fn, SimulatorConfig(
+        n_workers=4, aggregator="rps_model", steps=4, eval_every=1,
+        exchange_every=2, n_buckets=2, schedule="async", lr=0.1,
+        channel="deadline:deadline_ms=10,base_ms=1,jitter_ms=3,"
+                "straggler_frac=0.3,straggler_mult=4"))
+    stale = h["staleness"]
+    assert len(stale) == 4
+    assert stale[1] == 0.0 and stale[3] == 0.0, \
+        "skipped steps must report zero staleness"
+    assert max(stale) > 0.0, \
+        "exchanged steps under reduced slack should see lateness"

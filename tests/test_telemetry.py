@@ -373,3 +373,109 @@ def test_time_fn_and_wallclock():
         with wallclock("test.labelled"):
             pass
     assert "test.labelled" in reg.timings
+
+
+@pytest.mark.parametrize("spec,slack", [
+    # one straggle coin per iteration correlates whole rounds → wide band
+    ("deadline:deadline_ms=10,base_ms=1,jitter_ms=3,"
+     "straggler_frac=0.3,straggler_mult=4", 0.06),
+])
+def test_per_link_estimate_converges_deadline(spec, slack):
+    """Satellite regression: the drift monitor must hold on the deadline
+    family too — its marginal is uniform across links (the straggle draw
+    multiplies every link's latency in lockstep), so expected_link_p()
+    is the right target for both legs."""
+    n = 8
+    channel = make_channel(spec, n, 0.1)
+    loss_fn, init_fn, batch_fn = _problem(n)
+    reg = telemetry_lib.Telemetry()
+    run_simulation(loss_fn, init_fn, batch_fn,
+                   SimulatorConfig(n_workers=n, aggregator="rps_model",
+                                   lr=0.2, warmup=2, steps=300,
+                                   channel=channel),
+                   telemetry=reg)
+    rep = reg.drift_report(slack=slack)
+    assert not rep["rs"]["any_drift"], rep["rs"]
+    assert not rep["ag"]["any_drift"], rep["ag"]
+    np.testing.assert_allclose(channel.expected_link_p(),
+                               channel.expected_link_p_ag())
+
+
+def test_per_link_drift_trace_family_is_per_leg():
+    """Satellite regression: TraceChannel's AG draw uses the transposed
+    link matrix, so with asymmetric up/down loss the RS and AG marginals
+    differ per worker. The monitor must compare each estimator to its
+    own leg — checking the AG leg against the RS expectation (the
+    pre-fix behaviour) false-flags drift on exactly this family."""
+    from repro import channels as ch
+    n = 8
+    # senders 0..n-1 run increasingly lossy uplinks; downlinks the reverse
+    up = np.tile(np.linspace(0.05, 0.55, n, dtype=np.float32), (2, 1))
+    down = np.tile(np.linspace(0.3, 0.0, n, dtype=np.float32), (2, 1))
+    channel = ch.TraceChannel(n, {"up": up, "down": down})
+    exp_rs = channel.expected_link_p()
+    exp_ag = channel.expected_link_p_ag()
+    assert np.abs(exp_rs - exp_ag).max() > 0.08, \
+        "trace not asymmetric enough to exercise the per-leg split"
+    loss_fn, init_fn, batch_fn = _problem(n)
+    reg = telemetry_lib.Telemetry()
+    run_simulation(loss_fn, init_fn, batch_fn,
+                   SimulatorConfig(n_workers=n, aggregator="rps_model",
+                                   lr=0.2, warmup=2, steps=400,
+                                   channel=channel),
+                   telemetry=reg)
+    rep = reg.drift_report(slack=0.04)
+    assert not rep["rs"]["any_drift"], rep["rs"]
+    assert not rep["ag"]["any_drift"], rep["ag"]
+    wrong = reg.ag_est.drift(exp_rs, z=4.0, slack=0.04)
+    assert wrong["any_drift"], \
+        "cross-leg comparison should drift on an asymmetric trace"
+
+
+def test_trace_schema_covers_async_lateness(tmp_path):
+    """CI trace gate: an async run's lateness counters land in a
+    schema-valid Chrome trace and the step records carry the staleness
+    fields (DESIGN.md §15)."""
+    loss_fn, init_fn, batch_fn = _problem(4)
+    reg = telemetry_lib.Telemetry(out_dir=str(tmp_path))
+    h = run_simulation(loss_fn, init_fn, batch_fn, SimulatorConfig(
+        n_workers=4, aggregator="rps_model", lr=0.2, warmup=2, steps=8,
+        eval_every=1, n_buckets=2, schedule="async",
+        channel="deadline:deadline_ms=10,base_ms=1,jitter_ms=3,"
+                "straggler_frac=0.3,straggler_mult=4"), telemetry=reg)
+    assert {"rs_link_late", "ag_link_late", "late_frac",
+            "staleness"} <= set(h.records[0])
+    reg.finalize()
+    path = os.path.join(str(tmp_path), "trace.json")
+    with open(path) as f:
+        obj = json.load(f)
+    assert validate_chrome_trace(obj) == []
+    lat = [e for e in obj["traceEvents"] if e.get("name") == "lateness"]
+    assert len(lat) == 8
+    assert all(e["ph"] == "C" and "late_frac" in e["args"] for e in lat)
+
+
+def test_async_drift_monitor_uses_async_marginal():
+    """bind() must shift the expected per-link p to the mean per-bucket
+    async rate for a deadline-arbitrated async plan: the estimators see
+    drops *plus* lateness write-offs, so comparing them to the sync
+    stationary p would false-flag drift on every async run."""
+    n = 8
+    channel = make_channel("deadline:deadline_ms=10,base_ms=1,jitter_ms=3,"
+                           "straggler_frac=0.3,straggler_mult=4", n, 0.1)
+    loss_fn, init_fn, batch_fn = _problem(n)
+    reg = telemetry_lib.Telemetry()
+    run_simulation(loss_fn, init_fn, batch_fn,
+                   SimulatorConfig(n_workers=n, aggregator="rps_model",
+                                   lr=0.2, warmup=2, steps=200,
+                                   n_buckets=4, schedule="async",
+                                   channel=channel),
+                   telemetry=reg)
+    rep = reg.drift_report(slack=0.06)
+    assert not rep["rs"]["any_drift"], rep["rs"]
+    assert not rep["ag"]["any_drift"], rep["ag"]
+    # the shift really happened: sync marginal recorded, async one bound
+    assert reg.meta["p_sync"] == pytest.approx(channel.effective_p())
+    assert reg.meta["p"] > reg.meta["p_sync"] + 0.1
+    from repro.core import theory
+    assert reg.meta["alpha_bounds"]["alpha2"] >= 0.0

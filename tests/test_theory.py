@@ -67,3 +67,71 @@ def test_corollary2_rate_mild_in_p_for_large_n():
 @given(n=NS, p=st.floats(0.001, 0.5))
 def test_lr_positive(n, p):
     assert theory.corollary2_lr(n, p, 1000) > 0
+
+
+# ---- async staleness axis (DESIGN.md §15) ---------------------------------
+
+def _async_setup(n=8, n_buckets=4, compute_ms=8.0):
+    import jax.numpy as jnp
+    from repro.channels import make_channel
+    from repro.core import plan as plan_lib
+    tree = {f"l{i}": jnp.zeros((64, 32), jnp.float32) for i in range(8)}
+    plan = plan_lib.make_plan(tree, n, n_buckets=n_buckets,
+                              schedule="async", compute_ms=compute_ms)
+    chan = make_channel("deadline:deadline_ms=10,base_ms=1,jitter_ms=3,"
+                        "straggler_frac=0.3,straggler_mult=4", n, 0.1)
+    return plan, chan
+
+
+def test_async_bucket_drop_rates_monotone_in_readiness():
+    """Later-ready buckets face less slack → a higher effective drop
+    marginal; every async rate sits at or above the stationary sync
+    marginal (slack can only shrink under the deadline)."""
+    plan, chan = _async_setup()
+    rates = theory.async_bucket_drop_rates(plan, chan)
+    assert rates.shape == (plan.n_buckets,)
+    # ready_ms decreases with bucket index → slack grows → rates fall
+    assert (np.diff(rates) <= 1e-12).all()
+    assert (rates >= chan.effective_p() - 1e-12).all()
+    np.testing.assert_allclose(
+        rates, chan.effective_p_at(plan.slack_ms(chan.deadline_ms)))
+    # no latency model → no tightening: every bucket at the sync marginal
+    from repro.channels import make_channel
+    bern = make_channel("bernoulli:p=0.3", plan.n, 0.3)
+    np.testing.assert_allclose(theory.async_bucket_drop_rates(plan, bern),
+                               np.full(plan.n_buckets, 0.3))
+
+
+def test_staleness_alpha2_extra_shape():
+    assert theory.staleness_alpha2_extra(0.3, 0.3, 8) == 0.0
+    assert theory.staleness_alpha2_extra(0.2, 0.3, 8) == 0.0  # clipped
+    q = 0.1
+    assert theory.staleness_alpha2_extra(0.4, 0.3, 8) == \
+        pytest.approx(q * (1 - q) / 8)
+    # O(1/n): the surcharge vanishes with fleet size
+    assert theory.staleness_alpha2_extra(0.4, 0.3, 64) < \
+        theory.staleness_alpha2_extra(0.4, 0.3, 8)
+
+
+def test_async_alpha_bounds_reduce_to_sync_and_tighten():
+    """async_alpha_bounds = alpha_bounds_plan at the stationary marginal
+    when nothing is late (sync plan / no latency model); a real deadline
+    channel inflates the marginal, so the async α₂ is no tighter than
+    the sync one."""
+    import jax.numpy as jnp
+    from repro.channels import make_channel
+    from repro.core import plan as plan_lib
+    plan, chan = _async_setup()
+    n = plan.n
+    a1, a2 = theory.async_alpha_bounds(plan, n, chan)
+    assert 0.0 <= a1 <= 1.0 and 0.0 <= a2 <= 1.0
+    a1_sync, a2_sync = theory.alpha_bounds_plan(plan, n,
+                                                chan.effective_p())
+    assert a2 >= a2_sync - 1e-12
+    # a channel with no latency model: exact reduction to the sync bounds
+    bern = make_channel("bernoulli:p=0.3", n, 0.3)
+    tree = {f"l{i}": jnp.zeros((64, 32), jnp.float32) for i in range(8)}
+    splan = plan_lib.make_plan(tree, n, n_buckets=4)
+    ab = theory.async_alpha_bounds(splan, n, bern)
+    sb = theory.alpha_bounds_plan(splan, n, 0.3)
+    assert ab == pytest.approx(sb)
