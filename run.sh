@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Host-perf launcher (DESIGN.md §16, SNIPPETS run.sh exemplars).
+#
+# Wraps any repo command with the host hygiene the benches and
+# multi-host-on-CPU parity runs need:
+#   - tcmalloc LD_PRELOAD when the library is installed (glibc malloc
+#     fragments under XLA's large transient allocations);
+#   - --xla_force_host_platform_device_count derived from the command's
+#     own --workers flag (one XLA host device per simulated worker);
+#   - step-marker flags for host-profile step attribution.
+#
+# Usage:
+#   ./run.sh python -m repro.launch.train --workers 16 --steps 200
+#   ./run.sh python -m repro.launch.dryrun --arch llama3_405b --shape train_4k
+#   RUN_SH_WORKERS=8 ./run.sh python -m pytest tests/test_trainer.py
+set -euo pipefail
+
+cd "$(dirname "$0")"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [ "$#" -eq 0 ]; then
+  echo "usage: $0 <command …>   (e.g. $0 python -m repro.launch.train --workers 16)" >&2
+  exit 2
+fi
+
+# the env module computes the preamble; RUN_SH_WORKERS overrides the
+# command's own --workers for commands that don't take the flag
+preamble="$(python3 -m repro.launch.env ${RUN_SH_WORKERS:+--workers "$RUN_SH_WORKERS"} -- "$@")"
+eval "$preamble"
+
+exec "$@"

@@ -4,6 +4,12 @@ Arrays are fetched to host (`np.asarray` gathers sharded arrays), keys are
 the joined tree paths, dtypes/shapes round-trip exactly. Good enough for the
 examples and fault-tolerance demos; a real deployment would swap in
 tensorstore — the call sites only touch this module.
+
+Packed trainer state (DESIGN.md §16) needs nothing special: a §16 state
+bundle is just a pytree whose leaves are bf16 (stored as a tagged uint16
+bit pattern), int8 grid payloads and f32 per-row scales — all of which
+round-trip bitwise, so a mid-run resume of packed optimizer state + EF
+residual is exact (pinned in tests/test_statepack.py).
 """
 from __future__ import annotations
 

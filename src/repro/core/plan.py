@@ -133,6 +133,22 @@ class ExchangePlan:
             return tuple(range(self.n_buckets - 1, -1, -1))
         return tuple(range(self.n_buckets))
 
+    def with_ready_ms(self, ready_ms: Sequence[float]) -> "ExchangePlan":
+        """The same plan with *measured* per-bucket readiness times in
+        place of the cost-model's guess (``--compute-ms=auto``): callers
+        time the real backward (``repro.train.simulator.
+        measure_bucket_ready_ms``) and substitute here. Only an async
+        plan carries readiness; lengths must match the bucket count."""
+        if self.schedule != "async":
+            raise ValueError("ready_ms only applies to schedule='async'")
+        ready = tuple(float(r) for r in ready_ms)
+        if len(ready) != self.n_buckets:
+            raise ValueError(f"got {len(ready)} readiness times for "
+                             f"{self.n_buckets} buckets")
+        if any(r < 0 for r in ready):
+            raise ValueError(f"negative readiness time in {ready}")
+        return dataclasses.replace(self, ready_ms=ready)
+
     def slack_ms(self, deadline_ms: float) -> np.ndarray:
         """Per-bucket deadline budget under the async schedule:
         ``max(deadline − ready, 0)`` for each bucket (``(n_buckets,)``,

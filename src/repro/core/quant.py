@@ -1,0 +1,88 @@
+"""Shared block-scale / stochastic-rounding quantisation core (DESIGN.md §16).
+
+One quantisation library, two consumers:
+
+  * :class:`repro.core.wire.WireCodec` — the §13 RS-leg codec quantises a
+    bucket's block table onto the int8 grid *on the wire* (per-block-row
+    scales, stochastic rounding keyed per worker);
+  * :class:`repro.optim.statepack.StatePack` — the §16 trainer-state pack
+    stores optimizer second moments / EF residuals on the same grid *at
+    rest* (per-row scales, stochastic rounding on every write so the EMA
+    stays unbiased).
+
+Both previously needed the identical three-step math — per-block scale,
+grid projection, rounding — and this module is its single source of truth.
+The functions are verbatim the former ``WireCodec`` internals, so the wire
+path through here is bit-identical to the pre-§16 code (pinned by the PR-5
+parity matrix in tests/test_wire.py and directly in tests/test_statepack.py).
+
+Conventions:
+
+  * a *block* is everything after the ``lead`` axis: ``block_delta``
+    reduces ``max|x|`` over dims ``lead+1 …`` with ``keepdims=True``, so
+    the returned scale broadcasts back against ``x``. ``lead = -1`` gives
+    one scalar scale for the whole array; :func:`row_lead` picks the
+    per-trailing-dim-row convention the state pack uses.
+  * the grid is the symmetric integer range {−levels, …, +levels}; a
+    block that is all zeros gets a harmless Δ so decode(encode(0)) == 0
+    without a divide-by-zero.
+  * rounding is stochastic (unbiased — ``E[quantize(x)] = x/Δ``) when a
+    PRNG ``key`` is supplied, round-to-nearest-even otherwise.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def row_lead(ndim: int) -> int:
+    """The ``lead`` that yields one scale per trailing-dim row — the state
+    pack's per-block convention (olmax-style): matrices get a scale per
+    output row, vectors and scalars one scale total."""
+    return max(ndim - 2, -1)
+
+
+def block_delta(x: jax.Array, levels: int, lead: int = 0) -> jax.Array:
+    """Per-block grid step: ``max|x|`` over every dim after ``lead``
+    (keepdims), divided by the level count. All-zero blocks get a
+    harmless Δ so decode(encode(0)) == 0 without a divide-by-zero."""
+    red = tuple(range(lead + 1, x.ndim))
+    amax = jnp.max(jnp.abs(x), axis=red, keepdims=True)
+    return jnp.where(amax > 0, amax, 1.0) / float(levels)
+
+
+def stochastic_round(y: jax.Array, key: jax.Array) -> jax.Array:
+    """Unbiased randomised rounding: ⌊y⌋ + Bernoulli(y − ⌊y⌋)."""
+    f = jnp.floor(y)
+    return f + (jax.random.uniform(key, y.shape) < (y - f))
+
+
+def quantize(x: jax.Array, levels: int, out_dtype: Any,
+             key: Optional[jax.Array] = None, lead: int = 0,
+             ) -> Tuple[jax.Array, jax.Array]:
+    """x → (grid payload in ``out_dtype``, per-block f32 scales).
+
+    Stochastic rounding with ``key`` (unbiased — the property both the
+    wire convergence study and the packed-EMA study rely on),
+    round-to-nearest-even without."""
+    xf = x.astype(jnp.float32)
+    delta = block_delta(xf, levels, lead)
+    y = xf / delta
+    q = jnp.round(y) if key is None else stochastic_round(y, key)
+    q = jnp.clip(q, -levels, levels)
+    return q.astype(out_dtype), delta
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Grid payload back to f32 values (payload × per-block scale)."""
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x: jax.Array, levels: int, out_dtype: Any,
+               key: Optional[jax.Array] = None, lead: int = 0) -> jax.Array:
+    """dequantize(quantize(x)) in ``x``'s dtype — the value one
+    encode/decode round trip actually delivers."""
+    return dequantize(*quantize(x, levels, out_dtype, key, lead)
+                      ).astype(x.dtype)

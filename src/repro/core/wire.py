@@ -53,6 +53,8 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant as quant_lib
+
 WIRES = ("f32", "bf16", "int8")
 RECOVERIES = ("renorm", "scale", "ef")
 
@@ -116,31 +118,22 @@ class WireCodec:
         return jnp.float32 if self.quantized else jnp.dtype(self.wire_dtype)
 
     def _delta(self, x: jax.Array, lead: int) -> jax.Array:
-        """Per-row grid step: max|x| over every dim after ``lead``,
-        divided by the level count. All-zero rows get a harmless Δ so
-        decode(encode(0)) == 0 without a divide-by-zero."""
-        red = tuple(range(lead + 1, x.ndim))
-        amax = jnp.max(jnp.abs(x), axis=red, keepdims=True)
-        return jnp.where(amax > 0, amax, 1.0) / float(self.levels)
+        """Per-row grid step (``quant.block_delta`` at this codec's level
+        count — the shared §16 quantisation core)."""
+        return quant_lib.block_delta(x, self.levels, lead)
 
     def encode(self, x: jax.Array, key: Optional[jax.Array] = None,
                lead: int = 0) -> Tuple[jax.Array, Optional[jax.Array]]:
         """x → (wire payload, scales). Linear: a cast, scales None.
         Quantised: per-row scales over dims > ``lead``; stochastic
         rounding with ``key`` (unbiased — the compression point the
-        convergence study exercises), round-to-nearest-even without."""
+        convergence study exercises), round-to-nearest-even without.
+        The grid math is ``repro.core.quant`` — shared, op-for-op, with
+        the §16 optimizer-state pack."""
         if not self.quantized:
             return x.astype(self.wire_dtype), None
-        xf = x.astype(jnp.float32)
-        delta = self._delta(xf, lead)
-        y = xf / delta
-        if key is None:
-            q = jnp.round(y)
-        else:
-            f = jnp.floor(y)
-            q = f + (jax.random.uniform(key, y.shape) < (y - f))
-        q = jnp.clip(q, -self.levels, self.levels)
-        return q.astype(self.wire_dtype), delta
+        return quant_lib.quantize(x, self.levels, self.wire_dtype,
+                                  key=key, lead=lead)
 
     def decode(self, enc: jax.Array, scale: Optional[jax.Array],
                ) -> jax.Array:
@@ -148,7 +141,7 @@ class WireCodec:
         quantised codecs, identity for linear ones)."""
         if not self.quantized:
             return enc
-        return enc.astype(jnp.float32) * scale
+        return quant_lib.dequantize(enc, scale)
 
     def fake_quant(self, x: jax.Array, key: Optional[jax.Array] = None,
                    lead: int = 0) -> jax.Array:

@@ -1,5 +1,7 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch import env as env_lib   # no jax import — safe pre-init
+env_lib.apply(devices=512)                # both production meshes fit
 
 """Multi-pod dry-run: lower + compile every (architecture × input shape) on
 the production meshes, print memory/cost analysis, and emit roofline rows.
@@ -7,8 +9,9 @@ the production meshes, print memory/cost analysis, and emit roofline rows.
 Run:
   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --sweep --out results/dryrun
-(Forcing 512 host platform devices happens above, before any jax import —
-do NOT import this module from test/bench processes.)
+(Forcing 512 host platform devices happens above via the §16 host-perf
+preamble, before any jax import — do NOT import this module from
+test/bench processes.)
 """
 import argparse
 import json
@@ -26,7 +29,8 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.launch import sharding as shlib
-from repro.launch.mesh import make_production_mesh, rps_axes_for
+from repro.launch.mesh import (make_production_mesh, mesh_context,
+                               rps_axes_for)
 from repro.models import build_model
 from repro.models.inputs import input_specs, train_specs
 from repro.models.registry import kind_sequence
@@ -40,7 +44,8 @@ DROP_RATE = 0.1          # the paper's headline tolerance
 OVERRIDES = {"exchange_dtype": "float32", "exchange_every": 1,
              "capacity_factor": None, "remat_budget": None,
              "bucket_mb": None, "n_buckets": None, "engine": "xla",
-             "wire": "f32", "recovery": "renorm"}
+             "wire": "f32", "recovery": "renorm",
+             "optimizer": "sgd", "state_pack": "f32"}
 
 
 def pick_microbatch(cfg: ArchConfig, b_local: int, seq: int,
@@ -92,7 +97,8 @@ def build_train_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh,
     if OVERRIDES["capacity_factor"] is not None and cfg.is_moe:
         cfg = _dc.replace(cfg, capacity_factor=OVERRIDES["capacity_factor"])
         model = build_model(cfg, grouped=grouped, kind_counts=kind_counts)
-    tcfg = TrainConfig(optimizer="sgd", lr=0.05, drop_rate=DROP_RATE,
+    tcfg = TrainConfig(optimizer=OVERRIDES["optimizer"], lr=0.05,
+                       drop_rate=DROP_RATE,
                        aggregator=agg, microbatch=mb,
                        exchange_dtype=OVERRIDES["exchange_dtype"],
                        exchange_every=OVERRIDES["exchange_every"],
@@ -100,19 +106,46 @@ def build_train_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh,
                        n_buckets=OVERRIDES["n_buckets"],
                        engine=OVERRIDES["engine"],
                        wire=OVERRIDES["wire"],
-                       recovery=OVERRIDES["recovery"])
+                       recovery=OVERRIDES["recovery"],
+                       state_pack=OVERRIDES["state_pack"])
     init_state, train_step, state_shardings = make_train_setup(
         model, cfg, tcfg, mesh, rps_axes=rps_axes, fsdp_axis=fsdp_axis)
 
     state_shapes = jax.eval_shape(init_state, jax.random.PRNGKey(0))
     params_shape, opt_shape = state_shapes
-    param_sh, _ = state_shardings(params_shape)
+    param_sh, pspecs = state_shardings(params_shape)
+
+    def _mirror_sh(tree):
+        """Shardings for a state component that mirrors the param tree —
+        possibly packed (§16): same structure → the param specs, with
+        entries nulled on dims quantization reduced to size 1 (the int8
+        per-row scale trees); packed {"q","scale"} wrappers recurse; any
+        other shape replicates."""
+        from repro.optim import statepack as statepack_lib
+        if statepack_lib.is_packed_i8(tree):
+            return {"q": _mirror_sh(tree["q"]),
+                    "scale": _mirror_sh(tree["scale"])}
+        if (jax.tree_util.tree_structure(tree)
+                != jax.tree_util.tree_structure(params_shape)):
+            return jax.tree.map(lambda l: NamedSharding(mesh, P()), tree)
+
+        def leaf_sh(l, spec, ps):
+            ents = list(spec) + [None] * (l.ndim - len(spec))
+            ents = [None if l.shape[d] != ps.shape[d] else ents[d]
+                    for d in range(l.ndim)]
+            return NamedSharding(mesh, P(*ents))
+
+        return jax.tree.map(leaf_sh, tree, pspecs, params_shape)
+
     if jax.tree_util.tree_leaves(opt_shape):
         # momentum/adam states mirror the param tree -> same shardings
-        opt_sh = jax.tree.map(lambda l: NamedSharding(mesh, P()), opt_shape)
-        if (jax.tree_util.tree_structure(opt_shape)
-                == jax.tree_util.tree_structure(params_shape)):
-            opt_sh, _ = state_shardings(opt_shape)
+        # (adam splits into m/v components, each mirrored independently)
+        if isinstance(opt_shape, dict) and "m" in opt_shape:
+            opt_sh = {"m": _mirror_sh(opt_shape["m"]),
+                      "v": _mirror_sh(opt_shape["v"]),
+                      "t": NamedSharding(mesh, P())}
+        else:
+            opt_sh = _mirror_sh(opt_shape)
     else:
         opt_sh = opt_shape   # empty pytree (sgd)
 
@@ -124,24 +157,36 @@ def build_train_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh,
     batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), bspec)
 
     # the ef recovery carries a params-shaped residual (arg 6, after the
-    # always-None ch_state slot of these channel-less dryrun configs)
+    # always-None ch_state slot of these channel-less dryrun configs) —
+    # packed at rest under a non-f32 state pack (§16), so its shapes come
+    # from init_ef_state, not the raw param tree
     efp = getattr(train_step, "init_ef_state", None) is not None
+    ef_shape = jax.eval_shape(train_step.init_ef_state, params_shape) \
+        if efp else None
+    ef_sh = _mirror_sh(ef_shape) if efp else None
     in_sh = (param_sh, opt_sh, batch_sh, None, None) \
-        + ((None, param_sh) if efp else ())
-    out_sh = (param_sh, opt_sh, None) + ((param_sh,) if efp else ())
+        + ((None, ef_sh) if efp else ())
+    out_sh = (param_sh, opt_sh, None) + ((ef_sh,) if efp else ())
     step = jax.jit(train_step,
                    in_shardings=in_sh,
                    out_shardings=out_sh,
                    donate_argnums=train_step.donate_argnums)
-    with jax.set_mesh(mesh):      # with_sharding_constraint needs a context
+    with mesh_context(mesh):      # with_sharding_constraint needs a context
         lowered = step.lower(params_shape, opt_shape, batch,
                              jnp.int32(0), jax.random.PRNGKey(0),
-                             *((None, params_shape) if efp else ()))
+                             *((None, ef_shape) if efp else ()))
     # static exchange cost straight from the plan (DESIGN.md §11): the RPS
     # round is exactly 2 collectives per bucket, volume known pre-compile
     # the plan carries its own wire codec (config_wire absorbed the
     # legacy exchange_dtype knob) — describe() prices the RS leg with it
+    from repro.optim import statepack as statepack_lib
     info = {"n_rps": n_rps, "microbatch": mb, "aggregator": agg,
+            "state_pack": train_step.state_pack.name,
+            # §16 who-owns-what-bytes: global at-rest byte counts of the
+            # step's carries (AOT shapes — nothing is materialised)
+            "state_bytes": statepack_lib.state_bytes_breakdown(
+                params=params_shape, opt_state=opt_shape,
+                ef_state=ef_shape),
             "exchange_plan": train_step.plan.describe()
             if train_step.plan is not None else None}
     return lowered, info
@@ -206,7 +251,7 @@ def build_decode_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh,
                    in_shardings=(param_sh, cache_sh, tok_sh, None),
                    out_shardings=(None, cache_sh),
                    donate_argnums=(1,))
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = step.lower(params_shape, cache_shape, tok, jnp.int32(S - 1))
     return lowered, {"cache_seq": S}
 
@@ -230,7 +275,7 @@ def build_prefill_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh,
         for k, s in specs.items()}
 
     step = jax.jit(model.prefill, in_shardings=(param_sh, in_sh))
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = step.lower(params_shape, specs)
     return lowered, {}
 
@@ -316,6 +361,12 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                "alias_gb": ma.alias_size_in_bytes / 1e9},
            "info": info,
            "roofline": dataclass_dict(report)}
+    if verbose and info.get("state_bytes"):
+        sb = info["state_bytes"]
+        comps = ", ".join(f"{k}={v/1e9:.2f}GB" for k, v in sb.items()
+                          if k != "total" and v)
+        print(f"  state bytes [{info.get('state_pack', 'f32')}]: "
+              f"total {sb['total']/1e9:.2f} GB ({comps})")
     if verbose and info.get("exchange_plan"):
         ep = info["exchange_plan"]
         print(f"  exchange plan: {ep['n_buckets']} buckets × s={ep['s']} -> "
@@ -378,6 +429,17 @@ def main():
                     choices=["renorm", "scale", "ef"],
                     help="loss-recovery policy (DESIGN.md §13); ef adds "
                          "a params-shaped residual carry to train_step")
+    ap.add_argument("--optimizer", default="sgd",
+                    choices=["sgd", "momentum", "adam"],
+                    help="optimizer whose state the dry-run carries "
+                         "(adam = the 2x-params m/v pair the §16 pack "
+                         "exists to shrink)")
+    ap.add_argument("--state-pack", default="f32",
+                    choices=["f32", "bf16", "i8", "int8"],
+                    help="at-rest trainer-state format (DESIGN.md §16): "
+                         "f32 = unpacked bit-identical default; bf16; "
+                         "i8 = momentum bf16 + second moments / EF "
+                         "residual int8 with per-row scales")
     ap.add_argument("--telemetry", action="store_true",
                     help="record lower/compile phase spans per (arch × "
                          "shape × mesh) into a Chrome trace (DESIGN.md "
@@ -394,7 +456,9 @@ def main():
                      n_buckets=args.buckets,
                      engine=args.engine,
                      wire=args.wire,
-                     recovery=args.recovery)
+                     recovery=args.recovery,
+                     optimizer=args.optimizer,
+                     state_pack=args.state_pack)
 
     reg = None
     if args.telemetry or args.telemetry_dir:

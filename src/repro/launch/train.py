@@ -27,6 +27,14 @@ from repro.models import build_model
 from repro.train.simulator import SimulatorConfig, run_simulation
 
 
+def _float_or_auto(v: str):
+    """--compute-ms accepts a float (the modelled backward duration) or
+    the literal 'auto' (measure the real backward, DESIGN.md §16)."""
+    if str(v).lower() == "auto":
+        return "auto"
+    return float(v)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rps-paper-mlp")
@@ -95,11 +103,24 @@ def main():
                          "with-recovery (staleness axis in the history/"
                          "telemetry). Default: sync barrier, bit-"
                          "identical to the seed")
-    ap.add_argument("--compute-ms", type=float, default=None,
+    ap.add_argument("--compute-ms", type=_float_or_auto, default=None,
                     help="async backward-pass cost model: modelled "
                          "backward duration the per-bucket readiness "
                          "times derive from; default 0.8 x the channel "
-                         "deadline when it has one, else 1.0")
+                         "deadline when it has one, else 1.0. 'auto' "
+                         "(DESIGN.md §16) times the real backward per "
+                         "bucket instead and feeds the measured "
+                         "readiness into the plan")
+    ap.add_argument("--optimizer", default="sgd",
+                    choices=["sgd", "momentum", "adam"],
+                    help="per-worker optimizer (paper: plain sgd)")
+    ap.add_argument("--state-pack", default="f32",
+                    choices=["f32", "bf16", "i8", "int8"],
+                    help="at-rest trainer-state format (DESIGN.md §16): "
+                         "f32 = unpacked (bit-identical default), bf16, "
+                         "i8 = momentum bf16 + Adam second moments / EF "
+                         "residual int8 with per-row scales and "
+                         "stochastic rounding on write")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--warmup", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
@@ -131,14 +152,15 @@ def main():
 
     scfg = SimulatorConfig(
         n_workers=args.workers, drop_rate=args.drop_rate,
-        aggregator=args.aggregator, lr=args.lr, steps=args.steps,
+        aggregator=args.aggregator, optimizer=args.optimizer,
+        lr=args.lr, steps=args.steps,
         warmup=args.warmup, batch_size=args.batch_size, seed=args.seed,
         channel=args.channel, n_servers=args.servers,
         bucket_mb=args.bucket_mb, n_buckets=args.buckets,
         engine=args.engine, exchange_dtype=args.exchange_dtype,
         wire=args.wire, recovery=args.recovery,
         schedule="async" if args.async_ else "sync",
-        compute_ms=args.compute_ms)
+        compute_ms=args.compute_ms, state_pack=args.state_pack)
     reg = None
     if args.telemetry or args.telemetry_dir:
         from repro.telemetry import Telemetry
@@ -156,6 +178,12 @@ def main():
               f"model_packets={ep['model_packets']}, "
               f"wire={ep['wire']}/{ep['recovery']} "
               f"(rs_bytes_ratio={ep['rs_bytes_ratio']:.2f})")
+    if hist.get("state_bytes") and args.state_pack != "f32":
+        sb = hist["state_bytes"]
+        comps = ", ".join(f"{k}={v}" for k, v in sb.items()
+                          if k != "total" and v)
+        print(f"state bytes [{args.state_pack}]: total {sb['total']} "
+              f"({comps})")
     print(f"n={args.workers} s={args.servers or args.workers} "
           f"p={args.drop_rate} agg={args.aggregator} "
           f"final_loss={hist['final_loss']:.4f} "

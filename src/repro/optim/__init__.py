@@ -2,3 +2,6 @@ from repro.optim.optimizers import (  # noqa: F401
     Optimizer, adam, make_optimizer, momentum, sgd)
 from repro.optim.schedules import (  # noqa: F401
     constant, linear_scaled_step_decay, warmup_decay)
+from repro.optim.statepack import (  # noqa: F401
+    PACKS, StatePack, canon_pack, make_state_pack, pack_tree,
+    state_bytes_breakdown, tree_bytes, unpack_tree)

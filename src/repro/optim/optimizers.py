@@ -4,27 +4,54 @@ The paper deliberately trains with plain SGD, no momentum, no weight decay
 ("consistent with the described algorithm and proof") — `sgd` is therefore
 the default everywhere in the reproduction path. Momentum/Adam are substrate
 for the beyond-paper experiments and the FSDP big-arch mode.
+
+State lives *packed* (DESIGN.md §16): each optimizer takes a
+`repro.optim.statepack.StatePack` and its `update` runs
+decode → update → encode inside the traced step, so what the step function
+carries (and donates) is the at-rest packed representation. The default
+`f32` pack is a literal identity — bit-identical to the pre-§16 code.
+`update` accepts an optional `key=` for the stochastic rounding the int8
+pack uses on write; with the f32/bf16 packs the key is dead code and XLA
+eliminates it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.optim import statepack as statepack_lib
+from repro.telemetry import taps as taps_lib
+
+
+def _emit_quant_err(tap: str, err_sq: list) -> None:
+    """Aggregate per-leaf squared encode errors into the same
+    ``quant_err_<tap>`` counter ``statepack.pack_tree`` emits."""
+    if err_sq and taps_lib.active() is not None:
+        taps_lib.emit(f"quant_err_{tap}", jnp.sqrt(sum(err_sq)))
+
+
+def _leaf_err_sq(x: jax.Array, rep, fmt: str) -> jax.Array:
+    back = statepack_lib.unpack_leaf(rep, fmt)
+    return jnp.sum(jnp.square(x - back.astype(jnp.float32)))
+
 
 class Optimizer(NamedTuple):
     init: Callable[[Any], Any]
-    update: Callable[..., Tuple[Any, Any]]   # (grads, state, params, lr)
+    update: Callable[..., Tuple[Any, Any]]   # (grads, state, params, lr,
+                                             #  key=None)
                                              #   -> (new_params, new_state)
 
 
-def sgd() -> Optimizer:
+def sgd(pack: Optional[statepack_lib.StatePack] = None) -> Optimizer:
+    del pack  # stateless — nothing to store, nothing to pack
+
     def init(params):
         return ()
 
-    def update(grads, state, params, lr):
+    def update(grads, state, params, lr, key=None):
         # dtype-preserving: an f32 round-trip materialises params-sized f32
         # buffers at while-loop/donation fusion boundaries (measured 3x11 GB
         # on mixtral). bf16 params update in bf16 (plain-SGD model averaging
@@ -37,46 +64,166 @@ def sgd() -> Optimizer:
     return Optimizer(init, update)
 
 
-def momentum(beta: float = 0.9) -> Optimizer:
-    def init(params):
-        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+def momentum(beta: float = 0.9,
+             pack: Optional[statepack_lib.StatePack] = None) -> Optimizer:
+    pk = pack or statepack_lib.make_state_pack()
 
-    def update(grads, state, params, lr):
-        state = jax.tree.map(
-            lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
-        new = jax.tree.map(
-            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
-            params, state)
-        return new, state
+    def init(params):
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return statepack_lib.pack_tree(zeros, pk.m_format)
+
+    def update(grads, state, params, lr, key=None):
+        if pk.is_identity:         # the seed graph, bit-identical
+            m = jax.tree.map(
+                lambda m_, g: beta * m_ + g.astype(jnp.float32),
+                state, grads)
+            new = jax.tree.map(
+                lambda p, m_: (p.astype(jnp.float32)
+                               - lr * m_).astype(p.dtype), params, m)
+            return new, m
+        # packed: leaf-sequenced decode -> update -> encode (§16) — the
+        # cond chain keeps one leaf's f32 working copies live at a time,
+        # instead of a whole params-shaped f32 m materialising as temps
+        mk = None if key is None else jax.random.fold_in(key, 0x6d)
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = jax.tree.leaves(params)
+        m_reps = statepack_lib.leaf_reps(state, pk.m_format)
+        new_p, new_m, err_sq, pred = [], [], [], None
+        collect = taps_lib.active() is not None and pk.m_format != "f32"
+
+        def body(g, p, rep, ki):
+            m = statepack_lib.unpack_leaf(rep, pk.m_format)
+            m = beta * m + g.astype(jnp.float32)
+            np_ = (p.astype(jnp.float32) - lr * m).astype(p.dtype)
+            nrep = statepack_lib.pack_leaf(m, pk.m_format, key=ki)
+            err = _leaf_err_sq(m, nrep, pk.m_format) if collect \
+                else jnp.zeros((), jnp.float32)
+            return np_, nrep, err
+
+        for i, (g, p, rep) in enumerate(zip(g_leaves, p_leaves, m_reps)):
+            ki = None if mk is None else jax.random.fold_in(mk, i)
+            np_, nrep, err = statepack_lib.sequenced_call(
+                pred, body, g, p, rep, ki)
+            if collect:
+                err_sq.append(err)
+            new_p.append(np_)
+            new_m.append(nrep)
+            pred = statepack_lib.leaf_pred(nrep[0])
+        _emit_quant_err("opt_m", err_sq)
+        return (jax.tree.unflatten(treedef, new_p),
+                statepack_lib.tree_from_reps(new_m, pk.m_format, treedef))
 
     return Optimizer(init, update)
 
 
-def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         pack: Optional[statepack_lib.StatePack] = None) -> Optimizer:
+    pk = pack or statepack_lib.make_state_pack()
+
     def init(params):
         z = lambda p: jnp.zeros(p.shape, jnp.float32)
-        return {"m": jax.tree.map(z, params),
-                "v": jax.tree.map(z, params),
+        # two distinct zero trees: the f32 pack is an identity, and m/v
+        # sharing buffers would double-donate them in the jitted step
+        return {"m": statepack_lib.pack_tree(jax.tree.map(z, params),
+                                             pk.m_format),
+                "v": statepack_lib.pack_tree(jax.tree.map(z, params),
+                                             pk.v_format),
                 "t": jnp.zeros((), jnp.int32)}
 
-    def update(grads, state, params, lr):
+    def update(grads, state, params, lr, key=None):
         t = state["t"] + 1
-        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
-                         state["m"], grads)
-        v = jax.tree.map(
-            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-            state["v"], grads)
         bc1 = 1 - b1 ** t.astype(jnp.float32)
         bc2 = 1 - b2 ** t.astype(jnp.float32)
-        new = jax.tree.map(
-            lambda p, m_, v_: (p.astype(jnp.float32)
-                               - lr * (m_ / bc1)
-                               / (jnp.sqrt(v_ / bc2) + eps)).astype(p.dtype),
-            params, m, v)
-        return new, {"m": m, "v": v, "t": t}
+        if pk.is_identity:         # the seed graph, bit-identical
+            m = jax.tree.map(
+                lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                state["m"], grads)
+            v = jax.tree.map(
+                lambda v_, g: b2 * v_
+                + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                state["v"], grads)
+            new = jax.tree.map(
+                lambda p, m_, v_: (p.astype(jnp.float32)
+                                   - lr * (m_ / bc1)
+                                   / (jnp.sqrt(v_ / bc2)
+                                      + eps)).astype(p.dtype),
+                params, m, v)
+            return new, {"m": m, "v": v, "t": t}
+        # packed: leaf-sequenced decode -> update -> encode (§16). The
+        # cond chain bounds the transient f32 working set at one leaf's
+        # m/v instead of two full params-shaped trees of temps — that
+        # difference is the peak-memory claim BENCH_state.json pins.
+        mk = None if key is None else jax.random.fold_in(key, 0x6d)
+        vk = None if key is None else jax.random.fold_in(key, 0x76)
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = jax.tree.leaves(params)
+        m_reps = statepack_lib.leaf_reps(state["m"], pk.m_format)
+        v_reps = statepack_lib.leaf_reps(state["v"], pk.v_format)
+        collect = taps_lib.active() is not None
+        collect_m = collect and pk.m_format != "f32"
+        collect_v = collect and pk.v_format != "f32"
+        new_p, new_m, new_v, pred = [], [], [], None
+        m_err, v_err = [], []
+
+        def body(g, p, mrep, vrep, ki_m, ki_v):
+            gf = g.astype(jnp.float32)
+            m = b1 * statepack_lib.unpack_leaf(mrep, pk.m_format) \
+                + (1 - b1) * gf
+            v = b2 * statepack_lib.unpack_leaf(vrep, pk.v_format) \
+                + (1 - b2) * jnp.square(gf)
+            nm = statepack_lib.pack_leaf(m, pk.m_format, key=ki_m)
+            nv = statepack_lib.pack_leaf(v, pk.v_format, key=ki_v)
+            v_use = v
+            if pk.v_format == "i8":
+                # resolution floor: a coordinate whose v sits ≥127x below
+                # its row max decodes to 0 on the int8 grid, and eps alone
+                # then lets the next update explode by the v-underestimate
+                # (the classic 8-bit-Adam failure). Denominators are only
+                # trusted down to one grid step — flooring there attenuates
+                # (never amplifies) sub-resolution coordinates. The stored
+                # EMA stays unfloored, so SR-unbiasedness is untouched.
+                v_use = jnp.maximum(v, nv[1])
+            np_ = (p.astype(jnp.float32) - lr * (m / bc1)
+                   / (jnp.sqrt(v_use / bc2) + eps)).astype(p.dtype)
+            me = _leaf_err_sq(m, nm, pk.m_format) if collect_m \
+                else jnp.zeros((), jnp.float32)
+            ve = _leaf_err_sq(v, nv, pk.v_format) if collect_v \
+                else jnp.zeros((), jnp.float32)
+            return np_, nm, nv, me, ve
+
+        for i, (g, p, mrep, vrep) in enumerate(
+                zip(g_leaves, p_leaves, m_reps, v_reps)):
+            ki_m = None if mk is None else jax.random.fold_in(mk, i)
+            ki_v = None if vk is None else jax.random.fold_in(vk, i)
+            np_, nm, nv, me, ve = statepack_lib.sequenced_call(
+                pred, body, g, p, mrep, vrep, ki_m, ki_v)
+            if collect_m:
+                m_err.append(me)
+            if collect_v:
+                v_err.append(ve)
+            new_p.append(np_)
+            new_m.append(nm)
+            new_v.append(nv)
+            pred = statepack_lib.leaf_pred(nv[0])
+        _emit_quant_err("opt_m", m_err)
+        _emit_quant_err("opt_v", v_err)
+        return (jax.tree.unflatten(treedef, new_p),
+                {"m": statepack_lib.tree_from_reps(new_m, pk.m_format,
+                                                   treedef),
+                 "v": statepack_lib.tree_from_reps(new_v, pk.v_format,
+                                                   treedef),
+                 "t": t})
 
     return Optimizer(init, update)
 
 
-def make_optimizer(name: str, **kw) -> Optimizer:
-    return {"sgd": sgd, "momentum": momentum, "adam": adam}[name](**kw)
+_OPTS = {"sgd": sgd, "momentum": momentum, "adam": adam}
+
+
+def make_optimizer(name: str,
+                   state_pack: Optional[str] = None, **kw) -> Optimizer:
+    """Build an optimizer; ``state_pack`` names the at-rest format
+    ("f32" default / "bf16" / "i8") for its state buffers."""
+    pack = statepack_lib.make_state_pack(state_pack)
+    return _OPTS[name](pack=pack, **kw)

@@ -1,0 +1,280 @@
+"""Packed trainer state: quantized optimizer moments + EF residuals (§16).
+
+PR 5 cut RS wire bytes 4x; after donation (PR 4) the remaining peak on a
+step is the trainer state itself — for Adam the m/v pair alone is 2x the
+param bytes in f32. `StatePack` shrinks everything that isn't the wire by
+storing those buffers packed *at rest* and decode->update->encode'ing
+inside the traced step, so the packed buffers are what gets donated:
+
+  pack    momentum        second moments (v)       EF residual
+  ------  --------------  -----------------------  -----------------------
+  f32     f32 (identity)  f32 (identity)           f32 (identity)
+  bf16    bf16            bf16                     bf16
+  i8      bf16            int8 + per-row f32 Δ     int8 + per-row f32 Δ
+
+Params are never packed — model averaging owns their precision story.
+The int8 grid is the same per-block scale / stochastic-rounding core the
+wire codec uses (`repro.core.quant`, one quantization library, two
+consumers). SR on every write keeps the packed EMA unbiased — the same
+property the wire convergence study relies on; with round-to-nearest the
+small (1-b2)*g^2 increments would vanish below the grid step and the EMA
+would stall.
+
+Representation: an int8-packed leaf tree becomes two parallel trees
+`{"q": tree, "scale": tree}` — the q-tree has the *same structure* as the
+unpacked tree, so sharding specs and tree_maps keyed on params structure
+transfer leaf-for-leaf; scales carry keepdims-reduced shapes (one scale
+per trailing-dim row, `quant.row_lead`). The `f32` pack is a literal
+identity (the same tree object passes through) — that is the bit-identity
+contract the parity matrix in tests/test_statepack.py pins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as quant_lib
+from repro.telemetry import taps as taps_lib
+
+I8_LEVELS = 127          # symmetric int8 grid {-127..127}, same as the wire
+
+PACKS = ("f32", "bf16", "i8")
+
+
+@dataclasses.dataclass(frozen=True)
+class StatePack:
+    """Per-component storage formats for trainer state at rest.
+
+    ``m_format`` covers first moments (momentum / Adam m), ``v_format``
+    Adam second moments, ``ef_format`` the error-feedback residual.
+    Formats are "f32" (identity), "bf16", or "i8" (int8 payload +
+    per-row f32 scales, stochastic rounding on write).
+    """
+    name: str
+    m_format: str = "f32"
+    v_format: str = "f32"
+    ef_format: str = "f32"
+
+    @property
+    def is_identity(self) -> bool:
+        return (self.m_format == self.v_format == self.ef_format == "f32")
+
+    def describe(self) -> str:
+        return (f"pack={self.name} m={self.m_format} v={self.v_format} "
+                f"ef={self.ef_format}")
+
+
+_PACKS = {
+    "f32": StatePack("f32"),
+    "bf16": StatePack("bf16", "bf16", "bf16", "bf16"),
+    "i8": StatePack("i8", m_format="bf16", v_format="i8", ef_format="i8"),
+}
+_ALIASES = {"int8": "i8", "float32": "f32", "none": "f32",
+            "bfloat16": "bf16"}
+
+
+def canon_pack(name: Optional[str]) -> str:
+    n = str(name or "f32").lower()
+    n = _ALIASES.get(n, n)
+    if n not in _PACKS:
+        raise ValueError(f"unknown state pack {name!r} (have {PACKS})")
+    return n
+
+
+def make_state_pack(name: Optional[str] = None) -> StatePack:
+    return _PACKS[canon_pack(name)]
+
+
+def is_packed_i8(tree: Any) -> bool:
+    """True iff ``tree`` is the {"q": ..., "scale": ...} i8 wrapper."""
+    return isinstance(tree, dict) and set(tree) == {"q", "scale"}
+
+
+def leaf_pred(x: jax.Array) -> jax.Array:
+    """A data-dependent predicate on ``x`` that is True for every input
+    value: isfinite of a float built from the *bit pattern* (floats) or
+    the value (ints) of one element — an integer is always finite, so
+    the branch outcome never varies, but XLA cannot prove that and must
+    order the consumer after ``x``. The §16 leaf-sequencing hook."""
+    tok = x.reshape(-1)[0]
+    if jnp.issubdtype(tok.dtype, jnp.floating):
+        bits = jnp.dtype(f"uint{tok.dtype.itemsize * 8}")
+        tok = jax.lax.bitcast_convert_type(tok, bits)
+    return jnp.isfinite(tok.astype(jnp.float32))
+
+
+def sequenced_call(pred, fn, *operands):
+    """Run ``fn(*operands)`` under ``lax.cond(pred, fn, zeros)`` with an
+    always-true ``pred`` derived from the previous leaf's outputs
+    (:func:`leaf_pred`), so per-leaf encode/update work executes
+    strictly one leaf at a time and only one leaf's f32 working set is
+    ever live — the packed state's whole peak-memory win (§16). A plain
+    data dependency is not enough: XLA strips ``optimization_barrier``
+    before scheduling and its CPU scheduler happily interleaves
+    independent leaf updates, keeping every leaf's decoded f32 buffers
+    alive at once (measured: that interleaving alone cost more than the
+    packing saved). A conditional is a hard wall — no hoisting across
+    the branch boundary. ``pred`` None (the first leaf) calls ``fn``
+    directly. The taken branch traces exactly the unsequenced ops, so
+    results are bitwise identical."""
+    if pred is None:
+        return fn(*operands)
+    zeros = lambda *a: jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), jax.eval_shape(fn, *a))
+    return jax.lax.cond(pred, fn, zeros, *operands)
+
+
+def pack_tree(tree: Any, fmt: str, key: Optional[jax.Array] = None,
+              tap: Optional[str] = None, sequenced: bool = False) -> Any:
+    """Encode a pytree of f32 buffers into its at-rest format.
+
+    "f32" returns ``tree`` unchanged (bit-identity contract). "i8" uses
+    stochastic rounding when ``key`` is given (per-leaf keys derived by
+    fold_in so no two leaves share a rounding stream), round-to-nearest
+    otherwise. With ``tap`` set and a taps collector installed, the write's
+    quantization-error norm ||tree − unpack(pack(tree))|| flows out of the
+    jitted step as the ``quant_err_<tap>`` counter (DESIGN.md §14) — no
+    collector, no extra ops. ``sequenced`` chains the per-leaf encodes
+    behind :func:`sequenced_call` conds — bitwise-identical output, but
+    only one leaf's encode temps live at a time (the single-device
+    simulator's EF repack uses this; the collective trainer keeps the
+    default so accelerators stay free to overlap).
+    """
+    if fmt == "f32":
+        return tree
+    if fmt not in ("bf16", "i8"):
+        raise ValueError(f"unknown pack format {fmt!r}")
+    leaves, treedef = jax.tree.flatten(tree)
+    reps, pred = [], None
+    for i, x in enumerate(leaves):
+        k = None if key is None else jax.random.fold_in(key, i)
+        fn = lambda x_, k_: pack_leaf(x_, fmt, key=k_)
+        if sequenced:
+            rep = sequenced_call(pred, fn, x, k)
+            pred = leaf_pred(rep[0])
+        else:
+            rep = fn(x, k)
+        reps.append(rep)
+    packed = tree_from_reps(reps, fmt, treedef)
+    if tap is not None and taps_lib.active() is not None:
+        taps_lib.emit(f"quant_err_{tap}",
+                      quant_error_norm(tree, packed, fmt))
+    return packed
+
+
+def pack_leaf(x: jax.Array, fmt: str,
+              key: Optional[jax.Array] = None) -> tuple:
+    """One leaf's at-rest representation as a flat tuple of arrays —
+    ``(x,)`` for f32/bf16, ``(q, scale)`` for i8. The building block of
+    the leaf-sequenced optimizer path (§16): same grid, same key
+    convention as :func:`pack_tree` (callers fold the leaf index)."""
+    if fmt == "f32":
+        return (x,)
+    if fmt == "bf16":
+        return (x.astype(jnp.bfloat16),)
+    if fmt == "i8":
+        return quant_lib.quantize(x, I8_LEVELS, jnp.int8, key=key,
+                                  lead=quant_lib.row_lead(x.ndim))
+    raise ValueError(f"unknown pack format {fmt!r}")
+
+
+def unpack_leaf(rep: tuple, fmt: str) -> jax.Array:
+    """Inverse of :func:`pack_leaf` back to f32 working precision."""
+    if fmt == "f32":
+        return rep[0]
+    if fmt == "bf16":
+        return rep[0].astype(jnp.float32)
+    if fmt == "i8":
+        return quant_lib.dequantize(*rep)
+    raise ValueError(f"unknown pack format {fmt!r}")
+
+
+def leaf_reps(packed: Any, fmt: str) -> list:
+    """A packed tree as a list of per-leaf :func:`pack_leaf` tuples (the
+    q/scale trees share the unpacked structure, so they zip)."""
+    if fmt == "i8":
+        return list(zip(jax.tree.leaves(packed["q"]),
+                        jax.tree.leaves(packed["scale"])))
+    return [(x,) for x in jax.tree.leaves(packed)]
+
+
+def tree_from_reps(reps: list, fmt: str, treedef) -> Any:
+    """Rebuild the at-rest tree :func:`pack_tree` would produce from
+    per-leaf representations."""
+    if fmt == "i8":
+        return {"q": jax.tree.unflatten(treedef, [r[0] for r in reps]),
+                "scale": jax.tree.unflatten(treedef,
+                                            [r[1] for r in reps])}
+    return jax.tree.unflatten(treedef, [r[0] for r in reps])
+
+
+def unpack_tree(packed: Any, fmt: str) -> Any:
+    """Decode an at-rest tree back to f32 working precision.
+
+    "f32" is an identity (the same tree object passes through).
+    """
+    if fmt == "f32":
+        return packed
+    if fmt == "bf16":
+        return jax.tree.map(lambda x: x.astype(jnp.float32), packed)
+    if fmt == "i8":
+        return jax.tree.map(quant_lib.dequantize, packed["q"],
+                            packed["scale"])
+    raise ValueError(f"unknown pack format {fmt!r}")
+
+
+def quant_error_norm(tree: Any, packed: Any, fmt: str) -> jax.Array:
+    """||tree - unpack(packed)|| over all leaves — the per-write
+    quantization error the telemetry counters report."""
+    back = unpack_tree(packed, fmt)
+    sq = jax.tree.map(
+        lambda a, b: jnp.sum(jnp.square(a.astype(jnp.float32)
+                                        - b.astype(jnp.float32))),
+        tree, back)
+    return jnp.sqrt(sum(jax.tree.leaves(sq)))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total at-rest bytes of a pytree of arrays (or ShapeDtypeStructs)."""
+    return sum(int(x.size) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def state_bytes_breakdown(params: Any = None, opt_state: Any = None,
+                          ef_state: Any = None) -> dict:
+    """Per-component at-rest byte counts for the dryrun report / history.
+
+    Works on concrete arrays and on ShapeDtypeStruct trees (AOT shapes).
+    Packed i8 components split payload vs scales so the report shows who
+    owns what bytes (DESIGN.md §16 table).
+    """
+    out: dict = {}
+    if params is not None:
+        out["params"] = tree_bytes(params)
+    if opt_state is not None:
+        if isinstance(opt_state, dict) and "m" in opt_state:
+            # adam bundle {"m", "v", "t"}
+            for comp in ("m", "v"):
+                sub = opt_state[comp]
+                if is_packed_i8(sub):
+                    out[f"opt_{comp}"] = tree_bytes(sub["q"])
+                    out[f"opt_{comp}_scales"] = tree_bytes(sub["scale"])
+                else:
+                    out[f"opt_{comp}"] = tree_bytes(sub)
+            out["opt_t"] = tree_bytes(opt_state["t"])
+        elif is_packed_i8(opt_state):
+            out["opt_m"] = tree_bytes(opt_state["q"])
+            out["opt_m_scales"] = tree_bytes(opt_state["scale"])
+        else:
+            out["opt_m"] = tree_bytes(opt_state)
+    if ef_state is not None:
+        if is_packed_i8(ef_state):
+            out["ef"] = tree_bytes(ef_state["q"])
+            out["ef_scales"] = tree_bytes(ef_state["scale"])
+        else:
+            out["ef"] = tree_bytes(ef_state)
+    out["total"] = sum(out.values())
+    return out

@@ -137,6 +137,8 @@ class RooflineReport:
 
 def measure(compiled) -> Dict[str, float]:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # pre-0.5 jax: one dict per program
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     coll = collective_bytes_from_hlo(hlo)
     ma = compiled.memory_analysis()

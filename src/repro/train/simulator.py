@@ -34,8 +34,10 @@ from repro.core import plan as plan_lib
 from repro.core import rps as rps_lib
 from repro.core import wire as wire_lib
 from repro.optim import make_optimizer
+from repro.optim import statepack as statepack_lib
 from repro.telemetry import counters as counters_lib
 from repro.telemetry import taps as taps_lib
+from repro.telemetry import timing as timing_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,11 +101,21 @@ class SimulatorConfig:
     # dropped-with-recovery, counted on the history's staleness axis.
     # Channels without a latency model fall back to sync-identical masks
     # (zero lateness).
-    compute_ms: Optional[float] = None
+    compute_ms: Any = None
     # async backward-pass cost model: the modelled backward duration the
     # per-bucket readiness times are derived from. None (with
     # schedule="async") defaults to 0.8 × the channel's deadline_ms when
-    # it has one, else 1.0.
+    # it has one, else 1.0. "auto" (§16) replaces the bytes-proportional
+    # model entirely: the real backward is timed per bucket
+    # (:func:`measure_bucket_ready_ms`) and the measured readiness times
+    # are substituted into the plan before the step compiles.
+    state_pack: str = "f32"
+    # at-rest trainer-state format (DESIGN.md §16): "f32" = unpacked, the
+    # bit-identical default; "bf16" = all optimizer/EF buffers in bf16;
+    # "i8" = momentum bf16, Adam second moments + EF residual int8 with
+    # per-row f32 scales and stochastic rounding on write (the wire
+    # codec's grid, repro.core.quant). Packed buffers are what the step
+    # carries and donates; params are never packed.
     donate: bool = True
     # donate params/opt_state/channel state into the jitted step
     # (donate_argnums) so the sweep never double-buffers the model;
@@ -146,18 +158,76 @@ def resolve_wire(scfg) -> str:
     return wire_lib.config_wire(scfg.wire, scfg.exchange_dtype)
 
 
+def wants_measured_ready(scfg) -> bool:
+    """True when ``compute_ms="auto"``: the plan's readiness times come
+    from timing the real backward (:func:`measure_bucket_ready_ms`), not
+    the bytes-proportional cost model."""
+    return (getattr(scfg, "schedule", "sync") == "async"
+            and isinstance(scfg.compute_ms, str)
+            and scfg.compute_ms.lower() == "auto")
+
+
 def resolve_compute_ms(scfg, channel=None) -> Optional[float]:
     """The async cost model's backward-pass duration (duck-typed over
     SimulatorConfig / TrainConfig): the explicit ``compute_ms`` knob, or
     — under ``schedule="async"`` with it unset — 0.8 × the channel's
     iteration deadline (most of the budget spent computing, the regime
-    async exists for), else 1.0. ``None`` for sync configs."""
+    async exists for), else 1.0. ``None`` for sync configs. For
+    ``compute_ms="auto"`` this returns the deadline-derived provisional
+    value — the caller measures the real backward and substitutes via
+    :meth:`repro.core.plan.ExchangePlan.with_ready_ms` before any step
+    compiles against the plan."""
     if getattr(scfg, "schedule", "sync") != "async":
         return None
-    if scfg.compute_ms is not None:
+    if scfg.compute_ms is not None and not wants_measured_ready(scfg):
         return float(scfg.compute_ms)
     deadline = getattr(channel, "deadline_ms", None)
     return 0.8 * float(deadline) if deadline is not None else 1.0
+
+
+def measure_bucket_ready_ms(loss_fn: Callable, params: Any, batch: Any,
+                            plan, reps: int = 2, iters: int = 1) -> list:
+    """Measured per-bucket gradient readiness times (``--compute-ms=auto``).
+
+    Bucket ``b``'s gradients are available once the backward pass has
+    covered buckets ``b..B−1`` (the pytree is layer-ordered, backward runs
+    last → first), so its readiness ≈ the wall time of the *suffix
+    gradient*: grad of the vmapped loss w.r.t. the leaves of buckets
+    ``b..B−1`` only, earlier buckets held constant. Each suffix is timed
+    with the shared bench timer (compile excluded, best-of); timing noise
+    is smoothed into a valid readiness profile by enforcing monotone
+    non-increase toward the last bucket — exactly the invariant
+    :func:`repro.core.plan.bucket_ready_ms` has by construction.
+
+    ``params`` is the stacked (n, …) worker tree and ``batch`` one stacked
+    batch — the measured graph is the step's own backward, not a proxy.
+    Returns plan-order readiness in ms, feed to ``plan.with_ready_ms``.
+    """
+    leaves, treedef = jax.tree.flatten(params)
+    times = []
+    for b in range(plan.n_buckets):
+        sfx = sorted(i for bk in plan.buckets[b:] for i in bk.leaf_ids)
+        fixed = [i for i in range(len(leaves)) if i not in set(sfx)]
+
+        def fn(sub, const, bt, sfx=sfx, fixed=fixed):
+            lv: List[Any] = [None] * len(leaves)
+            for i, v in zip(sfx, sub):
+                lv[i] = v
+            for i, v in zip(fixed, const):
+                lv[i] = v
+            ps = jax.tree.unflatten(treedef, lv)
+            return jnp.sum(jax.vmap(loss_fn)(ps, bt))
+
+        g = jax.jit(jax.grad(fn))
+        sub = [leaves[i] for i in sfx]
+        const = [leaves[i] for i in fixed]
+        sec = timing_lib.time_fn(g, sub, const, batch, reps=reps,
+                                 iters=iters, label=f"ready_b{b}")
+        times.append(sec * 1e3)
+    # suffix b ⊇ suffix b+1 ⇒ true times are non-increasing; project the
+    # noisy measurements onto that cone (max over the tail from the right)
+    ready = np.maximum.accumulate(np.asarray(times)[::-1])[::-1]
+    return [float(r) for r in ready]
 
 
 def make_exchange_plan(params: Any, scfg: SimulatorConfig, channel=None):
@@ -214,6 +284,10 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
     use_ef = rps_agg and scfg.recovery == "ef"
     async_mode = rps_agg and scfg.schedule == "async"
     telemetry = scfg.telemetry if telemetry is None else telemetry
+    # §16: the EF residual is carried at rest in the state pack's EF
+    # format; decode/encode happen inside the traced step, only on rounds
+    # that exchange (a skipped round must not re-quantize the residual)
+    pack = statepack_lib.make_state_pack(getattr(scfg, "state_pack", None))
     # the scale divisor uses the channel's stationary marginal, not the
     # raw drop_rate knob (they differ for GE/hetero/trace channels)
     recovery = wire_lib.make_recovery(
@@ -256,22 +330,43 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
         if tap is not None:
             taps_lib.emit("grad_norm", counters_lib.global_norm(grads))
         late_x = late if exchange else None
+        # per-step derived keys: stochastic rounding of packed state
+        # (dead code — eliminated — under the f32 identity pack)
+        opt_key = jax.random.fold_in(key, 0x70616b)     # "pak"
+        ef_key = jax.random.fold_in(key, 0x6566)        # "ef"
+        # decode the at-rest EF residual only on exchanging rounds —
+        # `exchange` is static, so skipped rounds trace no quant ops and
+        # the residual passes through bitwise untouched
+        ef_in = statepack_lib.unpack_tree(ef_state, pack.ef_format) \
+            if (use_ef and exchange) else None
         if is_grad_mode:
             if exchange:
                 out = _exchange(grads, key, scfg, is_grad=True,
                                 masks=masks, plan=plan, recovery=recovery,
-                                ef_state=ef_state if use_ef else None,
-                                late=late_x)
-                grads, ef_state = out if use_ef else (out, ef_state)
-            params, opt_state = opt.update(grads, opt_state, params, lr)
+                                ef_state=ef_in, late=late_x)
+                if use_ef:
+                    grads, ef_new = out
+                    ef_state = statepack_lib.pack_tree(
+                        ef_new, pack.ef_format, key=ef_key, tap="ef",
+                        sequenced=True)
+                else:
+                    grads = out
+            params, opt_state = opt.update(grads, opt_state, params, lr,
+                                           key=opt_key)
         else:
-            params, opt_state = opt.update(grads, opt_state, params, lr)
+            params, opt_state = opt.update(grads, opt_state, params, lr,
+                                           key=opt_key)
             if exchange:
                 out = _exchange(params, key, scfg, is_grad=False,
                                 masks=masks, plan=plan, recovery=recovery,
-                                ef_state=ef_state if use_ef else None,
-                                late=late_x)
-                params, ef_state = out if use_ef else (out, ef_state)
+                                ef_state=ef_in, late=late_x)
+                if use_ef:
+                    params, ef_new = out
+                    ef_state = statepack_lib.pack_tree(
+                        ef_new, pack.ef_format, key=ef_key, tap="ef",
+                        sequenced=True)
+                else:
+                    params = out
         mean_p = jax.tree.map(lambda x: jnp.mean(x, 0, keepdims=True), params)
         consensus = jax.tree.reduce(
             lambda a, x: a + jnp.sum(jnp.square(x.astype(jnp.float32))),
@@ -333,7 +428,8 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
     p1 = init_fn(k_init)
     params = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), p1)
-    opt = make_optimizer(scfg.optimizer)
+    opt = make_optimizer(scfg.optimizer,
+                         state_pack=getattr(scfg, "state_pack", None))
     opt_state = opt.init(params)
     # the drop process: channels are sampled inside the jitted step with the
     # shared per-step key; their state (e.g. Gilbert–Elliott link states,
@@ -344,8 +440,12 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
     use_ef = rps_agg and scfg.recovery == "ef"
     ch_state = channel.init_state(jax.random.fold_in(key, 0x636831)) \
         if rps_agg else None
-    # EF residual: per-worker, params-shaped, zero at start (DESIGN §13)
-    ef_state = wire_lib.init_ef_state(params) if use_ef else None
+    # EF residual: per-worker, params-shaped, zero at start (DESIGN §13),
+    # carried at rest in the state pack's EF format (§16 — zeros quantize
+    # exactly, so the packed start is still the exact zero residual)
+    pack = statepack_lib.make_state_pack(scfg.state_pack)
+    ef_state = statepack_lib.pack_tree(
+        wire_lib.init_ef_state(params), pack.ef_format) if use_ef else None
     if state is not None:       # resume from a checkpointed bundle
         params = state["params"]
         opt_state = state["opt_state"]
@@ -367,6 +467,12 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
                  aggregator=scfg.aggregator)
     else:
         plan = make_exchange_plan(p1, scfg, channel)
+    if plan is not None and wants_measured_ready(scfg):
+        # --compute-ms=auto: time the real backward per bucket and swap
+        # the measured readiness into the plan before any step compiles
+        ready = measure_bucket_ready_ms(loss_fn, params,
+                                        batch_fn(start_step), plan)
+        plan = plan.with_ready_ms(ready)
     step_fn = make_sim_step(loss_fn, scfg, channel, plan, opt,
                             telemetry=use_tel)
 
@@ -434,4 +540,8 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
     history["ef_state"] = ef_state
     history["state"] = {"params": params, "opt_state": opt_state,
                         "ch_state": ch_state, "ef_state": ef_state}
+    # §16: per-component at-rest byte counts of what the step carries —
+    # the same breakdown the dryrun report asserts on
+    history["state_bytes"] = statepack_lib.state_bytes_breakdown(
+        params=params, opt_state=opt_state, ef_state=ef_state)
     return history

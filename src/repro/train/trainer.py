@@ -44,6 +44,7 @@ from repro.core import wire as wire_lib
 from repro.launch import sharding as shlib
 from repro.models.registry import Model
 from repro.optim import make_optimizer
+from repro.optim import statepack as statepack_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,13 +117,30 @@ class TrainConfig:
                                            # packets are written off as
                                            # dropped-with-recovery
                                            # (counted in the telemetry).
-    compute_ms: Optional[float] = None     # async backward cost model:
+    compute_ms: Any = None                 # async backward cost model:
                                            # modelled backward duration
                                            # the per-bucket readiness
                                            # times derive from; None
                                            # (with schedule="async") =
                                            # 0.8 × the channel deadline
                                            # when it has one, else 1.0.
+                                           # "auto" starts from that
+                                           # provisional model — callers
+                                           # time the real backward and
+                                           # substitute via
+                                           # plan.with_ready_ms (§16).
+    state_pack: str = "f32"                # at-rest trainer-state format
+                                           # (DESIGN.md §16): "f32" =
+                                           # unpacked (bit-identical
+                                           # default); "bf16" = all
+                                           # optimizer/EF buffers bf16;
+                                           # "i8" = momentum bf16, Adam
+                                           # second moments + EF residual
+                                           # int8 with per-row f32 scales
+                                           # and stochastic rounding on
+                                           # write. Packed buffers are the
+                                           # step's carries (donated);
+                                           # params are never packed.
     telemetry: bool = False                # exchange telemetry (DESIGN.md
                                            # §14): metrics gain a
                                            # "telemetry" sub-dict (per-link
@@ -195,7 +213,10 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
     ef_state)`` (``ch_state`` stays ``None`` for channel-less configs)
     returning ``(…, ef_state)`` last; the zero initial residual comes
     from ``train_step.init_ef_state(params)``. Both carries are listed in
-    ``train_step.donate_argnums``.
+    ``train_step.donate_argnums``. Under a non-f32 ``tcfg.state_pack``
+    (§16) the residual is carried *packed* (bf16, or int8 q + per-row
+    scale trees) and decoded/re-encoded only inside exchanging rounds;
+    the resolved pack is exposed as ``train_step.state_pack``.
 
     The exchange layout is precomputed here (``train_step.plan``, an
     :class:`repro.core.plan.ExchangePlan`): param specs and local shapes
@@ -206,7 +227,8 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
     for a in rps_axes:
         n_rps *= mesh.shape[a]
     n_servers = n_rps if tcfg.n_servers is None else int(tcfg.n_servers)
-    opt = make_optimizer(tcfg.optimizer)
+    pack = statepack_lib.make_state_pack(getattr(tcfg, "state_pack", None))
+    opt = make_optimizer(tcfg.optimizer, state_pack=pack.name)
     channel = channels_lib.make_channel(tcfg.channel, n_rps, tcfg.drop_rate,
                                         s=tcfg.n_servers)
     # only rps aggregators consume masks (same gate as the simulator's
@@ -442,15 +464,30 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
 
         lr = jnp.float32(tcfg.lr)
         ef = ef_state if use_ef else None
+        # per-step derived keys: stochastic rounding of packed state (§16;
+        # dead code — eliminated — under the f32 identity pack)
+        opt_key = jax.random.fold_in(key, 0x70616b)     # "pak"
+        ef_key = jax.random.fold_in(key, 0x6566)        # "ef"
+
+        def exchange_ef(tree, mode, e_packed):
+            # decode the at-rest residual around the exchange only — a
+            # skipped round (the lax.cond false branch below) must pass
+            # the packed residual through bitwise untouched, never
+            # re-quantize it
+            e = statepack_lib.unpack_tree(e_packed, pack.ef_format)
+            out, e_new = _exchange(tree, key, mode, masks, e)
+            return out, statepack_lib.pack_tree(e_new, pack.ef_format,
+                                                key=ef_key, tap="ef")
+
         if _is_model_mode(tcfg.aggregator) or tcfg.aggregator == "none":
             # local step, then model exchange (Algorithm 1)
-            new_params, opt_state = opt.update(grads, opt_state, params, lr)
+            new_params, opt_state = opt.update(grads, opt_state, params, lr,
+                                               key=opt_key)
             if tcfg.exchange_every > 1:
                 if use_ef:      # skipped steps leave the residual alone
                     new_params, ef_state = jax.lax.cond(
                         step % tcfg.exchange_every == 0,
-                        lambda te: _exchange(te[0], key, None, masks,
-                                             te[1]),
+                        lambda te: exchange_ef(te[0], None, te[1]),
                         lambda te: te, (new_params, ef))
                 else:
                     new_params = jax.lax.cond(
@@ -458,18 +495,18 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
                         lambda t: _exchange(t, key, None, masks),
                         lambda t: t, new_params)
             elif use_ef:
-                new_params, ef_state = _exchange(new_params, key, None,
-                                                 masks, ef)
+                new_params, ef_state = exchange_ef(new_params, None, ef)
             else:
                 new_params = _exchange(new_params, key, None, masks)
         else:
             # gradient exchange, then step
             gmode = "grad_renorm" if tcfg.aggregator == "rps_grad" else None
             if use_ef:
-                grads, ef_state = _exchange(grads, key, gmode, masks, ef)
+                grads, ef_state = exchange_ef(grads, gmode, ef)
             else:
                 grads = _exchange(grads, key, gmode, masks)
-            new_params, opt_state = opt.update(grads, opt_state, params, lr)
+            new_params, opt_state = opt.update(grads, opt_state, params, lr,
+                                               key=opt_key)
         mloss = loss / n_rps
         out_metrics = {"loss": mloss,
                        "lr": lr,
@@ -488,10 +525,13 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
     train_step.init_channel_state = channel.init_state
     train_step.plan = plan
     train_step.recovery = recovery
-    # zero EF residual, shaped/sharded like the stacked params (§13)
+    train_step.state_pack = pack
+    # zero EF residual, shaped like the stacked params (§13), carried at
+    # rest in the state pack's EF format (§16 — zeros quantize exactly)
     train_step.init_ef_state = (
-        lambda params: jax.tree.map(jnp.zeros_like, params)) if use_ef \
-        else None
+        lambda params: statepack_lib.pack_tree(
+            jax.tree.map(jnp.zeros_like, params), pack.ef_format)) \
+        if use_ef else None
     # donation hint for jit callers (launch/dryrun.py and the benches):
     # params + opt_state always, the channel-state / EF-residual carries
     # when present — without it every step double-buffers the whole
