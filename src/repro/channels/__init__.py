@@ -4,14 +4,19 @@ A channel turns the per-step PRNG key (plus carried state) into the
 ``(rs, ag)`` mask pair consumed by ``core/rps.py`` — i.i.d. Bernoulli,
 bursty Gilbert–Elliott, per-link heterogeneous, deadline/straggler-induced,
 or a replayed ``netsim`` trace. ``make_channel`` resolves CLI spec strings
-like ``"ge:p_bad=0.3,burst=8"``.
+like ``"ge:p_bad=0.3,burst=8"``. Corruption processes (DESIGN.md §17 —
+packets that arrive *wrong*) compose onto any drop channel via
+``make_channel(..., corruption="signflip:byzantine_frac=0.25")``.
 """
 from repro.channels.base import Channel, force_diag  # noqa: F401
 from repro.channels.bernoulli import BernoulliChannel  # noqa: F401
+from repro.channels.corruption import (  # noqa: F401
+    CORRUPTIONS, Corruption, CorruptionChannel)
 from repro.channels.deadline import DeadlineChannel  # noqa: F401
 from repro.channels.gilbert_elliott import GilbertElliottChannel  # noqa: F401
 from repro.channels.heterogeneous import HeterogeneousChannel  # noqa: F401
 from repro.channels.registry import (  # noqa: F401
-    ChannelSpec, channel_names, make_channel, parse_spec, register)
+    ChannelSpec, CorruptionSpec, channel_names, corruption_names,
+    make_channel, make_corruption, parse_spec, register)
 from repro.channels.trace import (  # noqa: F401
     TraceChannel, load_trace, save_trace)

@@ -130,6 +130,31 @@ class Channel:
         zero = jnp.zeros(rs.shape, bool)
         return rs, ag, {"rs": zero, "ag": zero}, state
 
+    # -- corruption axis (DESIGN.md §17) ----------------------------------
+    #: the channel's corruption process, when one is composed on top —
+    #: ``repro.channels.corruption.CorruptionChannel`` sets it; plain
+    #: drop channels corrupt nothing
+    corruption = None
+
+    def sample_corruption(self, key: jax.Array, n_buckets=None):
+        """Per-round corruption mask, same ``(n, s)`` /
+        ``(n_buckets, n, s)`` layout as the drop masks (True = the
+        packet arrives *wrong*), or ``None`` for channels without a
+        corruption process — the bit-identical default."""
+        return None
+
+    def sample_packets_corrupt(self, key: jax.Array, state: Any = None,
+                               n_buckets: int = 1):
+        """:meth:`sample_packets` grown by the corruption output:
+        ``(rs, ag, corrupt, state)`` with ``corrupt`` the
+        :meth:`sample_corruption` draw (None when the channel doesn't
+        corrupt). One call, one key: the mask and corruption domains are
+        tag-separated internally, so composing never perturbs the drop
+        draw — the sync default stays bit-identical with corruption
+        off."""
+        rs, ag, state = self.sample_packets(key, state, n_buckets)
+        return rs, ag, self.sample_corruption(key, n_buckets), state
+
     # -- theory hook ------------------------------------------------------
     def effective_p(self) -> float:
         raise NotImplementedError

@@ -1,0 +1,212 @@
+"""Corruption processes: packets that arrive *wrong* (DESIGN.md §17).
+
+The drop channels model erasures — the paper's adversity axis. This
+module adds the second axis: a :class:`Corruption` process samples a
+per-(worker, block) *corruption mask* alongside the drop masks and
+defines the transform an adversarial sender applies to its offered
+contribution. :class:`CorruptionChannel` composes the process with any
+drop channel (Bernoulli, GE, hetero, deadline, trace) so the two are
+configured and threaded as one object; the exchange paths apply the
+transform sender-side, before the codec (Yin et al.'s Byzantine-worker
+model — the honest local copy / AG fallback is never touched).
+
+Kinds:
+
+  ``bitflip``   one uniformly-random mantissa/exponent/sign bit of each
+                corrupted f32 value is XOR-flipped (a wire-level fault
+                model); non-finite results are clamped to ±FLT_MAX so
+                the round's arithmetic stays NaN-free deterministic;
+  ``scale``     the value arrives multiplied by ``gamma`` (a
+                scaled-gradient attack; gamma may be negative);
+  ``signflip``  the value arrives negated (gamma-free sign attack);
+  ``collude``   the classic colluding-worker attack: the transform is
+                −gamma·x (large, coordinated, wrong-direction).
+
+Mask structure: each (i, j) link corrupts independently with prob
+``frac``, and a *fixed* subset of ⌊byzantine_frac·n⌋ workers (the
+colluders — always the lowest worker ids, so the subset is static and
+reproducible) corrupts **every** packet it sends, every round. Owner
+entries (worker i's own block) are never corrupted — that copy never
+crosses the wire. ``byzantine_frac`` composes with any kind: e.g.
+``signflip`` + ``byzantine_frac=0.25`` makes a quarter of the fleet
+permanent sign-flippers.
+
+``frac=0, byzantine_frac=0`` corrupts nothing and every path is
+bit-identical to corruption=None (pinned by tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.channels import base
+from repro.core import rps as rps_lib
+
+CORRUPTIONS = ("bitflip", "scale", "signflip", "collude")
+
+#: key-domain tag for corruption *mask* draws ("crpt"), disjoint from
+#: the drop-mask domain (raw key) and the transform domain (core.rps)
+_MASK_TAG = 0x63727074
+
+_FLT_MAX = 3.4028235e38
+
+
+@dataclasses.dataclass(frozen=True)
+class Corruption:
+    """A corruption process: mask sampler + sender transform.
+
+    ``frac``: i.i.d. per-(worker, block, round[, bucket]) corruption
+    probability. ``byzantine_frac``: fraction of workers that collude —
+    corrupt every packet, every round (⌊byzantine_frac·n⌋ workers, the
+    lowest ids). ``gamma``: magnitude of the scale/collude transforms.
+    """
+    kind: str = "signflip"
+    frac: float = 0.0
+    byzantine_frac: float = 0.0
+    gamma: float = 10.0
+
+    def __post_init__(self):
+        if self.kind not in CORRUPTIONS:
+            raise ValueError(f"corruption={self.kind!r}, want one of "
+                             f"{CORRUPTIONS}")
+        if not 0.0 <= float(self.frac) <= 1.0:
+            raise ValueError(f"corruption frac={self.frac} not in [0,1]")
+        if not 0.0 <= float(self.byzantine_frac) < 1.0:
+            raise ValueError(f"byzantine_frac={self.byzantine_frac} "
+                             "not in [0, 1)")
+
+    def n_colluders(self, n: int) -> int:
+        return int(self.byzantine_frac * n + 1e-9)
+
+    def expected_frac(self, n: int) -> float:
+        """Expected corrupted fraction of the non-owner links: colluders
+        corrupt everything, the rest corrupt ``frac`` of theirs."""
+        b = self.n_colluders(n) / max(n, 1)
+        return b + (1.0 - b) * float(self.frac)
+
+    def sample(self, key: jax.Array, n: int, s: int,
+               n_buckets: Optional[int] = None) -> jax.Array:
+        """Bool corruption mask, ``(n, s)`` or ``(n_buckets, n, s)`` —
+        same layout as the drop masks, True = arrives wrong. Internally
+        tag-folded so the draw never correlates with the drop masks
+        sampled from the same round key."""
+        key = jax.random.fold_in(key, _MASK_TAG)
+        shape = (n, s) if n_buckets is None else (n_buckets, n, s)
+        if self.frac > 0.0:
+            m = jax.random.bernoulli(key, self.frac, shape)
+        else:
+            m = jnp.zeros(shape, bool)
+        f = self.n_colluders(n)
+        if f > 0:
+            collude = (jnp.arange(n) < f)[:, None]
+            m = m | collude
+        return m & ~rps_lib.owner_mask(n, s)
+
+    def apply(self, x: jax.Array, cmask: jax.Array,
+              key: Optional[jax.Array] = None) -> jax.Array:
+        """The sender transform: ``where(cmask, t(x), x)`` with ``cmask``
+        broadcastable to ``x``. ``key`` seeds the bitflip bit choice
+        (the deterministic kinds ignore it)."""
+        if self.kind == "signflip":
+            bad = -x
+        elif self.kind == "scale":
+            bad = jnp.asarray(self.gamma, x.dtype) * x
+        elif self.kind == "collude":
+            bad = jnp.asarray(-self.gamma, x.dtype) * x
+        else:  # bitflip
+            if key is None:
+                key = jax.random.PRNGKey(0)
+            xf = x.astype(jnp.float32)
+            bits = jax.random.randint(key, x.shape, 0, 32, jnp.uint32)
+            flipped = jax.lax.bitcast_convert_type(
+                jax.lax.bitcast_convert_type(xf, jnp.uint32)
+                ^ (jnp.uint32(1) << bits), jnp.float32)
+            # clamp inf/nan (exponent-all-ones patterns) to ±FLT_MAX:
+            # still a violent fault, but the round's arithmetic — and
+            # the robust aggregators' sorts — stay deterministic
+            flipped = jnp.where(jnp.isfinite(flipped), flipped,
+                                jnp.copysign(_FLT_MAX, flipped))
+            bad = flipped.astype(x.dtype)
+        return jnp.where(cmask, bad, x)
+
+    @property
+    def spec(self) -> str:
+        d = Corruption(self.kind)
+        args = [f"{f_}={getattr(self, f_):g}"
+                for f_ in ("frac", "byzantine_frac", "gamma")
+                if getattr(self, f_) != getattr(d, f_)]
+        return self.kind if not args else f"{self.kind}:{','.join(args)}"
+
+
+class CorruptionChannel(base.Channel):
+    """A drop channel wrapped with a :class:`Corruption` process.
+
+    Delegates the entire delivery model — mask draws (sync, packetised
+    and async), state, ``effective_p`` and the per-leg
+    ``expected_link_p``/``expected_link_p_ag`` the telemetry drift
+    monitor binds to — to the inner channel, so wrapping changes *what
+    arrives wrong*, never *what arrives*: the drift monitor keeps seeing
+    the inner channel's delivery expectations and never false-flags a
+    corrupted run (corruption is counted separately, in
+    ``rs_link_corrupt``). The corruption process itself is exposed as
+    ``.corruption`` and sampled via :meth:`sample_corruption`.
+    """
+
+    def __init__(self, inner: base.Channel, corruption: Corruption):
+        super().__init__(inner.n, inner.s)
+        self.inner = inner
+        self.corruption = corruption
+
+    # ---- delivery: pure delegation ------------------------------------
+    def init_state(self, key=None):
+        return self.inner.init_state(key)
+
+    def sample(self, key, state=None):
+        return self.inner.sample(key, state)
+
+    def sample_packets(self, key, state=None, n_buckets=1):
+        return self.inner.sample_packets(key, state, n_buckets)
+
+    def sample_async(self, key, state, slack_ms):
+        return self.inner.sample_async(key, state, slack_ms)
+
+    def effective_p(self) -> float:
+        return self.inner.effective_p()
+
+    def expected_link_p(self):
+        return self.inner.expected_link_p()
+
+    def expected_link_p_ag(self):
+        return self.inner.expected_link_p_ag()
+
+    # ---- the corruption axis ------------------------------------------
+    def sample_corruption(self, key, n_buckets=None):
+        return self.corruption.sample(key, self.n, self.s,
+                                      n_buckets=n_buckets)
+
+    def __getattr__(self, name):
+        # forward channel-family extras (deadline_ms, trace cursors, …);
+        # only reached when normal lookup fails
+        if name == "inner":
+            raise AttributeError(name)
+        return getattr(self.inner, name)
+
+    def __repr__(self):
+        return (f"CorruptionChannel({self.inner!r}, "
+                f"{self.corruption.spec!r})")
+
+
+def wrap(inner: base.Channel,
+         corruption: Optional[Corruption]) -> base.Channel:
+    """Wrap ``inner`` unless there is nothing to corrupt (None, or a
+    process with frac=0 and no colluders — kept unwrapped so the
+    corruption-off path is *structurally* identical, not just
+    numerically)."""
+    if corruption is None:
+        return inner
+    if corruption.frac == 0.0 and corruption.byzantine_frac == 0.0:
+        return inner
+    return CorruptionChannel(inner, corruption)

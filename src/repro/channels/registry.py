@@ -17,19 +17,34 @@ a spec string, an already-built :class:`Channel` (returned as-is), or
 A bare name with no args works too (``"ge"``). For bernoulli, an omitted
 ``p`` inherits ``default_p`` so ``--channel bernoulli`` composes with the
 existing ``--drop-rate`` flag.
+
+Corruption specs (DESIGN.md §17) use the same grammar over the
+corruption kinds —
+
+    signflip:byzantine_frac=0.25        (a quarter of the fleet flips)
+    collude:gamma=10,byzantine_frac=0.2 (coordinated −10x attack)
+    bitflip:frac=0.01                   (1% of packets, one random bit)
+
+— resolved by :func:`make_corruption` and composed onto any drop
+channel via ``make_channel(..., corruption=...)``. Unknown channel *or*
+corruption names raise a ``ValueError`` listing the registered names
+(never a bare KeyError from the CLI).
 """
 from __future__ import annotations
 
 from typing import Callable, Dict, Optional, Tuple, Union
 
+from repro.channels import corruption as corruption_lib
 from repro.channels.base import Channel
 from repro.channels.bernoulli import BernoulliChannel
+from repro.channels.corruption import Corruption
 from repro.channels.deadline import DeadlineChannel
 from repro.channels.gilbert_elliott import GilbertElliottChannel
 from repro.channels.heterogeneous import HeterogeneousChannel
 from repro.channels.trace import TraceChannel
 
 ChannelSpec = Union[None, str, Channel]
+CorruptionSpec = Union[None, str, Corruption]
 
 _REGISTRY: Dict[str, Callable[..., Channel]] = {}
 _ALIASES: Dict[str, str] = {}
@@ -72,23 +87,63 @@ def parse_spec(spec: str) -> Tuple[str, Dict[str, object]]:
     return name, kwargs
 
 
+def corruption_names() -> Tuple[str, ...]:
+    return tuple(corruption_lib.CORRUPTIONS)
+
+
+def make_corruption(spec: CorruptionSpec,
+                    byzantine_frac: Optional[float] = None
+                    ) -> Optional[Corruption]:
+    """Resolve a corruption spec (DESIGN.md §17): a
+    ``"kind:k=v,..."`` string over :data:`corruption_lib.CORRUPTIONS`,
+    an already-built :class:`Corruption`, or ``None``. A separate
+    ``byzantine_frac`` (the CLI flag) overlays the spec's own; passing
+    *only* ``byzantine_frac > 0`` with no spec defaults to the
+    colluding-worker attack. Returns ``None`` when nothing corrupts."""
+    if isinstance(spec, Corruption):
+        if byzantine_frac is not None:
+            import dataclasses as _dc
+            spec = _dc.replace(spec, byzantine_frac=float(byzantine_frac))
+        return spec
+    if spec is None or spec == "":
+        if not byzantine_frac:
+            return None
+        return Corruption("collude", byzantine_frac=float(byzantine_frac))
+    name, kwargs = parse_spec(spec)
+    if name not in corruption_lib.CORRUPTIONS:
+        raise ValueError(f"unknown corruption {name!r}; "
+                         f"known: {', '.join(corruption_names())}")
+    if byzantine_frac is not None:
+        kwargs["byzantine_frac"] = float(byzantine_frac)
+    try:
+        return Corruption(name, **kwargs)
+    except TypeError as e:
+        raise ValueError(f"bad args for corruption {name!r}: {e}") from e
+
+
 def make_channel(spec: ChannelSpec, n: int,
                  default_p: float = 0.0,
-                 s: Optional[int] = None) -> Channel:
+                 s: Optional[int] = None,
+                 corruption: CorruptionSpec = None) -> Channel:
     """Resolve a channel spec for an n-worker exchange (see module doc).
 
     ``s`` is the number of parameter-server blocks (DESIGN.md §10);
     ``None`` keeps the square s = n layout. A spec string may also carry
     ``s=<int>`` (e.g. ``"bernoulli:p=0.1,s=4"``); an explicit ``s``
-    argument must agree with it."""
+    argument must agree with it. ``corruption`` (a spec string /
+    :class:`Corruption` / None) composes a §17 corruption process onto
+    the built channel via :class:`CorruptionChannel`; a no-op process
+    (frac=0, no colluders) leaves the channel unwrapped."""
+    corr = make_corruption(corruption)
     if isinstance(spec, Channel):
         if spec.n != n:
             raise ValueError(f"channel built for n={spec.n}, need n={n}")
         if s is not None and spec.s != s:
             raise ValueError(f"channel built for s={spec.s}, need s={s}")
-        return spec
+        return corruption_lib.wrap(spec, corr)
     if spec is None or spec == "":
-        return BernoulliChannel(n, default_p, s=s)
+        return corruption_lib.wrap(BernoulliChannel(n, default_p, s=s),
+                                   corr)
     name, kwargs = parse_spec(spec)
     if name not in _REGISTRY:
         raise ValueError(f"unknown channel {name!r}; "
@@ -101,7 +156,7 @@ def make_channel(spec: ChannelSpec, n: int,
                              f"harness is configured for s={s}")
         kwargs["s"] = s
     try:
-        return _REGISTRY[name](n, **kwargs)
+        return corruption_lib.wrap(_REGISTRY[name](n, **kwargs), corr)
     except TypeError as e:
         raise ValueError(f"bad args for channel {name!r}: {e}") from e
 

@@ -353,10 +353,10 @@ def _canon_pipeline(wire, recovery):
     wire = wire_lib.canon_wire_name("f32" if wire is None else wire)
     wire_lib.make_codec(wire)                      # validate
     recovery = "renorm" if recovery is None else str(recovery)
-    if recovery not in wire_lib.RECOVERIES:
-        raise ValueError(f"recovery={recovery!r}, want one of "
-                         f"{wire_lib.RECOVERIES}")
-    return wire, recovery
+    # validate + canonicalise through the wire layer — accepts
+    # parameterised robust specs ("trimmed:beta=0.3") and round-trips
+    # them to their canonical spelling (DESIGN.md §17)
+    return wire, wire_lib.make_recovery(recovery).spec
 
 
 def make_plan(tree: Any, n: int, s: Optional[int] = None, *,

@@ -1,0 +1,123 @@
+"""Masked robust aggregators for Byzantine-tolerant recovery (DESIGN.md §17).
+
+The wire pipeline's renorm/scale recoveries average the *delivered*
+per-worker contributions — a single adversarial contribution moves the
+mean arbitrarily far. Yin et al. (PAPERS.md, "Byzantine-Robust
+Distributed Learning") show coordinate-wise median and trimmed mean
+achieve order-optimal statistical rates when up to a β fraction of
+workers are corrupted. This module implements those estimators (plus a
+norm-clipping mean) on the repo's canonical masked layout:
+
+    x    : (..., n, d)  per-worker contributions along axis -2
+    mask : (..., n)     delivery mask (True = this worker's packet
+                        arrived); the aggregate is taken over the
+                        *delivered* subset only, exactly like renorm's
+                        masked mean
+
+so the same function serves the pre-reduce table of `_exchange_table`
+(one server block per leading index) and the stacked global simulator
+path (grouped buckets). Everything is pure jnp, computed in f32, with
+the input dtype restored on return.
+
+Implementation notes:
+
+- The masked order statistics are obtained by pushing undelivered rows
+  to +inf, sorting the worker axis once, and indexing by the delivered
+  count ``c = sum(mask)``. Median = the usual
+  ``(sorted[(c-1)//2] + sorted[c//2]) / 2``; trimmed mean averages the
+  ranks ``[t, c - t)`` with ``t = min(floor(beta * c), (c-1)//2)`` so at
+  least one rank always survives. The trimmed sum masks *before*
+  multiplying (``where(keep, sorted, 0)``) — a 0-weight times the +inf
+  sentinel would be NaN.
+- Breakdown points: median 1/2, β-trimmed mean β, norm-clip 1/2 (the
+  clip threshold is ``clip_mult ×`` the *median* delivered norm, so the
+  adversary must control half the delivered rows to control τ; below
+  that its influence is bounded by βτ, not eliminated).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _counts(mask):
+    """Delivered count per aggregation site, clamped to >= 1."""
+    c = jnp.sum(mask.astype(jnp.int32), axis=-1)
+    return jnp.maximum(c, 1)
+
+
+def _sorted_masked(x, mask):
+    """Sort the worker axis with undelivered rows pushed to +inf."""
+    big = jnp.asarray(jnp.inf, x.dtype)
+    xm = jnp.where(mask[..., None], x, big)
+    return jnp.sort(xm, axis=-2)
+
+
+def masked_median(x, mask):
+    """Coordinate-wise median over the delivered rows of ``x``.
+
+    x: (..., n, d) f32-castable; mask: (..., n) bool. Returns (..., d).
+    """
+    x = jnp.asarray(x)
+    out_dtype = x.dtype
+    xs = _sorted_masked(x.astype(jnp.float32), mask)
+    c = _counts(mask)  # (...,)
+    lo = ((c - 1) // 2)[..., None, None]
+    hi = (c // 2)[..., None, None]
+    a = jnp.take_along_axis(xs, lo, axis=-2)[..., 0, :]
+    b = jnp.take_along_axis(xs, hi, axis=-2)[..., 0, :]
+    return (0.5 * (a + b)).astype(out_dtype)
+
+
+def masked_trimmed_mean(x, mask, beta=0.1):
+    """β-trimmed mean over the delivered rows: drop the ``floor(beta*c)``
+    smallest and largest order statistics per coordinate, average the
+    rest. ``t`` is clamped to ``(c-1)//2`` so >= 1 rank survives.
+    """
+    if not 0.0 <= float(beta) < 0.5:
+        raise ValueError(f"beta={beta} must be in [0, 0.5)")
+    x = jnp.asarray(x)
+    out_dtype = x.dtype
+    xs = _sorted_masked(x.astype(jnp.float32), mask)
+    c = _counts(mask)  # (...,)
+    t = jnp.minimum((beta * c).astype(jnp.int32), (c - 1) // 2)
+    n = x.shape[-2]
+    rank = jnp.arange(n)
+    # keep: (..., n) — ranks in [t, c - t)
+    keep = (rank >= t[..., None]) & (rank < (c - t)[..., None])
+    contrib = jnp.where(keep[..., None], xs, 0.0)
+    denom = (c - 2 * t).astype(jnp.float32)[..., None]
+    return (jnp.sum(contrib, axis=-2) / denom).astype(out_dtype)
+
+
+def masked_clip_mean(x, mask, clip_mult=2.0):
+    """Norm-clip-then-renorm: clip each delivered row to norm
+    ``tau = clip_mult * median(delivered row norms)``, then take the
+    masked mean. Bounds any single row's influence by ``tau / c``.
+    """
+    if not float(clip_mult) > 0.0:
+        raise ValueError(f"clip_mult={clip_mult} must be > 0")
+    x = jnp.asarray(x)
+    out_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    m = mask[..., None].astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(jnp.square(xf), axis=-1))  # (..., n)
+    tau = clip_mult * masked_median(norms[..., None], mask)[..., 0]
+    factor = jnp.minimum(1.0, tau[..., None] / jnp.maximum(norms, 1e-30))
+    c = _counts(mask).astype(jnp.float32)[..., None]
+    out = jnp.sum(xf * factor[..., None] * m, axis=-2) / c
+    return out.astype(out_dtype)
+
+
+def robust_aggregate(x, mask, recovery):
+    """Dispatch on ``recovery.kind`` (a robust `core.wire.Recovery`)."""
+    kind = getattr(recovery, "kind", recovery)
+    if kind == "median":
+        return masked_median(x, mask)
+    if kind == "trimmed":
+        return masked_trimmed_mean(x, mask,
+                                   beta=getattr(recovery, "beta", 0.1))
+    if kind == "clip":
+        return masked_clip_mean(x, mask,
+                                clip_mult=getattr(recovery, "clip_mult",
+                                                  2.0))
+    raise ValueError(f"not a robust recovery kind: {kind!r}")

@@ -52,6 +52,17 @@ stochastic rounding, absorbing the old ``rs_dtype`` knob) composed with a
 loss-recovery policy (``recovery=`` — the paper's renorm, unbiased
 1/(1−p) ``scale``, or the stateful error-feedback ``ef`` whose residual
 the plan/global paths carry via ``ef_state=``).
+
+Since DESIGN.md §17 the adversity model is two-axis: packets can arrive
+*wrong*, not just missing. ``corruption=`` threads a
+:mod:`repro.channels.corruption` process (bit-flip / scaled / sign-flip /
+colluding-worker masks sampled alongside the drop masks) through every
+path, applied to the sender's offered contribution before the codec; the
+Byzantine-robust recoveries (``median`` / ``trimmed`` / ``clip``,
+:mod:`repro.core.robust`) aggregate the pre-reduce per-worker table —
+the xla path gathers the table (one all_gather, n× the RS bytes) and
+aggregates locally, the ring engine raises (its hop-reduce never
+materialises per-row structure).
 """
 from __future__ import annotations
 
@@ -63,6 +74,7 @@ from jax import lax
 from jax.flatten_util import ravel_pytree
 
 from repro.core import plan as plan_lib
+from repro.core import robust as robust_lib
 from repro.core import wire as wire_lib
 
 AxisNames = Union[str, Tuple[str, ...]]
@@ -242,7 +254,7 @@ def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
                     pin: Optional[Callable] = None,
                     engine: str = "xla", ring_ids=None,
                     wire=None, recovery=None, key=None,
-                    send=None, late=None,
+                    send=None, late=None, corrupt=None,
                     comm_slot: int = 0) -> jax.Array:
     """One drop-masked RS+AG round on an ``(s, blk[, m])`` block table
     inside a shard_map region over ``names`` (the RPS axes).
@@ -283,6 +295,27 @@ def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
     it, so consecutive buckets in alternating slots can be in flight at
     once (double-buffered against the backward dot-generals). Slot 0 is
     the sync default and keeps today's collective_id — bit-identical.
+
+    Corruption axis (DESIGN.md §17): ``corrupt`` is an optional
+    ``(cmask, corruption, ckey)`` triple — cmask this call's ``(n, s)``
+    adversarial mask (True = worker i's packet for block j arrives
+    *wrong*), ``corruption`` a ``repro.channels.corruption.Corruption``,
+    ``ckey`` the per-device transform key (bitflip only). The transform
+    is applied to this device's *offered* contribution before the codec
+    (an adversarial sender, the Yin et al. Byzantine-worker model), so
+    both engines and every codec see the same corrupted wire values; the
+    AG-drop fallback keeps the *honest* local ``blocks`` — a worker
+    never corrupts its own copy. ``corrupt=None`` (and an all-False
+    cmask) is bit-identical to the pre-§17 paths.
+
+    Robust recoveries (median/trimmed/clip, ``rec.needs_table``)
+    aggregate the per-worker contribution table *before* the reduce — a
+    sum-only collective destroys exactly the per-row structure they
+    need. The xla path therefore replaces psum_scatter with one
+    all_gather of the offered tables (n× the RS bytes — the price of
+    robustness) and aggregates locally; the ring engine reduces on the
+    hops and never materialises the table, so robust + engine="ring"
+    raises (``auto`` falls back to xla).
     """
     from repro.telemetry import taps
     codec = wire_lib.resolve_codec(wire, rs_dtype)
@@ -329,23 +362,68 @@ def _exchange_table(blocks: jax.Array, rs: jax.Array, ag: jax.Array, *,
         if late is not None:
             taps.emit("rs_link_late", _ctr.link_late(late[0]))
             taps.emit("ag_link_late", _ctr.link_late(late[1]))
+        if corrupt is not None:
+            taps.emit("rs_link_corrupt",
+                      _ctr.link_corrupt(corrupt[0], rs))
         taps.annotate("exchange", {
             "n": n, "s": int(s), "mode": mode,
-            "engine": resolve_engine(engine),
+            "engine": "xla" if rec.needs_table
+            else resolve_engine(engine),
             "codec": codec.name, "recovery": rec.kind})
 
     # ---- wire representation of this device's contribution -------------
+    offer = blocks
+    if corrupt is not None:
+        # adversarial sender (DESIGN §17): transform the offered value
+        # BEFORE the codec so every engine/codec sees the same corrupted
+        # wire; `blocks` (the honest local copy, the AG fallback) is
+        # untouched. EF never composes with corruption (the plan/global
+        # paths raise), so `send` is always None here.
+        cmask_c, corr_c, ckey_c = corrupt
+        row_c = to_scatter(cmask_c[i], fill=False)     # (S,) this sender
+        offer = corr_c.apply(blocks, row_c[wide], ckey_c)
     if codec.quantized:
         if send is None:
-            enc = codec.encode(blocks, key)
+            enc = codec.encode(offer, key)
         else:
             q, sc = send
             enc = (to_scatter(q), to_scatter(sc, fill=1.0))
         send_arr = codec.decode(*enc)            # f32 on the wire grid
     else:
         enc = None
-        send_arr = blocks if send is None else pin(to_scatter(send))
+        send_arr = offer if send is None else pin(to_scatter(send))
     acc_dtype = codec.accum_dtype
+
+    if rec.needs_table:
+        # ---- robust recovery: aggregate the pre-reduce table ----------
+        if mode == "grad":
+            raise ValueError(
+                f"recovery={rec.kind!r} needs the renormalising modes "
+                "(model/grad_renorm); the naive 'grad' mode has no "
+                "per-contribution table semantics")
+        if engine not in (None, "auto", "xla"):
+            raise ValueError(
+                f"recovery={rec.kind!r} needs the pre-reduce per-worker "
+                "table; the ring engine reduces on the hops and never "
+                "materialises it — use engine='xla' (the 'auto' default "
+                "falls back to xla automatically)")
+        with jax.named_scope("rps.robust_gather"):
+            # one all_gather of the offered tables (n× the RS bytes):
+            # every device holds all n contributions pre-reduce
+            g = send_arr.astype(jnp.float32)[None]
+            for a in reversed(names):
+                g = lax.all_gather(g, a, axis=0, tiled=True)
+        with jax.named_scope("rps.robust"):
+            table = g.reshape(n, S, -1).transpose(1, 0, 2)   # (S, n, d)
+            tilde = robust_lib.robust_aggregate(table, rs_sc.T, rec)
+            tilde = tilde.reshape((S,) + blocks.shape[1:]) \
+                .astype(blocks.dtype)
+        with jax.named_scope("rps.decode"):
+            recv = ag_sc[i][wide]
+            out = jnp.where(recv, tilde, blocks)  # keep honest local block
+            if inv is not None:
+                out = out[inv]
+            return pin(out[:s])
 
     if resolve_engine(engine) == "ring":
         from repro.kernels import rps_ring
@@ -425,11 +503,37 @@ def _resolve_masks(key, n: int, p: float, plan: plan_lib.ExchangePlan,
                         if plan.per_bucket_masks else None)
 
 
+def _resolve_corruption(corruption, corrupt_masks, key, n: int, s: int,
+                        n_buckets=None):
+    """Resolve the per-round corruption masks (DESIGN.md §17): the
+    channel-supplied ``corrupt_masks`` win; otherwise the process samples
+    its own from the shared round key (internally tag-folded, so the
+    draw never correlates with the drop masks). Returns None when there
+    is no corruption — the bit-identical default."""
+    if corruption is None:
+        if corrupt_masks is not None:
+            raise ValueError("corrupt_masks without a corruption process")
+        return None
+    if corrupt_masks is None:
+        return corruption.sample(key, n, s, n_buckets=n_buckets)
+    if corrupt_masks.ndim == 3 and n_buckets is not None \
+            and corrupt_masks.shape[0] != n_buckets:
+        raise ValueError(f"corrupt_masks carry {corrupt_masks.shape[0]} "
+                         f"buckets, plan has {n_buckets}")
+    return corrupt_masks
+
+
+#: key-domain tag for corruption transform randomness ("corr"), disjoint
+#: from the 0x77697265 ("wire") encode-dither domain
+_CORRUPT_TAG = 0x636F7272
+
+
 def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
                       axis_name: AxisNames, *, mode: str = "model",
                       masks=None, rs_dtype=jnp.float32,
                       s: Optional[int] = None, engine: str = "xla",
-                      ring_ids=None, wire=None, recovery=None):
+                      ring_ids=None, wire=None, recovery=None,
+                      corruption=None, corrupt_masks=None):
     """One RPS round on a flat per-device vector v: (D,) -> (D,).
 
     mode:
@@ -481,13 +585,19 @@ def rps_exchange_flat(v: jax.Array, key: jax.Array, p: float,
 
     rs, ag = sample_masks(key, n, p, s) if masks is None else masks
     s = rs.shape[-1]
+    cmask = _resolve_corruption(corruption, corrupt_masks, key, n, s)
+    corrupt = None
+    if cmask is not None:
+        ckey = jax.random.fold_in(jax.random.fold_in(key, _CORRUPT_TAG), i)
+        corrupt = (cmask, corruption, ckey)
     pad = (-D) % s
     blk = (D + pad) // s
     vp = jnp.pad(v, (0, pad)) if pad else v
     out = _exchange_table(vp.reshape(s, blk), rs, ag, names=names, n=n,
                           i=i, mode=mode, rs_dtype=rs_dtype,
                           engine=engine, ring_ids=ring_ids,
-                          wire=codec, recovery=rec, key=k_enc)
+                          wire=codec, recovery=rec, key=k_enc,
+                          corrupt=corrupt)
     out = out.reshape(-1)
     return out[:D] if pad else out
 
@@ -496,7 +606,8 @@ def rps_exchange(tree: Any, key: jax.Array, p: float,
                  axis_name: AxisNames, *, mode: str = "model",
                  masks=None, rs_dtype=jnp.float32,
                  s: Optional[int] = None, engine: str = "xla",
-                 ring_ids=None, wire=None, recovery=None) -> Any:
+                 ring_ids=None, wire=None, recovery=None,
+                 corruption=None, corrupt_masks=None) -> Any:
     """Pytree wrapper around :func:`rps_exchange_flat` — semantically the
     single-bucket plan (``plan.single_bucket_plan``): the whole tree is
     one ``ravel_pytree`` buffer, exchanged in one RS+AG round.
@@ -510,7 +621,9 @@ def rps_exchange(tree: Any, key: jax.Array, p: float,
     return unravel(rps_exchange_flat(flat, key, p, axis_name, mode=mode,
                                      masks=masks, rs_dtype=rs_dtype, s=s,
                                      engine=engine, ring_ids=ring_ids,
-                                     wire=wire, recovery=recovery))
+                                     wire=wire, recovery=recovery,
+                                     corruption=corruption,
+                                     corrupt_masks=corrupt_masks))
 
 
 def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
@@ -520,7 +633,8 @@ def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
                       pin: Optional[Callable] = None,
                       engine: Optional[str] = None,
                       ring_ids=None, wire=None, recovery=None,
-                      ef_state: Any = None, late=None) -> Any:
+                      ef_state: Any = None, late=None,
+                      corruption=None, corrupt_masks=None) -> Any:
     """Bucketed collective exchange of a (worker-local) pytree inside a
     shard_map region: exactly ``2 × plan.n_buckets`` collectives per round
     on the "xla" engine (one psum_scatter + one all_gather per bucket),
@@ -577,7 +691,16 @@ def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
     if use_ef and ef_state is None:
         raise ValueError("recovery='ef' needs ef_state= (the carried "
                          "residual; wire.init_ef_state(tree) to start)")
+    if use_ef and corruption is not None:
+        raise ValueError(
+            "corruption with recovery='ef' is unsupported: the EF "
+            "residual telescopes an *honest* sender's codec error — an "
+            "adversarial wire breaks the feedback loop; use a robust "
+            "recovery (median/trimmed/clip)")
     rs, ag = _resolve_masks(key, n, p, plan, masks)
+    cmasks = _resolve_corruption(
+        corruption, corrupt_masks, key, n, plan.s,
+        n_buckets=plan.n_buckets if plan.per_bucket_masks else None)
     from repro.telemetry import taps
     if taps.active() is not None:
         taps.annotate("plan", {
@@ -596,6 +719,12 @@ def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
         rs_b, ag_b = _bucket_masks(rs, ag, b)
         late_b = (late["rs"][b], late["ag"][b]) if late is not None \
             else None
+        corrupt_b = None
+        if cmasks is not None:
+            cm_b = cmasks[b] if cmasks.ndim == 3 else cmasks
+            ck_b = jax.random.fold_in(jax.random.fold_in(
+                jax.random.fold_in(key, _CORRUPT_TAG), b), i)
+            corrupt_b = (cm_b, corruption, ck_b)
         # per-bucket AND per-device encode keys (see rps_exchange_flat:
         # correlated dither across workers would defeat the averaging)
         k_b = jax.random.fold_in(jax.random.fold_in(
@@ -634,7 +763,7 @@ def rps_exchange_plan(tree: Any, key: jax.Array, p: float,
                                   pin=pin, engine=engine,
                                   ring_ids=ring_ids, wire=codec,
                                   recovery=rec, key=k_b, send=send,
-                                  late=late_b,
+                                  late=late_b, corrupt=corrupt_b,
                                   comm_slot=(pos % 2) if is_async else 0)
         tbl = nxt
     if use_ef:
@@ -750,7 +879,8 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
                         plan: Optional[plan_lib.ExchangePlan] = None,
                         engine: str = "xla",
                         rs_dtype=jnp.float32, wire=None, recovery=None,
-                        ef_state: Any = None, late=None) -> Any:
+                        ef_state: Any = None, late=None,
+                        corruption=None, corrupt_masks=None) -> Any:
     """Global-view exchange on *stacked* worker trees (leading dim n).
 
     Mathematically identical to the collective path (same masks, same block
@@ -819,7 +949,16 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
     if use_ef and ef_state is None:
         raise ValueError("recovery='ef' needs ef_state= (the stacked "
                          "residual; wire.init_ef_state(tree) to start)")
+    if use_ef and corruption is not None:
+        raise ValueError(
+            "corruption with recovery='ef' is unsupported: the EF "
+            "residual telescopes an *honest* sender's codec error — an "
+            "adversarial wire breaks the feedback loop; use a robust "
+            "recovery (median/trimmed/clip)")
     rs, ag = _resolve_masks(key, n, p, plan, masks)
+    cmasks = _resolve_corruption(
+        corruption, corrupt_masks, key, n, plan.s,
+        n_buckets=plan.n_buckets if plan.per_bucket_masks else None)
     from repro.telemetry import taps
     if taps.active() is not None:
         # step-level counters: whole-draw per-link bundle (summed over
@@ -834,6 +973,10 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
             # deadline-arbitrated; this only counts what arrived late
             for k_, v in _ctr.staleness_stats(late["rs"],
                                               late["ag"]).items():
+                taps.emit(k_, v)
+        if cmasks is not None:
+            # corruption bundle (DESIGN §17): what arrived *wrong*
+            for k_, v in _ctr.corruption_stats(cmasks, rs).items():
                 taps.emit(k_, v)
         if rs.ndim == 3:
             own_ = ~owner_mask(n, plan.s)
@@ -853,11 +996,25 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
         engine = "xla"
     elif engine not in ("xla", "ring"):
         raise ValueError(f"engine={engine!r}")
+    if rec.needs_table:
+        # robust recoveries aggregate the pre-reduce table (DESIGN §17)
+        if mode == "grad":
+            raise ValueError(
+                f"recovery={rec.kind!r} needs the renormalising modes "
+                "(model/grad_renorm); the naive 'grad' mode has no "
+                "per-contribution table semantics")
+        if engine == "ring":
+            raise ValueError(
+                f"recovery={rec.kind!r} needs the pre-reduce per-worker "
+                "table; the ring engine reduces on the hops and never "
+                "materialises it — use engine='xla' (the 'auto' default "
+                "falls back to xla automatically)")
     backend = _resolve_global_backend(backend)
     # the Pallas masked-average kernel renormalises by the received count
-    # internally — any other divisor (the scale recovery) takes the einsum
+    # internally — any other divisor (the scale recovery) or aggregate
+    # (the robust table kinds) takes the einsum/robust path
     use_pallas = backend == "pallas" and renorm and engine == "xla" \
-        and rec.kind != "scale"
+        and rec.kind != "scale" and not rec.needs_table
     if use_pallas:
         from repro.kernels.masked_avg import masked_avg_grid_pallas
         interp = jax.default_backend() != "tpu"
@@ -893,6 +1050,19 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
         else:
             rs_g = jnp.broadcast_to(rs.astype(jnp.float32), (G, n, s))
             ag_g = jnp.broadcast_to(ag, (G, n, s))
+        if cmasks is not None:
+            # adversarial senders (DESIGN §17): transform the offered
+            # contributions BEFORE the codec — `stack` (the honest local
+            # copies, the AG fallback) is untouched
+            if cmasks.ndim == 3:
+                cm_g = jnp.stack([cmasks[j] for j in idxs])
+            else:
+                cm_g = jnp.broadcast_to(cmasks, (G, n, s))
+            k_c = jax.random.fold_in(
+                jax.random.fold_in(key, _CORRUPT_TAG), g_idx)
+            stack_wire = corruption.apply(stack, cm_g[..., None], k_c)
+        else:
+            stack_wire = stack
         if use_ef:
             # EF: send the residual-compensated intent; this round's
             # codec error becomes next round's replayed residual.
@@ -916,11 +1086,19 @@ def rps_exchange_global(tree: Any, key: jax.Array, p: float, n: int, *,
                 taps.emit("ef_resid_sq",
                           jnp.sum(jnp.square(ef_stack.astype(jnp.float32))))
         else:
-            send = to_wire(stack, k_g)
+            send = to_wire(stack_wire, k_g)
         div_g = _divisor(rec, mode, rs_g, n)                 # (G, s) f32
         if taps.active() is not None:
             taps.emit("divisor", div_g)
-        if engine == "ring":                  # wire-dtype ring-order sums
+        if rec.needs_table:
+            # robust aggregate over the pre-reduce table (DESIGN §17):
+            # (G, n, s, d) → worker axis at -2 per (group, block) site,
+            # masked by the delivery pattern — exactly the table the
+            # collective xla path gathers
+            table = send.astype(jnp.float32).transpose(0, 2, 1, 3)
+            tilde = robust_lib.robust_aggregate(
+                table, rs_g.transpose(0, 2, 1) != 0, rec)    # (G, s, d)
+        elif engine == "ring":                # wire-dtype ring-order sums
             # the replay accumulates in the codec's accumulation dtype
             # (the wire itself for linear codecs — resolving wire= and
             # the legacy rs_dtype knob identically; f32 for quantised)

@@ -323,3 +323,60 @@ def corollary2_rate_channel(channel, T: int, n: int = None, **kw) -> float:
     """Corollary-2 rate prediction at the channel's matched i.i.d. rate."""
     return corollary2_rate(_channel_n(channel, n), effective_p(channel), T,
                            **kw)
+
+
+# ---- Byzantine corruption: robust statistical rates (DESIGN.md §17) --------
+#
+# Yin et al. ("Byzantine-Robust Distributed Learning", PAPERS.md) prove
+# that with an α fraction of Byzantine workers, coordinate-wise median
+# and β-trimmed mean achieve the order-optimal statistical error
+#
+#     O( α/√n  +  1/√(nT) )            (strongly convex: Θ̃ of the same)
+#
+# — the first term is the unavoidable price of the corrupted fraction,
+# the second the usual n-worker sampling rate; no estimator can beat the
+# sum. These bounds live on a different axis from the paper's α₁/α₂
+# erasure bounds: a drop removes a sample (variance ↑), a corruption
+# *replaces* one (bias ∝ the corrupted fraction unless the aggregator is
+# robust). The combined 2-axis prediction simply adds the Yin term to
+# the Corollary-2 rate evaluated with the robust recovery's clean-data
+# efficiency folded into α₂ (``wire.recovery_alpha2_extra``).
+
+def robust_breakdown_point(recovery) -> float:
+    """Largest corrupted worker fraction the recovery's aggregate
+    provably tolerates: median/clip 1/2, trimmed β, the averaging kinds
+    (renorm/scale/ef) 0 — one adversarial row moves a mean arbitrarily."""
+    from repro.core import wire as wire_lib
+    return wire_lib.make_recovery(recovery).breakdown_point()
+
+
+def byzantine_rate(n: int, T: int, byz_frac: float,
+                   sigma: float = 1.0) -> float:
+    """Yin-style statistical error of a robust aggregate under a
+    ``byz_frac`` fraction of Byzantine workers (up to constants):
+    σ(α/√n + 1/√(nT)) + 1/T. Monotone in every argument; 0 corruption
+    reduces to the ordinary n-worker sampling rate."""
+    if not 0.0 <= byz_frac < 1.0:
+        raise ValueError(f"byz_frac={byz_frac} not in [0, 1)")
+    a = float(byz_frac)
+    return float(sigma * (a / np.sqrt(n) + 1.0 / np.sqrt(n * T)) + 1.0 / T)
+
+
+def robust_rate(n: int, p: float, T: int, byz_frac: float = 0.0,
+                recovery="median", sigma: float = 1.0, **kw) -> float:
+    """The 2-axis (drop × corruption) rate prediction: the Corollary-2
+    erasure rate at drop rate ``p`` — with the robust recovery's
+    clean-data efficiency loss folded into α₂ — plus the Yin corruption
+    term. Returns ``inf`` when the corrupted fraction exceeds the
+    recovery's breakdown point (the aggregate is adversary-controlled:
+    renorm/scale under *any* corruption, trimmed beyond its β budget) —
+    the divergence ``benchmarks/robust_bench.py`` observes empirically."""
+    from repro.core import wire as wire_lib
+    rec = wire_lib.make_recovery(recovery)
+    if byz_frac > rec.breakdown_point():
+        return float("inf")
+    kw.setdefault("a2_extra", wire_lib.recovery_alpha2_extra(rec, n, p))
+    erasure = corollary2_rate(n, p, T, sigma=sigma, **kw)
+    # the 1/√(nT) + 1/T sampling terms are already in the erasure rate:
+    # only the corrupted-fraction term is new on this axis
+    return float(erasure + sigma * byz_frac / np.sqrt(n))

@@ -56,7 +56,12 @@ import jax.numpy as jnp
 from repro.core import quant as quant_lib
 
 WIRES = ("f32", "bf16", "int8")
-RECOVERIES = ("renorm", "scale", "ef")
+RECOVERIES = ("renorm", "scale", "ef", "median", "trimmed", "clip")
+#: the Byzantine-robust subset (DESIGN.md §17): these aggregate the
+#: per-worker table *before* the reduce (coordinate-wise median /
+#: β-trimmed mean / norm-clip-then-renorm in ``core.robust``), so they
+#: survive contributions that arrive *wrong*, not just missing ones.
+ROBUST_RECOVERIES = ("median", "trimmed", "clip")
 
 #: canonical wire name for every accepted spelling (plus any numpy-
 #: parseable dtype name, handled in :func:`canon_wire_dtype`)
@@ -191,19 +196,50 @@ def resolve_codec(wire: Any, rs_dtype: Any = jnp.float32) -> WireCodec:
 class Recovery:
     """Receiver-side loss-recovery policy. ``p`` is the expected
     per-packet drop rate the ``scale`` divisor needs (a channel's
-    ``effective_p()`` for non-i.i.d. processes); unused by the others."""
+    ``effective_p()`` for non-i.i.d. processes); unused by the others.
+    ``beta`` is the per-side trim fraction of the ``trimmed`` robust
+    aggregator, ``clip_mult`` the norm-clip threshold multiple of
+    ``clip`` (τ = clip_mult × median delivered norm); both are inert for
+    the non-robust kinds."""
     kind: str = "renorm"
     p: Optional[float] = None
+    beta: float = 0.1
+    clip_mult: float = 2.0
 
     def __post_init__(self):
         if self.kind not in RECOVERIES:
             raise ValueError(
                 f"recovery={self.kind!r}, want one of {RECOVERIES}")
+        if not 0.0 <= float(self.beta) < 0.5:
+            raise ValueError(f"recovery beta={self.beta} not in [0, 0.5)")
+        if not float(self.clip_mult) > 0.0:
+            raise ValueError(
+                f"recovery clip_mult={self.clip_mult} must be > 0")
 
     @property
     def needs_state(self) -> bool:
         """EF carries a params-shaped residual across rounds."""
         return self.kind == "ef"
+
+    @property
+    def needs_table(self) -> bool:
+        """Robust kinds aggregate the per-worker contribution table
+        *before* the reduce — a sum-only collective (psum_scatter, the
+        ring engine's hop-reduce) destroys exactly the per-row structure
+        they need, so the exchange paths must materialise the table
+        (DESIGN.md §17)."""
+        return self.kind in ROBUST_RECOVERIES
+
+    @property
+    def spec(self) -> str:
+        """Canonical spec string round-trippable through
+        :func:`make_recovery` ("trimmed:beta=0.2"; bare kind when every
+        knob is at its default) — the form ``ExchangePlan.recovery``
+        stores."""
+        d = Recovery(self.kind)
+        args = [f"{f}={getattr(self, f):g}" for f in ("beta", "clip_mult")
+                if getattr(self, f) != getattr(d, f)]
+        return self.kind if not args else f"{self.kind}:{','.join(args)}"
 
     def expected_count(self, n: int) -> float:
         """The static ``scale`` divisor n(1−p) — every worker can compute
@@ -214,18 +250,43 @@ class Recovery:
                              "rate p (pass p= or a channel effective_p)")
         return max(float(n) * (1.0 - float(self.p)), 1.0)
 
+    def breakdown_point(self) -> float:
+        """Largest corrupted fraction the aggregate provably tolerates:
+        median 1/2; trimmed β (per-side trim budget); clip 1/2 (the
+        data-derived τ is controlled once the adversary owns half the
+        delivered norms — below that, influence is bounded, not zero);
+        the averaging kinds 0 (one bad row moves the mean arbitrarily)."""
+        return {"median": 0.5, "trimmed": float(self.beta),
+                "clip": 0.5}.get(self.kind, 0.0)
+
 
 def make_recovery(recovery: Any, p: Optional[float] = None) -> Recovery:
     """Recovery from a spec string or instance, binding ``p`` for the
     ``scale`` divisor when the instance doesn't carry one. ``None`` is
-    the paper-faithful renorm."""
+    the paper-faithful renorm. Spec strings follow the channel-registry
+    grammar: ``"kind"`` or ``"kind:beta=0.2,clip_mult=3"``."""
     if recovery is None:
         return Recovery("renorm")
     if isinstance(recovery, Recovery):
         if recovery.kind == "scale" and recovery.p is None:
             return dataclasses.replace(recovery, p=p)
         return recovery
-    return Recovery(str(recovery), p=p)
+    spec = str(recovery)
+    kind, _, argstr = spec.partition(":")
+    kw = {}
+    if argstr:
+        for item in argstr.split(","):
+            if not item:
+                continue
+            k, eq, v = item.partition("=")
+            if not eq:
+                raise ValueError(f"recovery spec {spec!r}: want k=v args")
+            if k not in ("beta", "clip_mult", "p"):
+                raise ValueError(f"recovery spec {spec!r}: unknown arg "
+                                 f"{k!r} (want beta, clip_mult, p)")
+            kw[k] = float(v)
+    kw.setdefault("p", p)
+    return Recovery(kind, **kw)
 
 
 def config_wire(wire: Any, exchange_dtype: Any = "float32") -> str:
@@ -281,23 +342,39 @@ def effective_omega(wire: Any, recovery: Any = "renorm") -> float:
     """Codec variance *after* recovery: EF compensates the time-averaged
     codec error, so its stationary contribution drops to the usual
     higher-order ω² (EF-SGD matches the uncompressed rate up to O(ω²)
-    terms); renorm/scale pass ω through unchanged."""
+    terms); renorm/scale (and the robust kinds) pass ω through unchanged
+    — robust aggregation of quantised contributions does not cancel the
+    per-row codec noise."""
     w = codec_omega(wire)
-    kind = recovery.kind if isinstance(recovery, Recovery) else \
-        ("renorm" if recovery is None else str(recovery))
-    return w * w if kind == "ef" else w
+    return w * w if make_recovery(recovery).kind == "ef" else w
+
+
+#: Asymptotic relative efficiency of each robust aggregator against the
+#: plain mean on clean (uncorrupted, Gaussian) data — the variance
+#: multiplier robustness costs when there is no adversary. Median: the
+#: classic π/2. Trimmed: 1/(1−2β) to first order (the surviving mass).
+#: Clip: 1 — with τ = 2× the median norm, honest rows are essentially
+#: never clipped.
+ROBUST_EFFICIENCY = {"median": 3.14159265 / 2.0, "clip": 1.0}
 
 
 def recovery_alpha2_extra(recovery: Any, n: int, p: float) -> float:
-    """Extra α₂-style variance of the recovery divisor. renorm/ef divide
+    """Extra α₂-style variance of the recovery step. renorm/ef divide
     by the realised count (the paper's bounds already price that in);
     ``scale`` divides by the expected count n(1−p), so the estimate
-    carries the count's relative variance p/((1−p)n) on top. All
-    policies are (conditionally) unbiased — there is no α₁ bias term."""
-    kind = recovery.kind if isinstance(recovery, Recovery) else \
-        ("renorm" if recovery is None else str(recovery))
-    if kind != "scale":
-        return 0.0
-    if p >= 1.0:
-        return 1.0
-    return float(p / ((1.0 - p) * n))
+    carries the count's relative variance p/((1−p)n) on top. The robust
+    kinds pay their clean-data efficiency loss: variance ≈ eff·σ²/c
+    instead of σ²/c, an extra relative (eff−1)/n at full delivery —
+    stylised but the right order and monotonicity for the §6 bounds.
+    All policies are (conditionally) unbiased on symmetric noise — there
+    is no α₁ bias term."""
+    rec = make_recovery(recovery)
+    if rec.kind == "scale":
+        if p >= 1.0:
+            return 1.0
+        return float(p / ((1.0 - p) * n))
+    if rec.kind in ROBUST_RECOVERIES:
+        eff = ROBUST_EFFICIENCY.get(rec.kind,
+                                    1.0 / max(1.0 - 2.0 * rec.beta, 1e-9))
+        return float((eff - 1.0) / max(n, 1))
+    return 0.0

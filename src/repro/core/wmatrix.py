@@ -136,3 +136,77 @@ def monte_carlo_alphas(n: int, p: float, trials: int = 2000,
     a1 = (n * np.trace(M1) / n - 1.0) / (n - 1.0)
     a2 = (n * np.trace(M2) / n - 1.0) / (n - 1.0)
     return float(a1), float(a2)
+
+
+# ---- adversarial extension: corruption masks + robust rounds ---------------
+# (DESIGN.md §17). The W-matrix formalism only covers *linear* rounds —
+# a robust aggregate (median/trimmed/clip) is not a fixed matrix applied
+# to the contributions, so the adversarial oracle materialises the
+# per-block contribution tables directly. This is the numpy reference
+# the jnp robust paths (core.robust + both exchange paths) are
+# validated against.
+
+def sample_corrupt_mask(rng: np.random.Generator, n: int, s: int,
+                        frac: float = 0.0, byzantine_frac: float = 0.0,
+                        owners=None) -> np.ndarray:
+    """Bool (n, s) corruption mask matching ``channels.corruption``'s
+    structure: i.i.d. Bernoulli(frac) links, plus ⌊byzantine_frac·n⌋
+    colluding rows corrupting everything; owner entries never corrupt
+    (that copy never crosses the wire)."""
+    m = rng.random((n, s)) < frac
+    f = int(byzantine_frac * n + 1e-9)
+    if f > 0:
+        m[:f, :] = True
+    if owners is not None:
+        m[np.asarray(owners), np.arange(s)] = False
+    return m
+
+
+def np_robust_aggregate(rows: np.ndarray, kind: str, beta: float = 0.1,
+                        clip_mult: float = 2.0) -> np.ndarray:
+    """Robust aggregate of the delivered contribution rows (c, d) — the
+    numpy twin of ``core.robust``'s masked estimators on the delivered
+    subset."""
+    rows = np.asarray(rows, np.float64)
+    c = rows.shape[0]
+    if kind == "median":
+        return np.median(rows, axis=0)
+    if kind == "trimmed":
+        srt = np.sort(rows, axis=0)
+        t = min(int(beta * c), (c - 1) // 2)
+        return srt[t:c - t].mean(axis=0)
+    if kind == "clip":
+        norms = np.sqrt((rows ** 2).sum(axis=1))
+        tau = clip_mult * np.median(norms)
+        fac = np.minimum(1.0, tau / np.maximum(norms, 1e-30))
+        return (rows * fac[:, None]).sum(axis=0) / c
+    raise ValueError(f"not a robust kind: {kind!r}")
+
+
+def robust_round(V: np.ndarray, owners, rs, ag, cmask,
+                 corrupt_fn, kind: str, beta: float = 0.1,
+                 clip_mult: float = 2.0) -> np.ndarray:
+    """One adversarial RPS round on stacked models V (n, s·blk): each
+    corrupted contribution (``cmask[i, j]`` True) is transformed by
+    ``corrupt_fn`` before it reaches block j's aggregation site; the
+    owner aggregates the *delivered* rows with the robust ``kind``; the
+    AG leg broadcasts as usual (a dropped broadcast keeps the receiver's
+    own **honest** block — a worker never corrupts its own copy)."""
+    V = np.asarray(V, np.float64)
+    n, D = V.shape
+    s = rs.shape[1]
+    assert D % s == 0
+    blk = D // s
+    out = V.copy()
+    for j in range(s):
+        Vj = V[:, j * blk:(j + 1) * blk]
+        offered = Vj.copy()
+        bad = np.asarray(cmask[:, j], bool)
+        if bad.any():
+            offered[bad] = corrupt_fn(Vj[bad])
+        agg = np_robust_aggregate(offered[np.asarray(rs[:, j], bool)],
+                                  kind, beta=beta, clip_mult=clip_mult)
+        for i in range(n):
+            if ag[i, j]:
+                out[i, j * blk:(j + 1) * blk] = agg
+    return out

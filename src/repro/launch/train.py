@@ -87,13 +87,25 @@ def main():
                          "quarter (stochastic rounding, per-block "
                          "scales)")
     ap.add_argument("--recovery", default="renorm",
-                    choices=["renorm", "scale", "ef"],
-                    help="loss-recovery policy (DESIGN.md §13): renorm "
-                         "= paper Algorithm 1 (divide by the received "
-                         "count), scale = unbiased 1/(1-p) zero-fill, "
-                         "ef = error-feedback residual on the codec "
-                         "error (extra params-shaped state, donated & "
-                         "checkpointable)")
+                    help="loss-recovery policy (DESIGN.md §13/§17): "
+                         "renorm = paper Algorithm 1 (divide by the "
+                         "received count), scale = unbiased 1/(1-p) "
+                         "zero-fill, ef = error-feedback residual on "
+                         "the codec error; robust kinds (§17) for "
+                         "corrupted links: median, trimmed (β-trimmed "
+                         "mean, 'trimmed:beta=0.2'), clip (norm-clip at "
+                         "clip_mult x the median norm)")
+    ap.add_argument("--corruption", default=None,
+                    help="corruption-process spec (DESIGN.md §17) over "
+                         "bitflip/scale/signflip/collude, e.g. "
+                         "'signflip:frac=0.1' or 'collude:gamma=10,"
+                         "byzantine_frac=0.2'; default: no corruption "
+                         "(bit-identical)")
+    ap.add_argument("--byzantine-frac", type=float, default=0.0,
+                    help="fraction of colluding workers (lowest ids, "
+                         "every packet corrupted); overlays the "
+                         "--corruption spec's own field and alone "
+                         "selects the collude attack")
     ap.add_argument("--async", dest="async_", action="store_true",
                     help="async overlap engine (DESIGN.md §15): buckets "
                          "ship in reverse-layer order as gradients become "
@@ -156,6 +168,7 @@ def main():
         lr=args.lr, steps=args.steps,
         warmup=args.warmup, batch_size=args.batch_size, seed=args.seed,
         channel=args.channel, n_servers=args.servers,
+        corruption=args.corruption, byzantine_frac=args.byzantine_frac,
         bucket_mb=args.bucket_mb, n_buckets=args.buckets,
         engine=args.engine, exchange_dtype=args.exchange_dtype,
         wire=args.wire, recovery=args.recovery,

@@ -126,3 +126,30 @@ def staleness_stats(late_rs: jax.Array,
         "ag_link_late": ag_l,
         "late_frac": (jnp.sum(rs_l) + jnp.sum(ag_l)) / tot,
     }
+
+
+def link_corrupt(cmask: jax.Array,
+                 rs: Optional[jax.Array] = None) -> jax.Array:
+    """Per-sender CORRUPT-delivered packet count (DESIGN.md §17), owner
+    entries excluded — same row convention as :func:`link_delivered`.
+    With ``rs`` given, only corrupt packets that actually *arrived*
+    count (a corrupted-then-dropped packet never reaches an aggregate);
+    without it, every corruption event counts."""
+    m = cmask if rs is None else (cmask & rs)
+    return link_delivered(m)
+
+
+def corruption_stats(cmask: jax.Array,
+                     rs: jax.Array) -> Dict[str, jax.Array]:
+    """Corruption counter bundle from one round's corruption + RS masks:
+    per-sender corrupt-delivered counts plus ``corrupt_frac`` — the
+    fraction of *delivered* (non-owner) RS packets that arrived wrong,
+    the contamination level the robust aggregators face. The delivery
+    expectations the drift monitor binds stay the inner channel's — this
+    bundle is the separate axis (what arrived wrong, not what arrived)."""
+    c = link_corrupt(cmask, rs)
+    delivered = jnp.maximum(jnp.sum(link_delivered(rs)), 1)
+    return {
+        "rs_link_corrupt": c,
+        "corrupt_frac": jnp.sum(c) / delivered,
+    }

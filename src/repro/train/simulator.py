@@ -57,6 +57,16 @@ class SimulatorConfig:
     # drop-process model: a repro.channels spec string
     # ("ge:p_bad=0.3,burst=8", "trace:lam=8000,prio=0.8", ...) or a built
     # Channel; None = i.i.d. Bernoulli(drop_rate), the seed behaviour.
+    corruption: channels_lib.CorruptionSpec = None
+    # corruption process (DESIGN.md §17): a spec string over
+    # ("bitflip", "scale", "signflip", "collude") —
+    # e.g. "signflip:frac=0.1" or "collude:gamma=10" — composed onto the
+    # channel; None (with byzantine_frac 0) corrupts nothing,
+    # bit-identical to the seed.
+    byzantine_frac: float = 0.0
+    # fraction of colluding workers (⌊byzantine_frac·n⌋ lowest ids
+    # corrupt every packet they send); overlays the spec's own field and
+    # alone (corruption=None) selects the "collude" attack.
     n_servers: Optional[int] = None
     # parameter-server blocks s (DESIGN.md §10): the model is partitioned
     # into s blocks with round-robin worker owners; None = n_workers, the
@@ -132,7 +142,7 @@ class SimulatorConfig:
 
 def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool,
               masks=None, plan=None, recovery=None, ef_state=None,
-              late=None):
+              late=None, corruption=None, corrupt_masks=None):
     n = scfg.n_workers
     agg = scfg.aggregator
     use_ef = ef_state is not None
@@ -148,7 +158,8 @@ def _exchange(tree, key, scfg: SimulatorConfig, *, is_grad: bool,
         tree, key, scfg.drop_rate, n, mode=mode, masks=masks,
         s=scfg.n_servers, plan=plan, engine=scfg.engine,
         rs_dtype=jnp.dtype(scfg.exchange_dtype),
-        recovery=recovery, ef_state=ef_state, late=late)
+        recovery=recovery, ef_state=ef_state, late=late,
+        corruption=corruption, corrupt_masks=corrupt_masks)
 
 
 def resolve_wire(scfg) -> str:
@@ -267,7 +278,10 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
     exactly when ``scfg.recovery == "ef"`` on an rps aggregator (the
     residual is an extra stacked params-shaped leaf of step state,
     DESIGN.md §13); the ``staleness`` scalar (this round's late-packet
-    fraction, §15) exactly when ``scfg.schedule == "async"``.
+    fraction, §15) exactly when ``scfg.schedule == "async"``; the
+    ``corrupt_frac`` scalar (this round's corrupt-delivered packet
+    fraction, §17) exactly when the channel carries a corruption
+    process.
 
     ``telemetry`` (default ``scfg.telemetry``) appends the tapped stats
     dict (DESIGN.md §14): a trace-time collector installed around the
@@ -283,6 +297,12 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
     rps_agg = scfg.aggregator.startswith("rps")
     use_ef = rps_agg and scfg.recovery == "ef"
     async_mode = rps_agg and scfg.schedule == "async"
+    corruption = getattr(channel, "corruption", None) if rps_agg else None
+    if use_ef and corruption is not None:
+        raise ValueError(
+            "corruption with recovery='ef' is unsupported: the EF residual "
+            "telescopes an *honest* sender's codec error (DESIGN.md §17); "
+            "use a robust recovery (median/trimmed/clip) instead")
     telemetry = scfg.telemetry if telemetry is None else telemetry
     # §16: the EF residual is carried at rest in the state pack's EF
     # format; decode/encode happen inside the traced step, only on rounds
@@ -308,7 +328,9 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
 
         masks = None
         late = None
+        cmask = None
         staleness = jnp.float32(0)
+        corrupt_frac = jnp.float32(0)
         if rps_agg:     # channel time advances every step, exchange or not
             with jax.named_scope("rps.masks"):
                 if async_mode:  # per-bucket slack arbitration (§15)
@@ -320,6 +342,14 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
                 else:
                     rs, ag, ch_state_new = channel.sample(key, ch_state)
                 masks, ch_state = (rs, ag), ch_state_new
+                if corruption is not None:  # same key, tag-separated (§17)
+                    nb = rs.shape[0] if rs.ndim == 3 else None
+                    cmask = channel.sample_corruption(key, n_buckets=nb)
+        if corruption is not None and exchange:
+            # the step's contamination observable: the fraction of
+            # delivered packets that arrived wrong this round
+            corrupt_frac = counters_lib.corruption_stats(
+                cmask, masks[0])["corrupt_frac"].astype(jnp.float32)
         if async_mode and exchange:
             # the step's staleness observable: the fraction of offered
             # packets written off as late this round (0 on skipped steps
@@ -343,7 +373,8 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
             if exchange:
                 out = _exchange(grads, key, scfg, is_grad=True,
                                 masks=masks, plan=plan, recovery=recovery,
-                                ef_state=ef_in, late=late_x)
+                                ef_state=ef_in, late=late_x,
+                                corruption=corruption, corrupt_masks=cmask)
                 if use_ef:
                     grads, ef_new = out
                     ef_state = statepack_lib.pack_tree(
@@ -359,7 +390,8 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
             if exchange:
                 out = _exchange(params, key, scfg, is_grad=False,
                                 masks=masks, plan=plan, recovery=recovery,
-                                ef_state=ef_in, late=late_x)
+                                ef_state=ef_in, late=late_x,
+                                corruption=corruption, corrupt_masks=cmask)
                 if use_ef:
                     params, ef_new = out
                     ef_state = statepack_lib.pack_tree(
@@ -375,7 +407,8 @@ def make_sim_step(loss_fn: Callable, scfg: SimulatorConfig, channel,
             taps_lib.emit("param_norm", counters_lib.global_norm(params))
         base = (params, opt_state, loss / n, consensus, ch_state)
         return base + ((ef_state,) if use_ef else ()) \
-            + ((staleness,) if async_mode else ())
+            + ((staleness,) if async_mode else ()) \
+            + ((corrupt_frac,) if corruption is not None else ())
 
     if telemetry:
         def step_fn(params, opt_state, batch, key, lr, ch_state,
@@ -434,9 +467,13 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
     # the drop process: channels are sampled inside the jitted step with the
     # shared per-step key; their state (e.g. Gilbert–Elliott link states,
     # trace cursor) is carried across steps alongside params/opt_state
-    channel = channels_lib.make_channel(scfg.channel, n, scfg.drop_rate,
-                                        s=scfg.n_servers)
+    channel = channels_lib.make_channel(
+        scfg.channel, n, scfg.drop_rate, s=scfg.n_servers,
+        corruption=channels_lib.make_corruption(
+            getattr(scfg, "corruption", None),
+            getattr(scfg, "byzantine_frac", 0.0) or None))
     rps_agg = scfg.aggregator.startswith("rps")
+    corrupting = rps_agg and getattr(channel, "corruption", None) is not None
     use_ef = rps_agg and scfg.recovery == "ef"
     ch_state = channel.init_state(jax.random.fold_in(key, 0x636831)) \
         if rps_agg else None
@@ -481,12 +518,15 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
          "staleness": [],
          # the §15 staleness axis: per-eval-step late-packet fraction
          # (always present; stays empty for sync schedules)
+         "corrupt_frac": [],
+         # the §17 contamination axis: per-eval-step corrupt-delivered
+         # fraction (stays empty without a corruption process)
          "channel": repr(channel),
          "channel_effective_p": channel.effective_p() if rps_agg
          else 0.0,
          "exchange_plan": plan.describe() if plan is not None
          else None})
-    pending = []        # (t, lr, loss, consensus, late, stats) — post-loop
+    pending = []    # (t, lr, loss, consensus, late, corrupt, stats) — post-loop
     for t in range(start_step, scfg.steps):
         kt = jax.random.fold_in(key, t)
         lr = scfg.lr * min(1.0, (t + 1) / max(scfg.warmup, 1))
@@ -498,6 +538,10 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
         if use_tel:
             stats = outs[-1]
             outs = outs[:-1]
+        corrupt_frac = None
+        if corrupting:
+            corrupt_frac = outs[-1]
+            outs = outs[:-1]
         staleness = None
         if async_mode:
             staleness = outs[-1]
@@ -508,21 +552,27 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
         else:
             params, opt_state, loss, consensus, ch_state = outs
         if use_tel:
-            pending.append((t, lr, loss, consensus, staleness, stats))
+            pending.append((t, lr, loss, consensus, staleness,
+                            corrupt_frac, stats))
         if t % scfg.eval_every == 0 or t == scfg.steps - 1:
             history["step"].append(t)
             history["loss"].append(float(loss))
             history["consensus"].append(float(consensus))
             if async_mode:
                 history["staleness"].append(float(staleness))
+            if corrupting:
+                history["corrupt_frac"].append(float(corrupt_frac))
             if eval_fn is not None:
                 mean_params = jax.tree.map(lambda x: jnp.mean(x, 0), params)
                 history["eval"].append(float(eval_fn(mean_params)))
     if use_tel:
         with reg.span("record_drain", steps=len(pending)):
-            for t, lr, loss, consensus, staleness, stats in pending:
+            for (t, lr, loss, consensus, staleness, corrupt_frac,
+                 stats) in pending:
                 extra = {} if staleness is None \
                     else {"staleness": float(staleness)}
+                if corrupt_frac is not None:
+                    extra["corrupt_frac"] = float(corrupt_frac)
                 reg.record_step(t, stats, loss=loss, consensus=consensus,
                                 lr=lr, **extra)
                 if staleness is not None:
@@ -530,6 +580,11 @@ def run_simulation(loss_fn: Callable, init_fn: Callable,
                     # the schema gate covers these events
                     reg.trace.counter("lateness",
                                       {"late_frac": float(staleness)})
+                if corrupt_frac is not None:
+                    # contamination counter track (§17) — the schema gate
+                    # covers these events too
+                    reg.trace.counter("corruption",
+                                      {"corrupt_frac": float(corrupt_frac)})
         history.records = list(reg.memory.records)
         history.summary = reg.summary()
     history["final_loss"] = history["loss"][-1]

@@ -68,6 +68,19 @@ class TrainConfig:
                                            # signature. A channel spec makes
                                            # train_step carry channel state:
                                            # see make_train_setup.
+    corruption: Optional[str] = None       # corruption process (DESIGN.md
+                                           # §17): a spec over
+                                           # bitflip/scale/signflip/collude
+                                           # ("signflip:frac=0.1",
+                                           # "collude:gamma=10") composed
+                                           # onto the channel; None (with
+                                           # byzantine_frac 0) corrupts
+                                           # nothing — bit-identical.
+    byzantine_frac: float = 0.0            # fraction of colluding workers
+                                           # (⌊byzantine_frac·n⌋ lowest
+                                           # ids corrupt every packet);
+                                           # alone it selects the
+                                           # "collude" attack.
     n_servers: Optional[int] = None        # parameter-server blocks s
                                            # (DESIGN.md §10); None = n_rps,
                                            # the paper's square layout
@@ -229,8 +242,11 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
     n_servers = n_rps if tcfg.n_servers is None else int(tcfg.n_servers)
     pack = statepack_lib.make_state_pack(getattr(tcfg, "state_pack", None))
     opt = make_optimizer(tcfg.optimizer, state_pack=pack.name)
-    channel = channels_lib.make_channel(tcfg.channel, n_rps, tcfg.drop_rate,
-                                        s=tcfg.n_servers)
+    channel = channels_lib.make_channel(
+        tcfg.channel, n_rps, tcfg.drop_rate, s=tcfg.n_servers,
+        corruption=channels_lib.make_corruption(
+            getattr(tcfg, "corruption", None),
+            getattr(tcfg, "byzantine_frac", 0.0) or None))
     # only rps aggregators consume masks (same gate as the simulator's
     # rps_agg) — a channel configured alongside an allreduce/none baseline
     # keeps the seed 5-arg signature and samples nothing
@@ -238,6 +254,12 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
     stateful = tcfg.channel is not None and rps_agg
     use_ef = rps_agg and tcfg.recovery == "ef"
     async_mode = rps_agg and tcfg.schedule == "async"
+    corruption = getattr(channel, "corruption", None) if rps_agg else None
+    if use_ef and corruption is not None:
+        raise ValueError(
+            "corruption with recovery='ef' is unsupported: the EF residual "
+            "telescopes an *honest* sender's codec error (DESIGN.md §17); "
+            "use a robust recovery (median/trimmed/clip) instead")
     # the scale divisor prices the channel's stationary marginal, not the
     # raw drop_rate knob (they differ for GE/hetero/trace channels)
     recovery = wire_lib.make_recovery(
@@ -285,7 +307,7 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
                                    fsdp_axis=fsdp_axis, stacked=True)
         return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs), pspecs
 
-    def _exchange(tree, key, mode=None, masks=None, ef=None):
+    def _exchange(tree, key, mode=None, masks=None, ef=None, cmask=None):
         """Drop-masked exchange over the RPS axes (stacked worker dim 0).
 
         ``mode=None`` derives the exchange mode from the aggregator (None
@@ -296,7 +318,9 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
         region; None keeps the in-body draw the plan prescribes,
         bit-identical to the seed path for the default per-leaf plan.
         ``ef`` is the EF residual (params-shaped, params-sharded); when
-        given the return is ``(tree, new_ef)``.
+        given the return is ``(tree, new_ef)``. ``cmask`` is the
+        replicated step-level corruption-mask draw (§17) consumed
+        alongside the channel's corruption process.
 
         Fully-manual shard_map over *all* mesh axes with the param
         PartitionSpecs as in_specs: every leaf arrives as its local shard,
@@ -315,11 +339,13 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
             mode = ("model" if _is_model_mode(tcfg.aggregator)
                     else "grad_renorm")
         has_masks, has_ef = masks is not None, ef is not None
+        has_cmask = cmask is not None
 
         def body(t, key, *rest):
             it = iter(rest)
             m = next(it) if has_masks else None
             e = next(it) if has_ef else None
+            cm = next(it) if has_cmask else None
             ring_ids = None
             if rps_lib.resolve_engine(tcfg.engine) == "ring":
                 # the fused kernel RDMAs by *logical* device id — derive
@@ -333,7 +359,8 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
                 t, key, tcfg.drop_rate, rps_axes, plan=plan, mode=mode,
                 masks=m, rs_dtype=jnp.dtype(tcfg.exchange_dtype),
                 engine=tcfg.engine, ring_ids=ring_ids,
-                recovery=recovery, ef_state=e)
+                recovery=recovery, ef_state=e,
+                corruption=corruption, corrupt_masks=cm)
 
         args = [tree, key]
         in_specs = [especs, P()]
@@ -343,6 +370,11 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
         if has_ef:
             args.append(ef)
             in_specs.append(especs)
+        if has_cmask:
+            # replicated like the drop masks — every device holds the
+            # globally-known corruption draw
+            args.append(cmask)
+            in_specs.append(P())
         out_specs = (especs, especs) if has_ef else especs
         fn = _shard_map(body, mesh, tuple(in_specs), out_specs,
                         set(mesh.axis_names))
@@ -425,6 +457,17 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
             else:
                 rs, ag, ch_state = channel.sample(key, ch_state)
             masks = (rs, ag)
+        cmask = None
+        if corruption is not None:
+            # corruption-mask draw at step level, same shared key as the
+            # drop masks (tag-separated domains, §17); replicated into
+            # the manual region like the masks themselves
+            nb = None
+            if masks is not None and masks[0].ndim == 3:
+                nb = int(masks[0].shape[0])   # match the packet draw
+            elif plan is not None and plan.per_bucket_masks:
+                nb = plan.n_buckets
+            cmask = channel.sample_corruption(key, n_buckets=nb)
 
         tel_stats = None
         if tcfg.telemetry and rps_agg and n_rps > 1:
@@ -450,15 +493,20 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
                 # the exchange consumed
                 tel_stats.update(counters_lib.staleness_stats(
                     late["rs"], late["ag"]))
+            if cmask is not None:
+                # §17 contamination bundle from the same corruption draw
+                # the exchange consumed
+                tel_stats.update(counters_lib.corruption_stats(
+                    cmask, rs_t))
             if tcfg.exchange_every > 1:
                 # skipped rounds consume no masks: zero delivered AND
                 # offered so the estimator skips them (offered == 0);
-                # lateness likewise — nothing was shipped
+                # lateness/corruption likewise — nothing was shipped
                 live = jnp.asarray(step % tcfg.exchange_every == 0,
                                    jnp.int32)
                 for k in ("rs_link_delivered", "ag_link_delivered",
                           "link_offered", "rs_link_late", "ag_link_late",
-                          "late_frac"):
+                          "late_frac", "rs_link_corrupt", "corrupt_frac"):
                     if k in tel_stats:
                         tel_stats[k] = tel_stats[k] * live
 
@@ -475,7 +523,7 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
             # the packed residual through bitwise untouched, never
             # re-quantize it
             e = statepack_lib.unpack_tree(e_packed, pack.ef_format)
-            out, e_new = _exchange(tree, key, mode, masks, e)
+            out, e_new = _exchange(tree, key, mode, masks, e, cmask)
             return out, statepack_lib.pack_tree(e_new, pack.ef_format,
                                                 key=ef_key, tap="ef")
 
@@ -492,19 +540,21 @@ def make_train_setup(model: Model, cfg: ArchConfig, tcfg: TrainConfig,
                 else:
                     new_params = jax.lax.cond(
                         step % tcfg.exchange_every == 0,
-                        lambda t: _exchange(t, key, None, masks),
+                        lambda t: _exchange(t, key, None, masks,
+                                            cmask=cmask),
                         lambda t: t, new_params)
             elif use_ef:
                 new_params, ef_state = exchange_ef(new_params, None, ef)
             else:
-                new_params = _exchange(new_params, key, None, masks)
+                new_params = _exchange(new_params, key, None, masks,
+                                       cmask=cmask)
         else:
             # gradient exchange, then step
             gmode = "grad_renorm" if tcfg.aggregator == "rps_grad" else None
             if use_ef:
                 grads, ef_state = exchange_ef(grads, gmode, ef)
             else:
-                grads = _exchange(grads, key, gmode, masks)
+                grads = _exchange(grads, key, gmode, masks, cmask=cmask)
             new_params, opt_state = opt.update(grads, opt_state, params, lr,
                                                key=opt_key)
         mloss = loss / n_rps

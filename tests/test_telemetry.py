@@ -455,6 +455,33 @@ def test_trace_schema_covers_async_lateness(tmp_path):
     assert all(e["ph"] == "C" and "late_frac" in e["args"] for e in lat)
 
 
+def test_trace_schema_covers_corruption_counters(tmp_path):
+    """CI trace gate: a corrupted run's contamination counters land in a
+    schema-valid Chrome trace and the step records carry the §17 fields
+    — and the drift monitor keeps binding the *inner* channel's delivery
+    expectations (corruption changes what arrives wrong, never what
+    arrives), so a corrupted run never false-flags delivery drift."""
+    loss_fn, init_fn, batch_fn = _problem(4)
+    reg = telemetry_lib.Telemetry(out_dir=str(tmp_path))
+    h = run_simulation(loss_fn, init_fn, batch_fn, SimulatorConfig(
+        n_workers=4, aggregator="rps_model", lr=0.2, warmup=2, steps=8,
+        eval_every=1, n_buckets=2, drop_rate=0.2, byzantine_frac=0.25,
+        recovery="median"), telemetry=reg)
+    assert {"rs_link_corrupt", "corrupt_frac"} <= set(h.records[0])
+    # one colluder (worker 0) of 4, every offered packet corrupted
+    assert h.records[0]["rs_link_corrupt"][1:] == [0, 0, 0]
+    reg.finalize()
+    path = os.path.join(str(tmp_path), "trace.json")
+    with open(path) as f:
+        obj = json.load(f)
+    assert validate_chrome_trace(obj) == []
+    cor = [e for e in obj["traceEvents"] if e.get("name") == "corruption"]
+    assert len(cor) == 8
+    assert all(e["ph"] == "C" and "corrupt_frac" in e["args"] for e in cor)
+    # drift monitor: the wrapped channel exposes the inner expectations
+    assert reg.meta["p"] == pytest.approx(0.2)
+
+
 def test_async_drift_monitor_uses_async_marginal():
     """bind() must shift the expected per-link p to the mean per-bucket
     async rate for a deadline-arbitrated async plan: the estimators see
