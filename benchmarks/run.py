@@ -32,8 +32,8 @@ def main() -> None:
     from benchmarks import (alpha, async_bench, channels_bench,
                             colocation, convergence, exchange_bench,
                             grad_vs_model, kernels_bench, ring_bench,
-                            robust_bench, server_sweep, speedup,
-                            state_bench, wire_bench)
+                            robust_bench, serve_bench, server_sweep,
+                            speedup, state_bench, wire_bench)
     all_benches = {
         "alpha": alpha.run,               # Figs 2/3
         "convergence": convergence.run,   # Fig 4
@@ -49,6 +49,7 @@ def main() -> None:
         "async": async_bench.run,         # DESIGN §15 overlap engine
         "state": state_bench.run,         # DESIGN §16 packed trainer state
         "robust": robust_bench.run,       # DESIGN §17 corruption x recovery
+        "serve": serve_bench.run,         # DESIGN §18 drop-tolerant serving
     }
     reg = None
     if args.telemetry or args.telemetry_dir:

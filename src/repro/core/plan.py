@@ -545,3 +545,24 @@ def per_leaf_plan(tree: Any, n: int, s: Optional[int] = None, *,
                         treedef=treedef, engine=str(engine),
                         wire=wire, recovery=recovery,
                         schedule=schedule, ready_ms=ready)
+
+
+def decode_plan(d_model: int, batch: int, n: int,
+                s: Optional[int] = None, *, dtype=jnp.float32,
+                engine: str = "xla", wire: str = "f32",
+                recovery: str = "renorm") -> ExchangePlan:
+    """Decode-shaped plan for serving-time activation collectives
+    (DESIGN.md §18): one bucket over a single ``(d_model, batch)`` leaf —
+    one decode token's layer output for the whole in-flight batch,
+    **model-dim major** so the s server blocks slice ``d_model``. Each
+    wire packet therefore carries a contiguous d-slice shared across
+    requests, which is how a tensor-parallel all-reduce packetises on a
+    real fabric: losing a packet degrades one feature slice of *every*
+    request slightly rather than one request completely. Built once per
+    engine at setup (the decode shape is static); the per-site drop masks
+    come from ``Channel.sample_packets(key, state, n_buckets=2·L)``
+    drawn every decode step."""
+    leaf = jax.ShapeDtypeStruct((int(d_model), int(batch)),
+                                jnp.dtype(dtype))
+    return make_plan(leaf, n, s, engine=engine, wire=wire,
+                     recovery=recovery)

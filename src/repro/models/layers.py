@@ -228,18 +228,27 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, ring: bool = Fals
     """One-token attention vs cache.
 
     q: (B,1,h,hd); caches: (B,C,kv,hd). `pos` is the absolute position of the
-    new token. If `ring`, the cache is a ring buffer of size C=window and all
-    slots written so far are valid; otherwise slots with index<=pos are valid.
+    new token — a scalar (the contiguous serving path, all requests in
+    lock-step) or a (B,) vector (the paged path, per-request positions). If
+    `ring`, the cache is a ring buffer of size C=window and all slots written
+    so far are valid; otherwise slots with index<=pos are valid.
     """
     B, C, kvh, hd = k_cache.shape
     idx = jnp.arange(C)
+    pos = jnp.asarray(pos)
     if ring:
         valid = idx < jnp.minimum(pos + 1, C)        # ring fully valid once warm
-    else:
+        mask = valid.reshape(1, 1, 1, 1, C)
+    elif pos.ndim == 0:
         valid = idx <= pos
         if window is not None:
             valid = valid & (idx > pos - window)
-    mask = valid.reshape(1, 1, 1, 1, C)
+        mask = valid.reshape(1, 1, 1, 1, C)
+    else:                                            # per-request positions
+        valid = idx[None, :] <= pos[:, None]
+        if window is not None:
+            valid = valid & (idx[None, :] > pos[:, None] - window)
+        mask = valid.reshape(B, 1, 1, 1, C)
     g = q.shape[2] // kvh
     qr = q.reshape(B, 1, kvh, g, hd)
     logits = jnp.einsum("bqkgh,bskh->bkgqs", qr, k_cache).astype(jnp.float32)
@@ -293,6 +302,64 @@ def attention_decode(p, x, k_cache, v_cache, pos, *, cfg: ArchConfig,
     out = decode_attention(q, k_cache, v_cache, pos, window=window, ring=ring)
     out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
     return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV attention (DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+def paged_gather(pool, bt, page: int):
+    """Reconstruct the per-request contiguous cache view from the slot pool.
+
+    pool: (n_slots, kvh, hd) flat token slots; bt: (B, P) int32 block table.
+    Returns (B, P·page, kvh, hd) where row i is the slot holding absolute
+    position i of that request — bit-identical to the contiguous cache when
+    the request's blocks were allocated in order (pinned by test). Unwritten
+    positions read whatever the pointed-to slot holds (block 0 = the null
+    block for unallocated pages); the decode mask hides them.
+    """
+    B, P = bt.shape
+    slots = bt[:, :, None] * page + jnp.arange(page)[None, None, :]
+    return pool[slots.reshape(B, P * page)]
+
+
+def paged_write(pool, new, bt, pos, page: int):
+    """Scatter one token's K or V into each request's slot at `pos`.
+
+    new: (B, 1, kvh, hd); pos: (B,) absolute positions. Inactive lanes point
+    at the null block (id 0) and harmlessly overwrite its slots; active
+    lanes own their blocks exclusively, so the scatter indices never collide
+    across live requests.
+    """
+    B = bt.shape[0]
+    flat = bt[jnp.arange(B), pos // page] * page + pos % page
+    return pool.at[flat].set(new[:, 0].astype(pool.dtype))
+
+
+def attention_decode_paged(p, x, pool_k, pool_v, pos, *, bt, page: int,
+                           cfg: ArchConfig, window=None, tp=None,
+                           tp_masks=None, site=None, key=None):
+    """One-step decode against the paged pool: write the new token's K/V
+    through the block table, gather the contiguous view, attend with
+    per-request positions. `tp` (a serve.tp.TPContext) reroutes the output
+    projection through the drop-masked exchange — `site` indexes this
+    layer's collective's packet masks in `tp_masks`. Returns
+    (out, new_pool_k, new_pool_v)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+    pool_k = paged_write(pool_k, k, bt, pos, page)
+    pool_v = paged_write(pool_v, v, bt, pos, page)
+    kc = paged_gather(pool_k, bt, page)
+    vc = paged_gather(pool_v, bt, page)
+    out = decode_attention(q, kc, vc, pos, window=window, ring=False)
+    if tp is None:
+        out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    else:
+        out = tp.combine_attn(out, p["wo"], tp_masks, site, key)
+    return out, pool_k, pool_v
 
 
 # ---------------------------------------------------------------------------

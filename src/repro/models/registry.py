@@ -41,6 +41,9 @@ class Model:
     prefill: Callable[..., Any]
     decode_step: Callable[..., Any]
     init_cache: Callable[..., Any]
+    # paged serving path (DESIGN.md §18)
+    decode_paged: Callable[..., Any] = None
+    init_paged: Callable[..., Any] = None
 
 
 def _make_specs(kinds: List[str]) -> Dict[str, S.KindSpec]:
@@ -127,10 +130,10 @@ def build_model(cfg: ArchConfig, *, grouped: bool | None = None,
         total = nll + aux_loss
         return total, {"nll": nll, "aux_loss": aux_loss}
 
-    def prefill(params, inputs, max_len=None):
+    def prefill(params, inputs, max_len=None, paged=False):
         x = _embed_train(params, inputs)
         aux = _aux(params, inputs, "prefill")
-        aux = {**aux, "max_len": max_len}
+        aux = {**aux, "max_len": max_len, "paged_prefill": paged}
         x, cache = S.apply_stack(params["layers"], x, aux, cfg, kinds, specs,
                                  mode="prefill", grouped=grouped)
         last = L.lm_head(params["embed"], x[:, -1:],
@@ -150,5 +153,28 @@ def build_model(cfg: ArchConfig, *, grouped: bool | None = None,
     def init_cache(batch_size: int, max_len: int):
         return S.init_cache(cfg, kinds, specs, batch_size, max_len)
 
+    def decode_paged(params, pool, inputs, pos, bt, *, page, masks=None,
+                     tp=None, key=None):
+        """One decode step against the paged slot pool (DESIGN.md §18).
+
+        pos: (B,) per-request absolute positions; bt: (B, P) block table.
+        `tp`/`masks`/`key` thread the drop-masked tensor-parallel hooks
+        (serve.tp) into every layer's output-projection collectives; all
+        None = the dense path, bit-identical at p=0 by construction.
+        """
+        x = L.embed(params["embed"], inputs["token"])
+        aux = {"paged": {"bt": bt, "page": page, "masks": masks, "tp": tp,
+                         "key": key}}
+        x, pool = S.apply_stack(params["layers"], x, aux, cfg, kinds, specs,
+                                mode="decode_paged", grouped=grouped,
+                                cache=pool, pos=pos)
+        logits = L.lm_head(params["embed"], x,
+                           cfg.vocab_size)[:, 0, :cfg.vocab_size]
+        return logits, pool
+
+    def init_paged(n_slots: int):
+        return S.init_paged(cfg, kinds, specs, n_slots)
+
     return Model(cfg, kinds, specs, init, loss, prefill, decode_step,
-                 init_cache)
+                 init_cache, decode_paged=decode_paged,
+                 init_paged=init_paged)

@@ -41,6 +41,15 @@ class KindSpec:
     decode: Callable[..., Any]                 # (p, x, cache_l, pos, aux, cfg)
                                                #   -> (x, new_cache_l)
     init_cache: Callable[..., Any]             # (cfg, batch, max_len) -> pytree
+    # paged serving path (DESIGN.md §18) — optional; kinds without it
+    # cannot serve through the continuous-batching engine
+    decode_paged: Optional[Callable[..., Any]] = None
+    # (p, x, cache_l, pos, aux, cfg) -> (x, new_cache_l); cache_l is this
+    # layer's slice of the slot pool: {"k"/"v": (n_slots, kvh, hd),
+    # "layer_id": i32 scalar}; pos is (B,) per-request positions and
+    # aux["paged"] carries the block table / page size / exchange hooks
+    paged_spec: Optional[Callable[..., Any]] = None
+    # (cfg, n_slots) -> per-layer pool pytree
 
 
 def group_layout(kinds: Sequence[str]) -> Dict[str, List[int]]:
@@ -118,10 +127,14 @@ def _scan_group(spec: KindSpec, stacked, x, aux, cfg, mode: str,
             return h, cache_l
         x, cache_stack = jax.lax.scan(body, x, stacked)
         return x, cache_stack
-    # decode
+    # decode / decode_paged
+    step = spec.decode if mode == "decode" else spec.decode_paged
+    if step is None:
+        raise ValueError(f"kind {spec.name!r} has no paged decode path")
+
     def body(h, pc):
         p, cache_l = pc
-        h, new_cache = spec.decode(p, h, cache_l, pos, aux, cfg)
+        h, new_cache = step(p, h, cache_l, pos, aux, cfg)
         return h, new_cache
     x, new_cache = jax.lax.scan(body, x, (stacked, cache))
     return x, new_cache
@@ -173,8 +186,11 @@ def apply_stack(params, x, aux, cfg: ArchConfig, kinds: Sequence[str],
             x, c = spec.prefill(p, x, aux, cfg)
             caches[kname].append(c)
         else:
+            step = spec.decode if mode == "decode" else spec.decode_paged
+            if step is None:
+                raise ValueError(f"kind {kname!r} has no paged decode path")
             cache_l = jax.tree.map(lambda a, i=i: a[i], cache[kname])
-            x, c = spec.decode(p, x, cache_l, pos, aux, cfg)
+            x, c = step(p, x, cache_l, pos, aux, cfg)
             caches[kname].append(c)
     if mode == "train":
         return x, aux_acc
@@ -192,4 +208,28 @@ def init_cache(cfg: ArchConfig, kinds: Sequence[str],
         c = specs[kname].init_cache(cfg, batch, max_len)
         out[kname] = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (len(idxs),) + a.shape).copy(), c)
+    return out
+
+
+def init_paged(cfg: ArchConfig, kinds: Sequence[str],
+               specs: Dict[str, KindSpec], n_slots: int):
+    """{kind: stacked slot pool} for the paged serving path (DESIGN.md §18).
+
+    Each kind's pool carries a ``"layer_id"`` leaf — the faithful layer
+    index of every group member. The grouped decode scans over the cache,
+    so per-layer data (which collective site's drop masks apply) must ride
+    inside it: ``aux`` is closed over by the scan body and cannot vary per
+    layer.
+    """
+    layout = group_layout(kinds)
+    out = {}
+    for kname, idxs in layout.items():
+        spec = specs[kname]
+        if spec.paged_spec is None:
+            raise ValueError(f"kind {kname!r} has no paged cache spec")
+        c = spec.paged_spec(cfg, n_slots)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (len(idxs),) + a.shape).copy(), c)
+        stacked["layer_id"] = jnp.asarray(idxs, jnp.int32)
+        out[kname] = stacked
     return out

@@ -58,6 +58,11 @@ def make_dense_kind(kind_name: str) -> KindSpec:
                                     cfg=cfg, window=window, blocked=True)
         x = x + h
         x, _ = _ffn(p, x, cfg)
+        if aux.get("paged_prefill"):
+            # paged cache: keep every position untrimmed/unpadded — the
+            # engine scatters rows [0, S) into the request's slots and the
+            # decode mask applies any window over absolute positions
+            return x, {"k": k, "v": v}
         if window is not None:                    # ring buffer: keep last w
             k, v = k[:, -window:], v[:, -window:]
         else:
@@ -77,13 +82,39 @@ def make_dense_kind(kind_name: str) -> KindSpec:
         x, _ = _ffn(p, x, cfg)
         return x, {"k": kc, "v": vc}
 
+    def decode_paged(p, x, cache_l, pos, aux, cfg: ArchConfig):
+        pg = aux["paged"]
+        tp = pg.get("tp")
+        li = cache_l["layer_id"]
+        h, kc, vc = L.attention_decode_paged(
+            p["attn"], L.rms_norm(x, p["ln1"]), cache_l["k"], cache_l["v"],
+            pos, bt=pg["bt"], page=pg["page"], cfg=cfg, window=window,
+            tp=tp, tp_masks=pg.get("masks"), site=2 * li, key=pg.get("key"))
+        x = x + h
+        if tp is None or moe:
+            # MoE FFN keeps the dense expert path: expert dispatch is an
+            # all-to-all, not an RS+AG — its loss semantics land with the
+            # expert-parallel leg (ROADMAP item 2)
+            x, _ = _ffn(p, x, cfg)
+        else:
+            out = tp.combine_mlp(p["mlp"], L.rms_norm(x, p["ln2"]),
+                                 pg.get("masks"), 2 * li + 1, pg.get("key"))
+            x = x + out
+        return x, {"k": kc, "v": vc, "layer_id": li}
+
     def cache_spec(cfg: ArchConfig, batch: int, max_len: int):
         C = min(window, max_len) if window is not None else max_len
         shape = (batch, C, cfg.n_kv_heads, cfg.hd)
         return {"k": jnp.zeros(shape, cfg.jnp_dtype),
                 "v": jnp.zeros(shape, cfg.jnp_dtype)}
 
-    return KindSpec(kind_name, init, train, prefill, decode, cache_spec)
+    def paged_spec(cfg: ArchConfig, n_slots: int):
+        shape = (n_slots, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, cfg.jnp_dtype),
+                "v": jnp.zeros(shape, cfg.jnp_dtype)}
+
+    return KindSpec(kind_name, init, train, prefill, decode, cache_spec,
+                    decode_paged=decode_paged, paged_spec=paged_spec)
 
 
 def dense_kind_sequence(cfg: ArchConfig) -> list[str]:

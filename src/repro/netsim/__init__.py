@@ -1,2 +1,3 @@
 from repro.netsim.sim import (  # noqa: F401
-    NetConfig, cost_reduction_curve, export_trace, simulate, speedup_curve)
+    NetConfig, cost_reduction_curve, export_trace, request_trace, simulate,
+    speedup_curve)

@@ -196,3 +196,30 @@ def cost_reduction_curve(target_ms: float,
     for r in out:
         r["cost_rel"] = base / max(r["lam_max"], 1e-9)
     return out
+
+
+def request_trace(lam: float, cfg: NetConfig = NetConfig(), *,
+                  n_requests: Optional[int] = None,
+                  prompt_lens: Sequence[int] = (8, 16, 32),
+                  max_new: Sequence[int] = (4, 8, 16, 32),
+                  seed: Optional[int] = None
+                  ) -> List[tuple]:
+    """Serving load generator: (arrival_ms, prompt_len, max_new) tuples.
+
+    Arrivals follow the same Poisson process as :func:`simulate`'s web
+    traffic (rate λ requests/s over ``cfg.sim_s`` of simulated time);
+    prompt and generation lengths are drawn uniformly from the given sets —
+    the mixed-length workload the serving bench feeds to
+    ``serve.ContinuousEngine`` via ``serve.make_requests``."""
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    ticks = int(cfg.sim_s / cfg.tick_s)
+    arrivals = rng.poisson(lam * cfg.tick_s, ticks)
+    out: List[tuple] = []
+    for t in range(ticks):
+        for _ in range(int(arrivals[t])):
+            out.append((t * cfg.tick_s * 1e3,
+                        int(rng.choice(prompt_lens)),
+                        int(rng.choice(max_new))))
+            if n_requests is not None and len(out) >= n_requests:
+                return out
+    return out

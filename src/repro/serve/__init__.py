@@ -1,1 +1,7 @@
-from repro.serve.engine import ServeEngine, make_serve_steps  # noqa: F401
+from repro.serve.engine import (ContinuousEngine, ServeEngine,  # noqa: F401
+                                ServeReport, make_requests,
+                                make_serve_steps)
+from repro.serve.kvcache import (BlockAllocator, PagedCache,  # noqa: F401
+                                 n_pages)
+from repro.serve.scheduler import Request, Scheduler  # noqa: F401
+from repro.serve.tp import TPDecodeConfig, make_tp_context  # noqa: F401

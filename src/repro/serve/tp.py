@@ -1,0 +1,164 @@
+"""Drop-masked tensor-parallel decode (DESIGN.md §18).
+
+Tensor parallelism splits every output projection (attention ``wo`` over
+heads, MLP ``wo`` over the hidden dim) across ``n`` workers; each worker
+holds a partial sum of the layer output and the layer ends in an
+all-reduce. On a lossy interconnect that all-reduce is exactly the paper's
+exchange with *activations* as the payload: feed ``n · partial_i`` as
+worker i's "model" into the RS+AG round and the renormalised block average
+(Algorithm 1) yields
+
+    out_j  =  (n / |delivered_j|) · Σ_{i ∈ delivered_j} partial_i
+
+per server block j — an unbiased-under-renorm estimate of the true sum —
+while a worker that misses block j's broadcast falls back to its own
+``n · partial_i`` (the mode="model" AG semantics). The wire layout comes
+from a decode-shaped :class:`~repro.core.plan.ExchangePlan`
+(:func:`repro.core.plan.decode_plan`): the activation is transposed to
+``(d_model, batch)`` so server blocks slice the *model* dim — every packet
+carries a d-slice for the whole in-flight batch, matching how a TP
+all-reduce packetises on a real fabric.
+
+Each transformer layer has two collective *sites* (attention out-proj,
+MLP out-proj): site ``2·layer`` and ``2·layer+1``. The serving engine
+draws one ``Channel.sample_packets(key, state, n_buckets=2·L)`` per decode
+step, so per-packet channels (Bernoulli) give i.i.d. per-site fates while
+the :class:`~repro.channels.deadline.DeadlineChannel` — the tail-latency
+model — fails a straggler's packets at *every* site of the step at once.
+
+p = 0 bit-identity is **structural**: with no channel and p = 0 the engine
+passes ``tp=None`` and the layers run today's dense einsum untouched (the
+same gate PR 9 uses for the inert corruption wrap). A split-k partial sum
+could never be bitwise equal to the unsplit einsum, so the dense path is
+not re-derived from this one — it is simply not entered.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.channels.registry import make_channel
+from repro.core import plan as plan_lib
+from repro.core import rps as rps_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TPDecodeConfig:
+    """CLI-facing knobs for the drop-masked TP decode path."""
+    n_shards: int = 4
+    p: float = 0.0
+    channel: Optional[str] = None        # channels.registry spec string
+    s: Optional[int] = None              # server blocks (default n_shards)
+    wire: str = "f32"                    # RS-leg codec (DESIGN.md §13)
+    recovery: str = "renorm"             # renorm (Alg. 1) / scale
+    engine: str = "xla"                  # global-view lowering (§12)
+    receiver: int = 0                    # worker whose consensus is served
+
+    @property
+    def active(self) -> bool:
+        """False = the structural p=0 gate: no exchange is built and the
+        dense decode path runs bit-identically to today's."""
+        return self.channel is not None or self.p > 0.0
+
+
+class TPContext:
+    """Per-engine TP state: the activation ExchangePlan (built once for the
+    static (d_model, batch) decode shape) plus the combine closures the
+    model layers call. Closed over by the jitted decode round — never a
+    traced argument."""
+
+    def __init__(self, cfg: TPDecodeConfig, *, d_model: int, batch: int,
+                 n_heads: int, d_ff: int, n_layers: int):
+        n = int(cfg.n_shards)
+        if n < 2:
+            raise ValueError(f"n_shards={n} must be >= 2")
+        if n_heads % n or d_ff % n:
+            raise ValueError(
+                f"n_shards={n} must divide n_heads={n_heads} and "
+                f"d_ff={d_ff} (head- and hidden-dim sharding)")
+        if cfg.recovery not in ("renorm", "scale"):
+            raise ValueError(
+                f"recovery={cfg.recovery!r}: decode activations are "
+                f"stateless — EF residuals and grad-mode recoveries do "
+                f"not apply; use 'renorm' or 'scale'")
+        self.cfg = cfg
+        self.n = n
+        self.n_sites = 2 * int(n_layers)
+        self.channel = (make_channel(cfg.channel, n, cfg.p, s=cfg.s)
+                        if cfg.channel is not None
+                        else make_channel("bernoulli", n, cfg.p, s=cfg.s))
+        self.p_eff = float(self.channel.effective_p())
+        self.plan = plan_lib.decode_plan(
+            d_model, batch, n, cfg.s, wire=cfg.wire, recovery=cfg.recovery,
+            engine=cfg.engine)
+        self.receiver = int(cfg.receiver)
+        if not 0 <= self.receiver < n:
+            raise ValueError(f"receiver={cfg.receiver} not in [0, {n})")
+
+    # -- mask sampling (called once per decode step, inside the scan) ------
+
+    def init_state(self, key):
+        return self.channel.init_state(key)
+
+    def sample_site_masks(self, key, state):
+        """(rs, ag) stacks of shape (n_sites, n, s) + advanced channel
+        state — one fate per collective site of this decode step."""
+        rs, ag, state = self.channel.sample_packets(key, state, self.n_sites)
+        return (rs, ag), state
+
+    # -- combines (called by models.layers / models.transformer) -----------
+
+    def _exchange(self, partials, masks, site, key):
+        """partials: (n, B, 1, d). Returns the receiver's consensus
+        (B, 1, d)."""
+        rs = masks[0][site]
+        ag = masks[1][site]
+        n = self.n
+        # n·partial_i as worker i's model copy; transpose so the plan's
+        # flat blocks slice the d dim (see module docstring)
+        y = jnp.transpose(partials[:, :, 0, :] * n, (0, 2, 1))  # (n, d, B)
+        out = rps_lib.rps_exchange_global(
+            y, key, self.p_eff, n, mode="model", masks=(rs, ag),
+            plan=self.plan, engine=self.cfg.engine)
+        return jnp.transpose(out[self.receiver], (1, 0))[:, None, :]
+
+    def combine_attn(self, out, wo, masks, site, key):
+        """Sharded attention output projection: heads split n ways, each
+        shard's einsum chunk is its partial sum. out: (B, 1, h, hd),
+        wo: (h, hd, d) -> (B, 1, d)."""
+        B, S, h, hd = out.shape
+        g = h // self.n
+        parts = jnp.einsum(
+            "bsnge,nged->nbsd",
+            out.reshape(B, S, self.n, g, hd),
+            wo.reshape(self.n, g, hd, wo.shape[-1]))
+        return self._exchange(parts, masks, site, key)
+
+    def combine_mlp(self, p_mlp, x, masks, site, key):
+        """Sharded gated MLP: the hidden dim splits n ways; each shard owns
+        its ff-slice of wi/wg/wo and contributes a partial of the output
+        contraction. x: (B, 1, d) normed input -> (B, 1, d)."""
+        h = jnp.einsum("bsd,df->bsf", x, p_mlp["wi"])
+        gte = jnp.einsum("bsd,df->bsf", x, p_mlp["wg"])
+        h = jax.nn.silu(gte) * h
+        B, S, ff = h.shape
+        f = ff // self.n
+        parts = jnp.einsum(
+            "bsnf,nfd->nbsd",
+            h.reshape(B, S, self.n, f),
+            p_mlp["wo"].reshape(self.n, f, p_mlp["wo"].shape[-1]))
+        return self._exchange(parts, masks, site, key)
+
+
+def make_tp_context(cfg: Optional[TPDecodeConfig], model_cfg,
+                    batch: int) -> Optional[TPContext]:
+    """None (the structural dense gate) unless the config asks for a lossy
+    wire — p > 0 or an explicit channel spec."""
+    if cfg is None or not cfg.active:
+        return None
+    return TPContext(cfg, d_model=model_cfg.d_model, batch=batch,
+                     n_heads=model_cfg.n_heads, d_ff=model_cfg.d_ff,
+                     n_layers=model_cfg.n_layers)

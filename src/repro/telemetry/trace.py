@@ -30,6 +30,25 @@ class TraceBuffer:
     def _now_us(self) -> float:
         return (time.perf_counter() - self._t0) * 1e6
 
+    def now_us(self) -> float:
+        """Buffer-clock timestamp for callers that record a span's start
+        and emit it later via :meth:`complete` (e.g. per-request serving
+        spans that straddle many decode rounds)."""
+        return self._now_us()
+
+    def complete(self, name: str, ts_us: float, dur_us: float,
+                 tid: int = 0, **args) -> None:
+        """Append a complete ("X") event with explicit start/duration —
+        the non-contextmanager form of :meth:`span`, for intervals whose
+        endpoints are separate host events (per-request serving latency:
+        admit → finish spans interleave across requests, so no ``with``
+        block can bracket one)."""
+        ev = {"name": name, "ph": "X", "ts": float(ts_us),
+              "dur": max(float(dur_us), 0.0), "pid": self.pid, "tid": tid}
+        if args:
+            ev["args"] = dict(args)
+        self.events.append(ev)
+
     @contextmanager
     def span(self, name: str, tid: int = 0, **args):
         """Time a host-side phase; also forwards the name to the JAX

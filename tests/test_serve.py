@@ -52,3 +52,13 @@ def test_generate_matches_repeated_prefill(engine):
         seq = jnp.concatenate(
             [seq, jnp.asarray([[t]], jnp.int32)], axis=1)
     np.testing.assert_array_equal(toks_cached, np.asarray(toks_slow))
+
+
+def test_generate_overflow_raises_with_lengths(engine):
+    """max_len overflow is a ValueError naming the offending lengths, not
+    a bare assert."""
+    eng, _ = engine
+    prompts = jnp.zeros((1, 500), jnp.int32)
+    with pytest.raises(ValueError,
+                       match=r"prompt_len 500 \+ n_new 100 = 600 exceeds"):
+        eng.generate(prompts, n_new=100)
